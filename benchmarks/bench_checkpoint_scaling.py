@@ -1,0 +1,71 @@
+"""Paper Fig. 4/5: weak scaling of checkpoint-creation duration.
+
+Fixed per-rank payload, growing rank count — the paper's claim is that the
+duration stays (nearly) constant because the exchange volume per rank depends
+on the redundancy, not on the rank count. Measured here on the host-tier
+engine (virtual ranks, one process); the TPU-tier bound comes from the
+dry-run roofline (see §Roofline checkpoint rows).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.checkpoint import CheckpointEngine, EngineConfig
+
+
+class _Payload:
+    """Fixed bytes-per-rank sharded entity (the paper's blocks-per-process)."""
+
+    def __init__(self, n_ranks: int, bytes_per_rank: int) -> None:
+        self.n = n_ranks
+        self.per = bytes_per_rank // 4
+        self.data = [np.random.default_rng(r).standard_normal(self.per).astype(np.float32)
+                     for r in range(n_ranks)]
+
+    def snapshot_shards(self, n):
+        return [{"blocks": self.data[r]} for r in range(n)]
+
+    def restore_shards(self, shards):
+        for origin, payload in shards.items():
+            self.data[origin] = np.asarray(payload["blocks"])
+
+
+def run(bytes_per_rank: int = 1 << 20, ranks=(2, 4, 8, 16, 32, 64), scheme: str = "pairwise",
+        parity_group: int = 0, repeats: int = 3):
+    rows = []
+    for n in ranks:
+        eng = CheckpointEngine(
+            n, EngineConfig(scheme=scheme, parity_group=parity_group, validate=True)
+        )
+        eng.register("domain", _Payload(n, bytes_per_rank))
+        eng.checkpoint({"step": 0})  # warm
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            assert eng.checkpoint({"step": 1})
+            times.append(time.perf_counter() - t0)
+        # normalize: host-tier sim does all ranks' work serially in one
+        # process; per-rank time is the scalable quantity (paper's y-axis).
+        per_rank_us = min(times) / n * 1e6
+        rows.append((n, per_rank_us, eng.stats.last_bytes_per_rank))
+    return rows
+
+
+def main() -> list[str]:
+    lines = []
+    for tag, kw in [
+        ("ckpt_weakscale_pairwise", {}),
+        ("ckpt_weakscale_parity4", {"parity_group": 4, "ranks": (4, 8, 16, 32, 64)}),
+    ]:
+        rows = run(**kw)
+        base = rows[0][1]
+        for n, us, nbytes in rows:
+            lines.append(f"{tag}_n{n},{us:.1f},scale_vs_min={us / base:.2f};bytes_per_rank={nbytes}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

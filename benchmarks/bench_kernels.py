@@ -1,0 +1,52 @@
+"""Checkpoint hot-path kernel microbenchmarks (interpret-mode wall times are
+NOT TPU times — the derived column reports the v5e roofline bound instead)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.roofline import HBM_BW
+from repro.kernels import ops
+
+
+def _time(fn, *args, repeats: int = 3) -> float:
+    fn(*args)  # compile/warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main() -> list[str]:
+    lines = []
+    n = 1 << 22  # 4 Mi words = 16 MiB
+    r = np.random.default_rng(0)
+
+    stacked = jnp.asarray(r.integers(0, 2**32, size=(4, n), dtype=np.uint32))
+    t = _time(ops.xor_reduce, stacked)
+    bound = stacked.nbytes / HBM_BW
+    lines.append(f"kernel_xor_parity_4x16MiB,{t * 1e6:.0f},v5e_bound_us={bound * 1e6:.1f}")
+
+    x = jnp.asarray(r.standard_normal(n), jnp.float32)
+    t = _time(ops.checksum, x)
+    bound = x.nbytes / HBM_BW
+    lines.append(f"kernel_checksum_16MiB,{t * 1e6:.0f},v5e_bound_us={bound * 1e6:.1f}")
+
+    t = _time(lambda v: ops.quantize_blockwise(v)[0], x)
+    bound = (x.nbytes + n + n // 256 * 4) / HBM_BW
+    lines.append(f"kernel_quantize_16MiB,{t * 1e6:.0f},v5e_bound_us={bound * 1e6:.1f}")
+
+    q, s = ops.quantize_blockwise(x)
+    t = _time(ops.dequantize_blockwise, q, s)
+    lines.append(f"kernel_dequantize_16MiB,{t * 1e6:.0f},v5e_bound_us={bound * 1e6:.1f}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

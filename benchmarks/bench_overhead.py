@@ -1,0 +1,47 @@
+"""Paper Fig. 6: checkpointing overhead at the Daly-optimal frequency as a
+function of system MTBF, using measured checkpoint durations C.
+
+Reproduces the claims: (a)/(b) markers — C at 2^13 and 2^15 ranks stays below
+4% overhead for MTBF >= 1h."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.bench_checkpoint_scaling import _Payload
+from repro.core.checkpoint import CheckpointEngine, EngineConfig
+from repro.core.interval import optimal_interval, overhead
+
+
+def measure_c(n_ranks: int = 16, bytes_per_rank: int = 1 << 20) -> float:
+    eng = CheckpointEngine(n_ranks, EngineConfig())
+    eng.register("domain", _Payload(n_ranks, bytes_per_rank))
+    eng.checkpoint({"step": 0})
+    t0 = time.perf_counter()
+    eng.checkpoint({"step": 1})
+    return time.perf_counter() - t0
+
+
+def main() -> list[str]:
+    c_meas = measure_c()
+    lines = [f"overhead_measured_C,{c_meas * 1e6:.1f},host_tier_16ranks_1MiB"]
+    # Paper's SuperMUC checkpoint durations for the two marked scenarios.
+    for tag, c in [("paper_2e13", 2.0), ("paper_2e15", 6.7), ("host_tier", c_meas)]:
+        for mtbf_h in (0.5, 1.0, 6.0, 24.0):
+            mu = mtbf_h * 3600
+            ov = overhead(c, mu)
+            t_opt = optimal_interval(mu, c)
+            lines.append(
+                f"overhead_{tag}_mtbf{mtbf_h}h,{t_opt * 1e6:.0f},"
+                f"overhead_pct={100 * ov:.2f}"
+            )
+    # Claim (ii): < 4% at one hour for the largest measured scenario.
+    assert overhead(6.7, 3600.0) < 0.04
+    lines.append("overhead_claim_lt4pct_at_1h,0,PASS")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,34 @@
+"""Emit the §Roofline table rows from the dry-run artifacts (one row per
+compiled arch x shape x mesh cell + checkpoint snapshot rows)."""
+
+from __future__ import annotations
+
+from benchmarks.roofline import checkpoint_roofline, load_cells, roofline_row
+
+
+def main() -> list[str]:
+    lines = []
+    for rec in load_cells():
+        row = roofline_row(rec)
+        if row is not None:
+            lines.append(
+                f"roofline_{row.arch}_{row.shape}_{row.mesh},"
+                f"{row.step_s * 1e6:.0f},"
+                f"dominant={row.dominant};mfu={row.mfu:.3f};"
+                f"useful={row.useful_ratio:.2f}"
+            )
+            continue
+        ck = checkpoint_roofline(rec)
+        if ck is not None:
+            lines.append(
+                f"roofline_ckpt_{ck['arch']}_{ck['mesh']},"
+                f"{ck['checkpoint_s_bound'] * 1e6:.0f},"
+                f"exchanged_GiB={ck['exchanged_GiB_global']:.2f}"
+            )
+    if not lines:
+        lines.append("roofline_table,0,no dry-run artifacts found (run repro.launch.dryrun)")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

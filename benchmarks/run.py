@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * bench_checkpoint_scaling — Fig 4/5 (weak scaling of checkpoint creation)
+  * bench_recovery           — Fig 7   (weak scaling of recovery, zero-comm)
+  * bench_overhead           — Fig 6   (Daly-interval overhead vs MTBF)
+  * bench_fault_e2e          — Fig 8   (kill-signal fault tolerance, e2e)
+  * bench_kernels            — checkpoint hot-path Pallas kernels
+  * bench_roofline_table     — §Roofline rows from the dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_checkpoint_scaling,
+        bench_fault_e2e,
+        bench_kernels,
+        bench_overhead,
+        bench_recovery,
+        bench_roofline_table,
+    )
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for mod in (
+        bench_checkpoint_scaling,
+        bench_recovery,
+        bench_overhead,
+        bench_fault_e2e,
+        bench_kernels,
+        bench_roofline_table,
+    ):
+        try:
+            for line in mod.main():
+                print(line)
+        except Exception as e:  # pragma: no cover
+            failed += 1
+            print(f"{mod.__name__},NaN,FAILED:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

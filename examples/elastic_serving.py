@@ -1,0 +1,44 @@
+"""Fault-tolerant batched serving: sessions (KV caches + generated tokens)
+are checkpointed in memory; killed hosts roll the affected sessions back a
+few tokens instead of dropping requests. Greedy decoding makes the final
+generations identical to the fault-free run.
+
+    PYTHONPATH=src python examples/elastic_serving.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.runtime.failures import FailureInjector
+from repro.runtime.server import Server, ServerConfig
+
+cfg = get_config("mamba2-780m").reduced()   # SSM: O(1) session state
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(7))
+
+prompts = np.random.default_rng(1).integers(0, cfg.vocab_size, (4, 12), dtype=np.int32)
+GEN = 40
+
+print("=== clean serving run ===")
+clean = Server(
+    model, ServerConfig(batch=4, max_seq=64, checkpoint_every_tokens=8), params=params
+)
+ref = clean.prefill_and_decode(prompts, GEN)
+
+print("=== faulty serving run: hosts die at decode ticks 11 and 26 ===")
+inj = FailureInjector(4, schedule={11: [2], 26: [0]})
+faulty = Server(
+    model, ServerConfig(batch=4, max_seq=64, checkpoint_every_tokens=8),
+    params=params, injector=inj,
+)
+out = faulty.prefill_and_decode(prompts, GEN)
+
+print(f"recoveries: {faulty.n_recoveries}")
+same = np.array_equal(ref, out)
+print(f"generations identical to fault-free run: {same}")
+for b in range(2):
+    print(f"  session {b}: ...{out[b, 12:12 + 12].tolist()}")
+assert same
+print("OK")

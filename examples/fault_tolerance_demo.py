@@ -1,0 +1,65 @@
+"""The paper's §7.5 experiment (Fig. 8) as a runnable demo: a training run
+where hosts are killed mid-flight — including one DURING checkpoint creation —
+and the run recovers every time, ending bitwise-identical to a fault-free run.
+
+    PYTHONPATH=src python examples/fault_tolerance_demo.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.checkpoint import EngineConfig
+from repro.models import build_model
+from repro.runtime.failures import FailureInjector
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+STEPS = 40
+cfg = get_config("mixtral-8x7b").reduced()  # MoE: the scheme is arch-agnostic
+model = build_model(cfg)
+
+base = dict(batch=4, seq=48, total_steps=STEPS, checkpoint_period=6, n_virtual_hosts=8)
+
+print("=== reference run (no faults) ===")
+t0 = time.perf_counter()
+ref = Trainer(model, TrainerConfig(**base))
+ref.run(STEPS)
+t_ref = time.perf_counter() - t0
+print(f"completed in {t_ref:.1f}s")
+
+# NOTE: ranks 1 and 6 are NOT pair-wise partners (1<->5, 6<->2), so both
+# blocks stay recoverable. Killing a rank AND its partner simultaneously
+# (e.g. 1&5) is genuinely unrecoverable under R=1 — the engine raises
+# DataLostError, exactly as the paper's Algorithm 4 specifies.
+print("\n=== faulty run: kill ranks 1&6 at step 14, rank 3 at step 29, and rank 0 "
+      "DURING the 4th checkpoint ===")
+injector = FailureInjector(
+    8,
+    schedule={14: [1, 6], 29: [3]},
+    checkpoint_schedule={3: [0]},
+)
+t0 = time.perf_counter()
+faulty = Trainer(
+    model,
+    TrainerConfig(**base, n_spares=8, engine=EngineConfig(validate=True)),
+    injector=injector,
+)
+faulty.run(STEPS)
+t_faulty = time.perf_counter() - t0
+
+same = all(
+    np.array_equal(a, b)
+    for a, b in zip(
+        jax.tree.leaves(jax.device_get(ref.state)),
+        jax.tree.leaves(jax.device_get(faulty.state)),
+    )
+)
+s = faulty.engine.stats
+print(f"completed in {t_faulty:.1f}s ({t_faulty / t_ref:.2f}x the clean run)")
+print(f"recoveries: {faulty.n_recoveries}  aborted checkpoints: {s.aborted}")
+print(f"restore breakdown: {s.zero_comm_restores} zero-comm, {s.adopted_restores} adopted")
+print(f"final state bitwise-identical to fault-free run: {same}")
+assert same
+print("OK")

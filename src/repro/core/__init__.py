@@ -1,0 +1,48 @@
+"""The paper's contribution: a scalable, extensible, diskless, distributed,
+resilient checkpoint/recovery scheme.
+
+  snapshot      — extensible entity registry (create/restore/swap callbacks)
+  doublebuffer  — Algorithm 2's resilient double-buffer model
+  distribution  — Algorithms 1 & 4 (pair-wise distribution + recovery plan)
+  checkpoint    — the distributed engine (host tier, per-rank stores)
+  device_tier   — the jitted collective-permute snapshot program (TPU tier)
+  interval      — Young/Daly optimal-interval theory (eqs. 1, 3, 7)
+  parity        — XOR erasure-coded redundancy (beyond-paper)
+  integrity     — handshake checksums
+  serialization — black-box payload (de)serialization
+  hoststore     — per-rank host-DRAM double-buffered stores
+  disk          — optional low-frequency persistent tier
+"""
+
+from repro.core.checkpoint import (
+    CheckpointEngine,
+    EngineConfig,
+    FaultDuringCheckpoint,
+)
+from repro.core.distribution import DataLostError, pairwise_schedule, recovery_plan
+from repro.core.doublebuffer import DoubleBuffer
+from repro.core.interval import (
+    CheckpointScheduler,
+    memory_factor,
+    optimal_interval,
+    overhead,
+    system_mtbf,
+)
+from repro.core.snapshot import SnapshotRegistry, Snapshottable
+
+__all__ = [
+    "CheckpointEngine",
+    "EngineConfig",
+    "FaultDuringCheckpoint",
+    "DataLostError",
+    "pairwise_schedule",
+    "recovery_plan",
+    "DoubleBuffer",
+    "CheckpointScheduler",
+    "memory_factor",
+    "optimal_interval",
+    "overhead",
+    "system_mtbf",
+    "SnapshotRegistry",
+    "Snapshottable",
+]

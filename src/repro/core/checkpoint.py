@@ -1,0 +1,485 @@
+"""The distributed checkpoint engine — paper §5.2 end to end.
+
+Implements the coordinated, application-level, diskless scheme over a set of
+per-rank host stores:
+
+  Algorithm 2 (``checkpoint``): create snapshots into writable buffers →
+  distribute partner copies per the registered scheme → handshake (liveness +
+  checksum validation) → pointer-swap all double buffers. A fault at any point
+  before the swap leaves every read-only buffer untouched.
+
+  Algorithm 4 (``restore``): a pure recovery plan maps every pre-fault rank to
+  the store holding its data; survivors restore their own shards with zero
+  communication, lost shards are adopted from partner copies (or reconstructed
+  from XOR parity in erasure mode).
+
+The engine is single-controller (it simulates the SPMD host set — see
+runtime.cluster); the device-tier collective program used on real pods is in
+core/device_tier.py and shares the distribution schedules.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Protocol
+
+from repro.core import distribution as dist
+from repro.core import parity as parity_mod
+from repro.core.hoststore import HostStore, StorePayload
+from repro.core.integrity import IntegrityError, np_checksum
+from repro.core.serialization import Manifest, pack_bytes, unpack_bytes
+from repro.core.snapshot import SnapshotRegistry, Snapshottable
+from repro.utils.logging import get_logger
+
+log = get_logger("core.checkpoint")
+
+
+class DistributedEntity(Protocol):
+    """An entity whose snapshot is sharded across failure-domain ranks."""
+
+    def snapshot_shards(self, n_ranks: int) -> list[Any]: ...
+
+    def restore_shards(self, shards: dict[int, Any]) -> None: ...
+
+
+class _ReplicatedAdapter:
+    """Wraps a plain Snapshottable: same payload stored on every rank (small
+    entities — timers, counters, RNG seeds)."""
+
+    def __init__(self, entity: Snapshottable) -> None:
+        self.entity = entity
+
+    def snapshot_shards(self, n_ranks: int) -> list[Any]:
+        payload = self.entity.snapshot()
+        return [payload for _ in range(n_ranks)]
+
+    def restore_shards(self, shards: dict[int, Any]) -> None:
+        # Any surviving replica works; pick the lowest rank deterministically.
+        self.entity.restore(shards[min(shards)])
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    scheme: str = "pairwise"       # pairwise | neighbor (distribution callbacks)
+    n_copies: int = 1              # R remote copies (eq. 2: MEM = S(1+2R'), R' = 1+n_copies)
+    parity_group: int = 0          # >0: erasure-coded mode with this group size
+    compress: bool = False         # int8-compress partner payloads (beyond-paper)
+    validate: bool = True          # checksum handshake
+
+
+@dataclass
+class CheckpointStats:
+    created: int = 0
+    aborted: int = 0
+    restored: int = 0
+    last_create_s: float = 0.0
+    last_restore_s: float = 0.0
+    last_bytes_exchanged: int = 0
+    last_bytes_per_rank: int = 0
+    zero_comm_restores: int = 0    # shards restored from local memory
+    adopted_restores: int = 0      # shards adopted from partner copies
+    reconstructed_restores: int = 0  # shards rebuilt from parity
+
+
+class FaultDuringCheckpoint(RuntimeError):
+    """Raised into the engine by the failure injector mid-checkpoint."""
+
+
+class CheckpointEngine:
+    def __init__(
+        self,
+        n_ranks: int,
+        cfg: EngineConfig = EngineConfig(),
+        alive_fn: Callable[[], set[int]] | None = None,
+        fault_hook: Callable[[str], None] | None = None,
+    ) -> None:
+        self.n_ranks = n_ranks
+        self.cfg = cfg
+        self.stores: dict[int, HostStore] = {r: HostStore(r) for r in range(n_ranks)}
+        self._entities: dict[str, DistributedEntity] = {}
+        # Entities whose payload is identical on every rank need no partner
+        # exchange (paper §5.2.1: "no exchange is needed for instance if the
+        # entity's data is equal on all processes") — any survivor restores them.
+        self._replicated: set[str] = set()
+        self._alive_fn = alive_fn or (lambda: {r for r, s in self.stores.items() if s.alive})
+        # fault_hook(phase) lets the failure injector strike at precise points
+        # inside the checkpoint procedure (tests for Algorithm 2's guarantee).
+        self._fault_hook = fault_hook or (lambda phase: None)
+        self._pending: Any = None  # un-finalized async snapshot
+        self.stats = CheckpointStats()
+        if cfg.parity_group:
+            assert n_ranks % cfg.parity_group == 0, (n_ranks, cfg.parity_group)
+
+    # ------------------------------------------------------------------ #
+    # registration
+    # ------------------------------------------------------------------ #
+    def register(self, name: str, entity: Snapshottable | DistributedEntity) -> None:
+        if name in self._entities:
+            raise KeyError(f"entity {name!r} already registered")
+        if hasattr(entity, "snapshot_shards"):
+            self._entities[name] = entity  # type: ignore[assignment]
+        else:
+            self._entities[name] = _ReplicatedAdapter(entity)  # type: ignore[arg-type]
+            self._replicated.add(name)
+
+    def register_registry(self, registry: SnapshotRegistry) -> None:
+        """Adopt all entities of a plain SnapshotRegistry as replicated ones."""
+        for name in registry.names():
+            create = registry._entries[name].create
+            restore = registry._entries[name].restore
+            self.register(name, _FnEntity(create, restore))  # type: ignore[arg-type]
+
+    # ------------------------------------------------------------------ #
+    # Algorithm 2: resilient checkpoint creation
+    # ------------------------------------------------------------------ #
+    def checkpoint(self, meta: dict[str, Any] | None = None) -> bool:
+        """Create + distribute + handshake + swap. Returns True on success;
+        False if a fault struck before the swap (read-only buffers intact)."""
+        if self.checkpoint_async(meta):
+            return self.finalize_async() is True
+        return False
+
+    def checkpoint_async(self, meta: dict[str, Any] | None = None) -> bool:
+        """Phase A (synchronous): capture a consistent snapshot of every
+        entity into the writable buffers. The expensive partner exchange +
+        handshake + swap are deferred to ``finalize_async`` so they overlap
+        with subsequent train steps (compute/comm overlap; on TPU this is the
+        device→host DMA followed by background ICI/DCN traffic). Algorithm 2's
+        guarantee is preserved: nothing touches the read-only buffers until
+        the deferred handshake succeeds."""
+        t0 = time.perf_counter()
+        alive0 = self._alive_fn()
+        try:
+            self._fault_hook("before_create")
+            # -- create: every entity serializes its per-rank shards ---------
+            packed: dict[str, list[tuple[Any, Manifest]]] = {}
+            packed_partner: dict[str, list[tuple[Any, Manifest]]] = {}
+            for name, ent in self._entities.items():
+                shards = ent.snapshot_shards(self.n_ranks)
+                packed[name] = [pack_bytes(s) for s in shards]
+                if hasattr(ent, "partner_payload"):
+                    # Exchange only the uniquely-owned subset (replicated
+                    # leaves exist on every rank already — paper §5.2.1).
+                    packed_partner[name] = [
+                        pack_bytes(ent.partner_payload(s, self.n_ranks))
+                        for s in shards
+                    ]
+                else:
+                    packed_partner[name] = packed[name]
+
+            for r in alive0:
+                payload = StorePayload(meta=dict(meta or {}))
+                for name, shards in packed.items():
+                    flat, man = shards[r]
+                    payload.own[name] = (flat, man)
+                    if self.cfg.parity_group and packed_partner[name] is not packed[name]:
+                        payload.own_exch[name] = packed_partner[name][r]
+                    if self.cfg.validate:
+                        payload.meta.setdefault("checksums", {})[name] = np_checksum(flat)
+                self.stores[r].buffer.write(payload)
+
+            self._fault_hook("after_create")
+        except FaultDuringCheckpoint as e:
+            log.warning("checkpoint aborted during create: %s", e)
+            for s in self.stores.values():
+                s.buffer.discard_writable()
+            self.stats.aborted += 1
+            self._pending = None
+            return False
+
+        self._pending = (packed_partner, alive0, t0)
+        return True
+
+    def finalize_async(self) -> bool | None:
+        """Phase B: distribute + handshake + swap of the pending snapshot.
+        Returns True on success, False on abort, None if nothing pending."""
+        if self._pending is None:
+            return None
+        packed_partner, alive0, t0 = self._pending
+        self._pending = None
+        bytes_exchanged = 0
+        try:
+            # -- distribute partner copies / parity stripes ------------------
+            if self.cfg.parity_group:
+                bytes_exchanged += self._distribute_parity(alive0, packed_partner)
+            else:
+                bytes_exchanged += self._distribute_copies(alive0, packed_partner)
+
+            self._fault_hook("after_distribute")
+
+            # -- handshake ----------------------------------------------------
+            alive1 = self._alive_fn()
+            if alive1 != alive0 or len(alive1) < self.n_ranks:
+                raise FaultDuringCheckpoint(
+                    f"rank set changed during checkpoint: {sorted(alive0 - alive1)} died"
+                )
+            if self.cfg.validate:
+                self._validate(alive1)
+
+        except FaultDuringCheckpoint as e:
+            # Read-only buffers were never touched; discard in-flight writes.
+            log.warning("checkpoint aborted: %s", e)
+            for s in self.stores.values():
+                s.buffer.discard_writable()
+            self.stats.aborted += 1
+            return False
+
+        # -- swap: pointer swap, no communication — cannot be interrupted ----
+        for r in alive0:
+            self.stores[r].buffer.swap()
+        self.stats.created += 1
+        self.stats.last_create_s = time.perf_counter() - t0
+        self.stats.last_bytes_exchanged = bytes_exchanged
+        self.stats.last_bytes_per_rank = bytes_exchanged // max(len(alive0), 1)
+        return True
+
+    def discard_pending(self) -> None:
+        """Drop an un-finalized async snapshot (e.g. before a restore) — it
+        counts as an aborted checkpoint (captured but never committed)."""
+        if self._pending is not None:
+            self._pending = None
+            for s in self.stores.values():
+                s.buffer.discard_writable()
+            self.stats.aborted += 1
+
+    def _backup_holders(self, origin: int) -> list[int]:
+        """Ranks that receive ``origin``'s snapshot under the active scheme."""
+        if self.cfg.n_copies == 1:
+            return [dist.get_scheme(self.cfg.scheme)(self.n_ranks, origin)[0]]
+        return [
+            (origin + s) % self.n_ranks
+            for s in dist.multi_copy_shifts(self.n_ranks, self.cfg.n_copies)
+        ]
+
+    def _distribute_copies(self, alive: set[int], packed) -> int:
+        """Full-copy distribution per Algorithm 1 (R = n_copies shifts)."""
+        total = 0
+        for r in alive:
+            for send_to in self._backup_holders(r):
+                if send_to == r:
+                    continue
+                dest = self.stores[send_to]
+                if not dest.alive:
+                    continue
+                entry = {}
+                for name, shards in packed.items():
+                    if name in self._replicated:
+                        continue  # equal on all ranks: no exchange needed
+                    flat, man = shards[r]
+                    if self.cfg.compress:
+                        flat, man = self._compress(flat, man)
+                    entry[name] = (flat, man)
+                    total += int(flat.nbytes) if hasattr(flat, "nbytes") else 0
+                dest.buffer.writable.recv[r] = entry
+        return total
+
+    def _distribute_parity(self, alive: set[int], packed) -> int:
+        """XOR-parity stripes: group g's parity striped across group g+1."""
+        g = self.cfg.parity_group
+        total = 0
+        groups = dist.parity_groups(self.n_ranks, g)
+        n_groups = len(groups)
+        # Manifests are tiny: replicate all of them with every store's meta so
+        # reconstruction can unpack any origin's bytes.
+        manifests = {
+            (r, name): shards[r][1]
+            for name, shards in packed.items()
+            for r in range(self.n_ranks)
+        }
+        for r in alive:
+            self.stores[r].buffer.writable.meta["manifests"] = manifests
+        for gi, grp in enumerate(groups):
+            # One parity buffer per entity over the group's packed shards.
+            for name, shards in packed.items():
+                if name in self._replicated:
+                    continue  # equal on all ranks: no parity needed
+                bufs = [shards[m][0] for m in grp.members]
+                parity = parity_mod.encode_parity(bufs)
+                stripes = parity_mod.split_stripes(parity, g)
+                target_grp = groups[(gi + 1) % n_groups]
+                for j, member in enumerate(target_grp.members):
+                    st = self.stores[member]
+                    if not st.alive:
+                        continue
+                    st.buffer.writable.parity.setdefault(gi, {})[(name, j)] = stripes[j]
+                    total += stripes[j].nbytes
+        return total
+
+    def _compress(self, flat, man):
+        # Compress per-leaf floats through the manifest (int8 blockwise); raw
+        # bytes are not quantizable, the tree's float leaves are.
+        from repro.optim.grad_compress import compress_tree
+
+        tree = unpack_bytes(flat, man)
+        packed = compress_tree(tree)
+        cflat, cman = pack_bytes(packed)
+        return cflat, ("compressed", cman)
+
+    def _decompress(self, flat, man):
+        from repro.optim.grad_compress import decompress_tree
+
+        _, cman = man
+        packed = unpack_bytes(flat, cman)
+        return decompress_tree(packed)
+
+    def _validate(self, alive: set[int]) -> None:
+        for r in alive:
+            payload = self.stores[r].buffer.writable
+            sums = payload.meta.get("checksums", {})
+            for name, (flat, _) in payload.own.items():
+                if name in sums and np_checksum(flat) != sums[name]:
+                    raise FaultDuringCheckpoint(f"checksum mismatch rank {r} entity {name}")
+
+    # ------------------------------------------------------------------ #
+    # Algorithm 4 + restore
+    # ------------------------------------------------------------------ #
+    @property
+    def has_valid_checkpoint(self) -> bool:
+        alive = self._alive_fn()
+        return any(self.stores[r].buffer.valid for r in alive)
+
+    def checkpoint_step(self) -> Any:
+        """Meta recorded with the last valid checkpoint (e.g. the step)."""
+        for r in sorted(self._alive_fn()):
+            buf = self.stores[r].buffer
+            if buf.valid:
+                return buf.read_only.meta
+        raise RuntimeError("no valid checkpoint")
+
+    def restore(self) -> dict[str, Any]:
+        """Recover every entity from the last valid checkpoint. Returns the
+        checkpoint meta. Survivor shards restore with zero communication."""
+        self.discard_pending()
+        t0 = time.perf_counter()
+        alive = self._alive_fn()
+        failed = set(range(self.n_ranks)) - alive
+
+        for name, ent in self._entities.items():
+            shards: dict[int, Any] = {}
+            partials: dict[int, Any] = {}
+            for origin in range(self.n_ranks):
+                kind, payload = self._recover_shard(origin, name, alive, failed)
+                if kind == "full":
+                    shards[origin] = payload
+                elif kind == "partial":
+                    partials[origin] = payload
+            if not shards:
+                raise dist.DataLostError(f"no shard of entity {name!r} recoverable")
+            if partials:
+                # Adopted copies hold only the uniquely-owned subset; merge in
+                # the replicated leaves from any survivor's full payload.
+                ref = shards[min(shards)]
+                for origin, subset in partials.items():
+                    shards[origin] = ent.merge_payload(subset, ref, self.n_ranks)
+            ent.restore_shards(shards)
+
+        meta = self.checkpoint_step()
+        self.stats.restored += 1
+        self.stats.last_restore_s = time.perf_counter() - t0
+        return meta
+
+    def _recover_shard(self, origin: int, name: str, alive: set[int], failed: set[int]):
+        """Returns ("full"|"partial", payload). Partial = partner-exchange
+        subset needing a merge with a survivor's replicated leaves."""
+        has_subset = hasattr(self._entities[name], "partner_payload")
+        # 1. Survivor: restore from its own read-only buffer — local, no comm.
+        if origin in alive and self.stores[origin].buffer.valid:
+            flat, man = self.stores[origin].buffer.read_only.own[name]
+            self.stats.zero_comm_restores += 1
+            return "full", unpack_bytes(flat, man)
+
+        # 1b. Replicated entity: any survivor's own copy is the payload.
+        if name in self._replicated:
+            for r in sorted(alive):
+                if self.stores[r].buffer.valid:
+                    flat, man = self.stores[r].buffer.read_only.own[name]
+                    self.stats.zero_comm_restores += 1
+                    return "full", unpack_bytes(flat, man)
+            raise dist.DataLostError(f"replicated entity {name!r} lost everywhere")
+
+        # 2. Full-copy modes: adopt from the partner that received the copy.
+        if not self.cfg.parity_group:
+            for h in self._backup_holders(origin):
+                st = self.stores.get(h)
+                if st is None or not st.alive or not st.buffer.valid:
+                    continue
+                entry = st.buffer.read_only.recv.get(origin, {}).get(name)
+                if entry is None:
+                    continue
+                flat, man = entry
+                self.stats.adopted_restores += 1
+                if isinstance(man, tuple) and man[0] == "compressed":
+                    payload = self._decompress(flat, man)
+                else:
+                    payload = unpack_bytes(flat, man)
+                return ("partial" if has_subset else "full"), payload
+            raise dist.DataLostError(
+                f"rank {origin} and all holders of its backup failed (entity {name!r})"
+            )
+
+        # 3. Parity mode: reconstruct from survivors + parity stripes.
+        g = self.cfg.parity_group
+        gi = dist.group_of(origin, g)
+        groups = dist.parity_groups(self.n_ranks, g)
+        grp = groups[gi]
+        other_failed = [m for m in grp.members if m in failed and m != origin]
+        if other_failed:
+            raise dist.DataLostError(
+                f"parity group {gi} lost {len(other_failed) + 1} members; XOR tolerates 1"
+            )
+        # Gather parity stripes (hosted on the next group).
+        target_grp = groups[(gi + 1) % len(groups)]
+        stripes = []
+        for j, member in enumerate(target_grp.members):
+            st = self.stores[member]
+            if not st.alive or not st.buffer.valid:
+                raise dist.DataLostError(
+                    f"parity stripe {j} of group {gi} lost (host {member} dead)"
+                )
+            stripes.append(st.buffer.read_only.parity[gi][(name, j)])
+        parity = parity_mod.join_stripes(stripes)
+        # Gather surviving members' packed exchange subsets (communication!).
+        surv_bufs = []
+        for m in grp.members:
+            if m == origin:
+                continue
+            ro = self.stores[m].buffer.read_only
+            flat, _ = ro.own_exch.get(name, ro.own[name])
+            surv_bufs.append(flat)
+        origin_man = self._parity_manifest(origin, name, gi)
+        rebuilt = parity_mod.reconstruct(surv_bufs, parity)[: origin_man.total]
+        self.stats.reconstructed_restores += 1
+        has_subset = hasattr(self._entities[name], "partner_payload")
+        return ("partial" if has_subset else "full"), unpack_bytes(rebuilt, origin_man)
+
+    def _parity_manifest(self, origin: int, name: str, gi: int) -> Manifest:
+        # Manifests are tiny; replicate them with the stripes at distribute time.
+        for st in self.stores.values():
+            if st.alive and st.buffer.valid:
+                mans = st.buffer.read_only.meta.get("manifests", {})
+                if (origin, name) in mans:
+                    return mans[(origin, name)]
+        raise dist.DataLostError(f"manifest for rank {origin} entity {name!r} lost")
+
+    # ------------------------------------------------------------------ #
+    # memory accounting (paper eq. 2)
+    # ------------------------------------------------------------------ #
+    def memory_report(self) -> dict[str, Any]:
+        per_rank = {r: s.nbytes for r, s in self.stores.items() if s.alive}
+        return {
+            "bytes_per_rank": per_rank,
+            "total_bytes": sum(per_rank.values()),
+            "n_ranks": self.n_ranks,
+        }
+
+
+class _FnEntity:
+    def __init__(self, create, restore) -> None:
+        self._create, self._restore = create, restore
+
+    def snapshot(self):
+        return self._create()
+
+    def restore(self, snap):
+        self._restore(snap)

@@ -1,0 +1,67 @@
+"""Optional low-frequency disk tier.
+
+The paper: "one could for instance additionally implement checkpointing to
+disk at a lower frequency to protect the simulation against failures that
+strike the whole system" (§5.2.1). This tier serializes the engine's
+*read-only* (last valid) buffers, so a disk write never races an in-flight
+in-memory checkpoint.
+"""
+
+from __future__ import annotations
+
+import os
+import pickle
+from typing import Any
+
+import numpy as np
+
+from repro.core.checkpoint import CheckpointEngine
+from repro.utils.logging import get_logger
+
+log = get_logger("core.disk")
+
+
+def save_to_disk(engine: CheckpointEngine, path: str) -> int:
+    """Persist every alive rank's read-only buffer. Returns bytes written."""
+    os.makedirs(path, exist_ok=True)
+    total = 0
+    index: dict[str, Any] = {"n_ranks": engine.n_ranks, "ranks": []}
+    for r, store in engine.stores.items():
+        if not store.alive or not store.buffer.valid:
+            continue
+        payload = store.buffer.read_only
+        blob = {
+            "own": {k: (np.asarray(v[0]), v[1]) for k, v in payload.own.items()},
+            "recv": payload.recv,
+            "parity": payload.parity,
+            "meta": payload.meta,
+        }
+        fname = os.path.join(path, f"rank{r:05d}.pkl")
+        with open(fname, "wb") as f:
+            pickle.dump(blob, f, protocol=pickle.HIGHEST_PROTOCOL)
+        total += os.path.getsize(fname)
+        index["ranks"].append(r)
+    with open(os.path.join(path, "index.pkl"), "wb") as f:
+        pickle.dump(index, f)
+    log.info("disk checkpoint: %d ranks, %.1f MiB -> %s", len(index["ranks"]), total / 2**20, path)
+    return total
+
+
+def load_from_disk(engine: CheckpointEngine, path: str) -> None:
+    """Rehydrate the engine's read-only buffers from a disk checkpoint
+    (whole-system restart: every in-memory snapshot was lost)."""
+    from repro.core.hoststore import StorePayload
+
+    with open(os.path.join(path, "index.pkl"), "rb") as f:
+        index = pickle.load(f)
+    assert index["n_ranks"] == engine.n_ranks, (index["n_ranks"], engine.n_ranks)
+    for r in index["ranks"]:
+        with open(os.path.join(path, f"rank{r:05d}.pkl"), "rb") as f:
+            blob = pickle.load(f)
+        payload = StorePayload(
+            own=blob["own"], recv=blob["recv"], parity=blob["parity"], meta=blob["meta"]
+        )
+        store = engine.stores[r]
+        store.revive(r)
+        store.buffer.write(payload)
+        store.buffer.swap()

@@ -1,0 +1,190 @@
+"""Snapshot distribution + recovery-assignment algorithms (paper Algorithms 1 & 4).
+
+Distribution schemes are user-registrable callbacks (the paper's
+extensibility requirement): a scheme maps a rank count to per-rank
+``(send_to, recv_from)`` schedules. "Rank" here is an index along the
+redundancy mesh axis (a TPU failure-domain coordinate) — see DESIGN.md §4.
+
+Provided schemes:
+  * ``pairwise``   — Algorithm 1 verbatim: shift by N/2 (guards node failure;
+                     on the multi-pod mesh the shift crosses the pod boundary,
+                     the paper's "backups on different islands" observation).
+  * ``neighbor``   — shift by 1 (fast intra-pod exchange; weaker domain
+                     separation; the paper's suggested topology-aware variant).
+  * ``multi_copy`` — R evenly-spaced shifts (eq. 2's general R).
+  * ``parity_group`` — XOR-parity groups (Plank-style diskless erasure coding;
+                     beyond-paper memory optimization, see core/parity.py).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+
+class DataLostError(RuntimeError):
+    """All ranks holding a given block's backup failed (paper: 'Checkpoint not
+    restorable as only one copy was made')."""
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — pair-wise snapshot distribution
+# ---------------------------------------------------------------------------
+
+def pairwise_schedule(n_ranks: int, rank: int) -> tuple[int, int]:
+    """Verbatim Algorithm 1: returns (send_to, recv_from) for ``rank``."""
+    if n_ranks <= 1:
+        return rank, rank
+    shift = n_ranks // 2
+    send_to = (rank + shift) % n_ranks
+    if shift > rank:
+        recv_from = n_ranks - (shift - rank)
+    else:
+        recv_from = rank - shift
+    return send_to, recv_from
+
+
+def shifted_schedule(n_ranks: int, rank: int, shift: int) -> tuple[int, int]:
+    send_to = (rank + shift) % n_ranks
+    recv_from = (rank - shift) % n_ranks
+    return send_to, recv_from
+
+
+# ---------------------------------------------------------------------------
+# Scheme registry
+# ---------------------------------------------------------------------------
+
+SchemeFn = Callable[[int, int], tuple[int, int]]
+_SCHEMES: dict[str, SchemeFn] = {}
+
+
+def register_scheme(name: str, fn: SchemeFn) -> None:
+    _SCHEMES[name] = fn
+
+
+def get_scheme(name: str) -> SchemeFn:
+    return _SCHEMES[name]
+
+
+register_scheme("pairwise", pairwise_schedule)
+register_scheme("neighbor", lambda n, r: shifted_schedule(n, r, 1 if n > 1 else 0))
+
+
+def multi_copy_shifts(n_ranks: int, n_copies: int) -> list[int]:
+    """R evenly spaced shifts; shift 0 excluded. R=1 reduces to pairwise."""
+    if n_ranks <= 1:
+        return []
+    if n_copies == 1:
+        return [n_ranks // 2]
+    shifts = []
+    for j in range(1, n_copies + 1):
+        s = max(1, round(j * n_ranks / (n_copies + 1))) % n_ranks
+        if s == 0:
+            s = 1
+        if s not in shifts:
+            shifts.append(s)
+    return shifts
+
+
+def perm_pairs(n_ranks: int, scheme: str = "pairwise", shift: int | None = None) -> list[tuple[int, int]]:
+    """(src, dst) pairs for ``lax.ppermute`` along the redundancy axis."""
+    if n_ranks <= 1:
+        return []
+    if shift is not None:
+        return [(i, (i + shift) % n_ranks) for i in range(n_ranks)]
+    fn = get_scheme(scheme)
+    return [(i, fn(n_ranks, i)[0]) for i in range(n_ranks)]
+
+
+def inverse_perm(pairs: list[tuple[int, int]]) -> list[tuple[int, int]]:
+    return [(dst, src) for src, dst in pairs]
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 4 — pair-wise snapshot recovery distribution
+# ---------------------------------------------------------------------------
+
+def pairwise_recovery(
+    rank_prev: int,
+    n_prev: int,
+    reassignment: Callable[[int], int],
+    survived: Callable[[int], bool],
+) -> int:
+    """Verbatim Algorithm 4.
+
+    Given a pre-fault rank ``rank_prev`` (the origin of a backed-up block),
+    returns the *new* rank that must restore that block. Deterministic and
+    identical on every process — each survivor plugs in the origins of its
+    backed-up blocks and compares the result to its own new rank.
+    """
+    if not survived(rank_prev):
+        shift = n_prev // 2
+        rank_backup_prev = (rank_prev + shift) % n_prev
+        if not survived(rank_backup_prev):
+            raise DataLostError(
+                f"rank {rank_prev} and its backup {rank_backup_prev} both failed"
+            )
+        return reassignment(rank_backup_prev)
+    return reassignment(rank_prev)
+
+
+def shrink_reassignment(n_prev: int, failed: set[int]) -> dict[int, int]:
+    """The rank reassignment performed by MPI_Comm_shrink (survivors densely
+    renumbered in old-rank order) — the ULFM behaviour our elastic runtime
+    mirrors when it rebuilds the mesh over survivors."""
+    new = {}
+    nxt = 0
+    for r in range(n_prev):
+        if r not in failed:
+            new[r] = nxt
+            nxt += 1
+    return new
+
+
+def recovery_plan(n_prev: int, failed: set[int], scheme: str = "pairwise") -> dict[int, int]:
+    """origin_prev_rank -> new_rank responsible for restoring its blocks.
+
+    Applies Algorithm 4 for every pre-fault rank; raises DataLostError if any
+    block is unrecoverable under the given scheme.
+    """
+    reassign_map = shrink_reassignment(n_prev, failed)
+    survived = lambda r: r not in failed
+    reassign = lambda r: reassign_map[r]
+    plan = {}
+    for origin in range(n_prev):
+        if scheme == "pairwise":
+            plan[origin] = pairwise_recovery(origin, n_prev, reassign, survived)
+        else:
+            fn = get_scheme(scheme)
+            if survived(origin):
+                plan[origin] = reassign(origin)
+            else:
+                backup = fn(n_prev, origin)[0]
+                if not survived(backup):
+                    raise DataLostError(f"rank {origin} and backup {backup} both failed")
+                plan[origin] = reassign(backup)
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Parity groups (beyond-paper erasure-coded redundancy)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParityGroup:
+    members: tuple[int, ...]
+
+    def others(self, rank: int) -> tuple[int, ...]:
+        return tuple(m for m in self.members if m != rank)
+
+
+def parity_groups(n_ranks: int, group_size: int) -> list[ParityGroup]:
+    assert n_ranks % group_size == 0, (n_ranks, group_size)
+    return [
+        ParityGroup(tuple(range(g, g + group_size)))
+        for g in range(0, n_ranks, group_size)
+    ]
+
+
+def group_of(rank: int, group_size: int) -> int:
+    return rank // group_size

@@ -1,0 +1,73 @@
+"""Per-rank host-DRAM snapshot store (diskless, double-buffered).
+
+One ``HostStore`` models the main memory of one failure-domain rank (a TPU
+host / data-axis coordinate). Its double buffer holds:
+
+  * ``own``    — this rank's serialized snapshot shards, per entity
+  * ``recv``   — partner shards received under the distribution scheme
+  * ``parity`` — parity stripes hosted for other groups (parity mode)
+  * ``meta``   — step / checksums / provenance
+
+Killing the rank wipes the store — in-memory checkpoints die with their host,
+which is exactly the failure model the paper's redundancy exists to survive.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+from repro.core.doublebuffer import DoubleBuffer
+
+
+@dataclass
+class StorePayload:
+    own: dict[str, Any] = field(default_factory=dict)       # entity -> (flat, manifest)
+    own_exch: dict[str, Any] = field(default_factory=dict)  # entity -> exchange subset (parity mode)
+    recv: dict[int, dict[str, Any]] = field(default_factory=dict)   # origin -> entity -> payload
+    parity: dict[int, Any] = field(default_factory=dict)    # origin group -> stripe
+    meta: dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def nbytes(self) -> int:
+        total = 0
+
+        def acc(obj: Any) -> int:
+            if hasattr(obj, "nbytes"):
+                return int(obj.nbytes)
+            if isinstance(obj, dict):
+                return sum(acc(v) for v in obj.values())
+            if isinstance(obj, (list, tuple)):
+                return sum(acc(v) for v in obj)
+            return 0
+
+        for part in (self.own, self.own_exch, self.recv, self.parity):
+            total += acc(part)
+        return total
+
+
+class HostStore:
+    def __init__(self, rank: int) -> None:
+        self.rank = rank
+        self.buffer = DoubleBuffer(f"host{rank}")
+        self.alive = True
+
+    def wipe(self) -> None:
+        """Host failure: all in-memory snapshot data on this rank is gone."""
+        self.buffer = DoubleBuffer(f"host{self.rank}")
+        self.alive = False
+
+    def revive(self, rank: int | None = None) -> None:
+        """Spare substitution / elastic regrow: fresh store joins."""
+        if rank is not None:
+            self.rank = rank
+        self.buffer = DoubleBuffer(f"host{self.rank}")
+        self.alive = True
+
+    @property
+    def nbytes(self) -> int:
+        total = 0
+        for payload in (self.buffer.read_only, self.buffer.writable):
+            if payload is not None:
+                total += payload.nbytes
+        return total

@@ -1,0 +1,37 @@
+"""Snapshot integrity validation for the handshake (Algorithm 2).
+
+Device tier: Pallas checksum kernel via kernels.ops.tree_checksum.
+Host tier: identical math in numpy over serialized byte buffers, so host and
+device checksums of the same bytes agree (cross-tier validation).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def np_checksum(buf: np.ndarray) -> tuple[int, int]:
+    """Fletcher-style dual checksum over a byte buffer (matches kernels.ref)."""
+    raw = np.ascontiguousarray(buf).view(np.uint8).reshape(-1)
+    pad = (-raw.nbytes) % 4
+    if pad:
+        raw = np.concatenate([raw, np.zeros(pad, np.uint8)])
+    u = raw.view(np.uint32)
+    idx = np.arange(1, u.shape[0] + 1, dtype=np.uint32)
+    with np.errstate(over="ignore"):
+        s1 = int(np.sum(u, dtype=np.uint32))
+        s2 = int(np.sum(u * idx, dtype=np.uint32))
+    return s1, s2
+
+
+def np_tree_checksum(leaves: list[np.ndarray]) -> tuple[int, int]:
+    acc1, acc2 = 0, 0
+    for i, leaf in enumerate(leaves):
+        c1, c2 = np_checksum(leaf)
+        acc1 = (acc1 * 1000003 + c1 * (i + 1)) & 0xFFFFFFFF
+        acc2 = (acc2 * 1000003 + c2 * (i + 1)) & 0xFFFFFFFF
+    return acc1, acc2
+
+
+class IntegrityError(RuntimeError):
+    """A snapshot failed checksum validation during the handshake."""

@@ -1,0 +1,90 @@
+"""Checkpoint-interval theory (paper §5.2.5, §7.3; eqs. 1, 3, 7; eq. 2).
+
+  * eq. 1: system MTBF          mu = mu_ind / N
+  * eq. 3: Young/Daly optimum   T_FO = sqrt(2 mu C)
+  * eq. 7: overhead at T_FO     C / sqrt(2 mu C)
+  * eq. 2: memory factor        MEM = S (1 + 2 R)
+
+plus an adaptive scheduler that re-estimates C from measured checkpoint
+durations and converts T_FO into a step period for the training loop.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+
+def system_mtbf(mtbf_individual_s: float, n_nodes: int) -> float:
+    """Eq. 1: the failure rate is proportional to the node count."""
+    assert n_nodes >= 1
+    return mtbf_individual_s / n_nodes
+
+
+def optimal_interval(mtbf_s: float, checkpoint_s: float) -> float:
+    """Eq. 3 (first-order Young/Daly): T_FO = sqrt(2 mu C).
+
+    Only valid when mu >> C; callers should check ``overhead`` stays small.
+    """
+    assert mtbf_s > 0 and checkpoint_s >= 0
+    return math.sqrt(2.0 * mtbf_s * checkpoint_s)
+
+
+def overhead(checkpoint_s: float, mtbf_s: float) -> float:
+    """Eq. 7: fraction of runtime spent checkpointing at the optimal interval."""
+    if checkpoint_s == 0:
+        return 0.0
+    return checkpoint_s / optimal_interval(mtbf_s, checkpoint_s)
+
+
+def memory_factor(n_copies: int) -> float:
+    """Eq. 2 factor: 1 + 2R (double-buffered R-copy in-memory snapshots).
+
+    R counts copies held per process: pairwise R=2 (own + partner) -> 5x."""
+    return 1.0 + 2.0 * n_copies
+
+
+def parity_memory_factor(group_size: int) -> float:
+    """Erasure-coded variant: own copy + 1/g parity slice, double-buffered."""
+    return 1.0 + 2.0 * (1.0 + 1.0 / group_size)
+
+
+@dataclass
+class CheckpointScheduler:
+    """Converts the Daly interval into a step period, adaptively.
+
+    The paper notes the estimate "may only serve as an orientation" because mu
+    and C drift; we re-estimate C as a running mean of measured checkpoint
+    durations and recompute the period after every checkpoint.
+    """
+
+    mtbf_s: float
+    step_time_s: float            # estimated (re-measured by the trainer)
+    checkpoint_s: float = 1.0     # prior for C before first measurement
+    min_period: int = 1
+    max_period: int = 100_000
+    _c_samples: list = field(default_factory=list)
+
+    def record_checkpoint_duration(self, seconds: float) -> None:
+        self._c_samples.append(seconds)
+        k = min(len(self._c_samples), 16)
+        self.checkpoint_s = sum(self._c_samples[-k:]) / k
+
+    def record_step_time(self, seconds: float) -> None:
+        self.step_time_s = 0.9 * self.step_time_s + 0.1 * seconds
+
+    @property
+    def interval_s(self) -> float:
+        return optimal_interval(self.mtbf_s, max(self.checkpoint_s, 1e-9))
+
+    @property
+    def period_steps(self) -> int:
+        steps = int(round(self.interval_s / max(self.step_time_s, 1e-9)))
+        return max(self.min_period, min(steps, self.max_period))
+
+    def due(self, step: int, last_checkpoint_step: int) -> bool:
+        return (step - last_checkpoint_step) >= self.period_steps
+
+    @property
+    def expected_overhead(self) -> float:
+        return overhead(self.checkpoint_s, self.mtbf_s)

@@ -1,0 +1,99 @@
+"""Host-tier snapshot serialization.
+
+The paper treats block data as black boxes that "solely need to implement
+respective serialization and deserialization routines". Here a snapshot
+payload is a pytree; serialization produces named numpy leaves (the copies
+whose creation/deserialization the paper's Figs 4–7 time), and optionally a
+single flat byte buffer + manifest (the representation parity/compression
+operate on).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.utils.pytree import flatten_with_names
+
+
+def dtype_from_name(name: str) -> np.dtype:
+    """np.dtype by name, including ml_dtypes extensions (bfloat16, fp8...)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+@dataclass
+class SerializedSnapshot:
+    treedef: Any
+    names: list[str]
+    leaves: list[np.ndarray]
+
+    @property
+    def nbytes(self) -> int:
+        return sum(l.nbytes for l in self.leaves)
+
+
+def serialize_tree(tree: Any) -> SerializedSnapshot:
+    """Copy a pytree of (jax or numpy) arrays into host numpy buffers."""
+    named = flatten_with_names(tree)
+    _, treedef = jax.tree.flatten(tree)
+    names = [n for n, _ in named]
+    leaves = [np.array(l, copy=True) for _, l in named]  # host copies
+    return SerializedSnapshot(treedef, names, leaves)
+
+
+def deserialize_tree(snap: SerializedSnapshot) -> Any:
+    """Rebuild the pytree (numpy leaves; caller device_puts as needed)."""
+    return jax.tree.unflatten(snap.treedef, [np.array(l, copy=True) for l in snap.leaves])
+
+
+# ---------------------------------------------------------------------------
+# Flat byte packing (for parity / compression / wire transfer)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Manifest:
+    names: list[str]
+    shapes: list[tuple[int, ...]]
+    dtypes: list[str]
+    offsets: list[int]  # byte offsets into the flat buffer
+    total: int
+    treedef: Any
+
+
+def pack_bytes(tree: Any) -> tuple[np.ndarray, Manifest]:
+    named = flatten_with_names(tree)
+    _, treedef = jax.tree.flatten(tree)
+    names, shapes, dtypes, offsets = [], [], [], []
+    bufs = []
+    off = 0
+    for n, leaf in named:
+        a = np.asarray(leaf)
+        shape = tuple(a.shape)  # before ascontiguousarray (it promotes 0-d to 1-d)
+        a = np.ascontiguousarray(a)
+        names.append(n)
+        shapes.append(shape)
+        dtypes.append(a.dtype.name)
+        offsets.append(off)
+        raw = a.view(np.uint8).reshape(-1)
+        bufs.append(raw)
+        off += raw.nbytes
+    flat = np.concatenate(bufs) if bufs else np.zeros(0, np.uint8)
+    return flat, Manifest(names, shapes, dtypes, offsets, off, treedef)
+
+
+def unpack_bytes(flat: np.ndarray, manifest: Manifest) -> Any:
+    leaves = []
+    for shape, dtype, off in zip(manifest.shapes, manifest.dtypes, manifest.offsets):
+        dt = dtype_from_name(dtype)
+        n = int(np.prod(shape, dtype=np.int64)) * dt.itemsize if shape else dt.itemsize
+        raw = flat[off : off + n]
+        leaves.append(raw.view(dt).reshape(shape).copy())
+    return jax.tree.unflatten(manifest.treedef, leaves)

@@ -1,0 +1,5 @@
+"""Data pipeline substrate."""
+
+from repro.data.synthetic import SyntheticDataPipeline, make_batch
+
+__all__ = ["SyntheticDataPipeline", "make_batch"]

@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: Fletcher-style dual checksum for snapshot validation.
+
+The paper's handshake (Algorithm 2) must verify that every process created a
+consistent snapshot before the double-buffer swap; the checksum is what the
+handshake exchanges/compares. Linearity of both sums means per-tile partials
+(computed in VMEM) reduce exactly outside the kernel.
+
+Layout: buffer viewed as uint32 (rows, LANE_COLS); each grid step emits one
+(1, 2) partial: [sum(x), sum((global_index+1) * x)] mod 2^32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SUBLANES = 8
+LANE_COLS = 128 * 8  # 1024 columns per tile -> 32 KiB tiles
+
+
+def _checksum_kernel(x_ref, o_ref, *, cols: int):
+    i = pl.program_id(0)
+    x = x_ref[...]  # (SUBLANES, LANE_COLS) uint32
+    rows_idx = jax.lax.broadcasted_iota(jnp.uint32, x.shape, 0)
+    cols_idx = jax.lax.broadcasted_iota(jnp.uint32, x.shape, 1)
+    base = (i * SUBLANES).astype(jnp.uint32) * jnp.uint32(cols)
+    gidx = base + rows_idx * jnp.uint32(cols) + cols_idx + jnp.uint32(1)
+    s1 = jnp.sum(x, dtype=jnp.uint32)
+    s2 = jnp.sum(x * gidx, dtype=jnp.uint32)
+    o_ref[0, 0] = s1
+    o_ref[0, 1] = s2
+
+
+def checksum_pallas(x2d: jax.Array, interpret: bool = True) -> jax.Array:
+    """x2d: (rows, LANE_COLS) uint32, rows % SUBLANES == 0 -> (2,) uint32."""
+    rows, cols = x2d.shape
+    assert rows % SUBLANES == 0 and cols == LANE_COLS, (rows, cols)
+    grid = (rows // SUBLANES,)
+    partials = pl.pallas_call(
+        functools.partial(_checksum_kernel, cols=cols),
+        grid=grid,
+        in_specs=[pl.BlockSpec((SUBLANES, LANE_COLS), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid[0], 2), jnp.uint32),
+        interpret=interpret,
+    )(x2d)
+    return jnp.sum(partials, axis=0, dtype=jnp.uint32)

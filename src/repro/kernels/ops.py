@@ -1,0 +1,151 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles padding/reshaping to kernel-native tiles, dtype views, and the
+Pallas-vs-reference dispatch: on TPU the compiled kernels run natively; on CPU
+(this container) they run in interpret mode so the kernel *bodies* are what is
+validated. ``REPRO_KERNELS=ref`` forces the jnp oracles (used by A/B tests).
+"""
+
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import checksum as _checksum_k
+from repro.kernels import quantize as _quantize_k
+from repro.kernels import ref
+from repro.kernels import xor_parity as _xor_k
+
+
+def _use_ref() -> bool:
+    return os.environ.get("REPRO_KERNELS", "pallas") == "ref"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# uint32 viewing helpers
+# ---------------------------------------------------------------------------
+
+def as_u32(x: jax.Array) -> jax.Array:
+    """Bitcast any array to a flat uint32 vector (pad odd tails with zeros)."""
+    flat = x.reshape(-1)
+    itemsize = np.dtype(flat.dtype).itemsize
+    if itemsize == 4:
+        return jax.lax.bitcast_convert_type(flat, jnp.uint32)
+    u8 = jax.lax.bitcast_convert_type(flat, jnp.uint8).reshape(-1)
+    pad = (-u8.shape[0]) % 4
+    if pad:
+        u8 = jnp.pad(u8, (0, pad))
+    return jax.lax.bitcast_convert_type(u8.reshape(-1, 4), jnp.uint32).reshape(-1)
+
+
+def _pad_to(x: jax.Array, multiple: int) -> jax.Array:
+    pad = (-x.shape[0]) % multiple
+    return jnp.pad(x, (0, pad)) if pad else x
+
+
+# ---------------------------------------------------------------------------
+# XOR parity
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("interpret",))
+def xor_reduce(stacked: jax.Array, interpret: bool | None = None) -> jax.Array:
+    """XOR over axis 0 of (k, n) uint32. Returns (n,) uint32."""
+    assert stacked.ndim == 2 and stacked.dtype == jnp.uint32
+    if _use_ref():
+        return ref.xor_reduce(stacked)
+    k, n = stacked.shape
+    tile = _xor_k.SUBLANES * _xor_k.BLOCK_COLS
+    npad = (-n) % tile
+    padded = jnp.pad(stacked, ((0, 0), (0, npad))) if npad else stacked
+    rows = padded.shape[1] // _xor_k.BLOCK_COLS
+    x3 = padded.reshape(k, rows, _xor_k.BLOCK_COLS)
+    out = _xor_k.xor_reduce_pallas(
+        x3, interpret=_interpret() if interpret is None else interpret
+    )
+    return out.reshape(-1)[:n]
+
+
+def xor_encode_arrays(arrays: list[jax.Array]) -> jax.Array:
+    """Parity of equally-sized arrays of any dtype -> (n,) uint32 parity."""
+    views = [as_u32(a) for a in arrays]
+    n = max(v.shape[0] for v in views)
+    views = [_pad_to(v, n) if v.shape[0] < n else v for v in views]
+    return xor_reduce(jnp.stack(views))
+
+
+# ---------------------------------------------------------------------------
+# Checksum
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("interpret",))
+def checksum(x: jax.Array, interpret: bool | None = None) -> jax.Array:
+    """Fletcher-style dual checksum of any array -> (2,) uint32."""
+    u = as_u32(x)
+    if _use_ref():
+        return ref.checksum(u)
+    tile = _checksum_k.SUBLANES * _checksum_k.LANE_COLS
+    u = _pad_to(u, tile)  # zero padding leaves both sums unchanged... s2 shifts!
+    # NOTE: zero pad contributes 0 to both sums (0 * idx == 0), so padding is
+    # checksum-transparent even for the weighted sum.
+    x2 = u.reshape(-1, _checksum_k.LANE_COLS)
+    return _checksum_k.checksum_pallas(
+        x2, interpret=_interpret() if interpret is None else interpret
+    )
+
+
+def tree_checksum(tree) -> jax.Array:
+    """Combined (2,) uint32 checksum over all leaves (order-dependent mix)."""
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros((2,), jnp.uint32)
+    acc = jnp.zeros((2,), jnp.uint32)
+    for i, leaf in enumerate(leaves):
+        c = checksum(leaf)
+        # Order-sensitive mix (multiplier keeps leaf order significant).
+        acc = acc * jnp.uint32(1000003) + c * jnp.uint32(i + 1)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Quantization
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("block", "interpret"))
+def quantize_blockwise(
+    x: jax.Array, block: int = 256, interpret: bool | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """x: (n,) float -> (q (n_pad,) int8, scales (n_pad/block,) f32).
+
+    n is padded up to a ROWS_PER_TILE*block multiple; dequantize_blockwise
+    returns the padded length — callers slice back to the original size.
+    """
+    assert x.ndim == 1
+    assert block == _quantize_k.QBLOCK, "kernel is specialized to QBLOCK"
+    xpad = _pad_to(x, block * _quantize_k.ROWS_PER_TILE)
+    xb = xpad.reshape(-1, block)
+    if _use_ref():
+        return ref.quantize_blockwise(xpad, block)
+    q, s = _quantize_k.quantize_pallas(
+        xb, interpret=_interpret() if interpret is None else interpret
+    )
+    return q.reshape(-1), s
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def dequantize_blockwise(q: jax.Array, scale: jax.Array, interpret: bool | None = None) -> jax.Array:
+    block = q.shape[0] // scale.shape[0]
+    if _use_ref():
+        return ref.dequantize_blockwise(q, scale)
+    assert block == _quantize_k.QBLOCK
+    out = _quantize_k.dequantize_pallas(
+        q.reshape(-1, block), scale, interpret=_interpret() if interpret is None else interpret
+    )
+    return out.reshape(-1)

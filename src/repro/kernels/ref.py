@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each function is the mathematical definition with no tiling; tests sweep
+shapes/dtypes and assert the Pallas kernels (interpret mode on CPU) match.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def xor_reduce(stacked: jax.Array) -> jax.Array:
+    """XOR over axis 0. stacked: (k, n) uint32 -> (n,) uint32."""
+    assert stacked.dtype == jnp.uint32
+    return jax.lax.reduce(stacked, jnp.uint32(0), jax.lax.bitwise_xor, (0,))
+
+
+def checksum(x: jax.Array) -> jax.Array:
+    """Fletcher-style dual checksum of a uint32 buffer -> (2,) uint32.
+
+    s1 = sum(x) mod 2^32;  s2 = sum((i+1) * x_i) mod 2^32.
+    Both are linear in the data so blockwise partials sum exactly.
+    """
+    assert x.dtype == jnp.uint32 and x.ndim == 1
+    idx = jnp.arange(1, x.shape[0] + 1, dtype=jnp.uint32)
+    s1 = jnp.sum(x, dtype=jnp.uint32)
+    s2 = jnp.sum(x * idx, dtype=jnp.uint32)
+    return jnp.stack([s1, s2])
+
+
+def quantize_blockwise(x: jax.Array, block: int = 256) -> tuple[jax.Array, jax.Array]:
+    """Symmetric int8 quantization with per-block max-abs scales.
+
+    x: (n,) float, n % block == 0 -> (q (n,) int8, scales (n/block,) f32).
+    """
+    assert x.ndim == 1 and x.shape[0] % block == 0
+    xb = x.reshape(-1, block).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xb), axis=1) / 127.0
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(xb / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale
+
+
+def dequantize_blockwise(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """(q (n,) int8, scales (n/block,)) -> (n,) f32."""
+    block = q.shape[0] // scale.shape[0]
+    xb = q.reshape(-1, block).astype(jnp.float32) * scale[:, None]
+    return xb.reshape(-1)

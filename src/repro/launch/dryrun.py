@@ -1,0 +1,289 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) cell
+on the production meshes (16x16 single-pod, 2x16x16 multi-pod) with
+ShapeDtypeStruct stand-ins — no allocation. Proves the distribution config is
+coherent: sharding mismatches, compile-time OOM and unsupported collectives
+all surface here.
+
+Per cell it records: memory_analysis (bytes/device), cost_analysis (FLOPs,
+bytes), and the collective schedule parsed from the optimized HLO — the
+inputs to EXPERIMENTS.md §Dry-run / §Roofline. The checkpoint engine's
+snapshot_step is lowered separately per arch (the paper's Fig-4/5 quantity).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+
+import argparse
+import gzip
+import json
+import time
+import traceback
+from typing import Any
+
+import numpy as np
+
+
+def _mesh(kind: str):
+    from repro.launch.mesh import make_production_mesh
+
+    return make_production_mesh(multi_pod=(kind == "multi"))
+
+
+def _memory_analysis_dict(compiled) -> dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover - backend specific
+        return {"error": str(e)}
+    if ma is None:
+        return {}
+    out = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if out:
+        out["total_bytes_per_device"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0)
+        )
+    return out
+
+
+def _cost_analysis_dict(compiled) -> dict[str, Any]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in ca.items() if isinstance(v, (int, float))}
+
+
+def run_cell(
+    arch: str, shape_name: str, mesh_kind: str, fast: bool = False,
+    hlo_out: str | None = None,
+) -> dict[str, Any]:
+    import jax
+
+    from repro.configs import SHAPES, applicability, get_config
+    from repro.launch.steps import build_step
+    from repro.utils.hlo import analyze_hlo_collectives, estimate_hlo_costs
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = applicability(cfg, shape)
+    rec: dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "kind": shape.kind,
+    }
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+
+    mesh = _mesh(mesh_kind)
+    rec["mesh_shape"] = dict(mesh.shape)
+    t0 = time.time()
+    bundle = build_step(cfg, shape_name, mesh)
+    rec["step"] = bundle.name
+    jitted = jax.jit(
+        bundle.fn,
+        in_shardings=bundle.in_shardings,
+        out_shardings=bundle.out_shardings,
+        donate_argnums=bundle.donate_argnums,
+    )
+    lowered = jitted.lower(*bundle.args_sds)
+    rec["lower_s"] = round(time.time() - t0, 2)
+    if fast:
+        rec["status"] = "lowered"
+        return rec
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 2)
+
+    mem = _memory_analysis_dict(compiled)
+    cost = _cost_analysis_dict(compiled)
+    hlo = compiled.as_text()
+    trip = cfg.num_periods if cfg.scan_layers else 1
+    coll = analyze_hlo_collectives(hlo, while_trip=trip)
+    hw = estimate_hlo_costs(hlo, while_trip=trip)
+    rec.update(
+        status="compiled",
+        memory=mem,
+        cost=cost,
+        while_trip=trip,
+        collectives={
+            "bytes_by_kind": coll.bytes_by_kind,
+            "static_bytes_by_kind": coll.static_bytes_by_kind,
+            "count_by_kind": coll.count_by_kind,
+            "total_bytes": coll.total_bytes,
+            "total_static_bytes": coll.total_static_bytes,
+            "n_fusions": coll.n_fusions,
+            "n_while": coll.n_while,
+            "duplicate_ops": coll.duplicate_ops,
+        },
+        hlo_estimate={
+            "flops_weighted": hw.flops_weighted,
+            "flops_static": hw.flops_static,
+            "traffic_bytes_weighted": hw.traffic_bytes_weighted,
+            "traffic_bytes_static": hw.traffic_bytes_static,
+            "n_dots": hw.n_dots,
+        },
+        n_params=bundle.model.n_params,
+        n_active_params=bundle.model.n_active_params,
+        tokens=shape.tokens if shape.kind != "decode" else shape.global_batch,
+        hlo_lines=len(hlo.splitlines()),
+    )
+    if hlo_out:
+        with gzip.open(hlo_out, "wt") as f:
+            f.write(hlo)
+    print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: compiled "
+          f"(lower {rec['lower_s']}s, compile {rec['compile_s']}s)")
+    print(f"  memory_analysis: {mem}")
+    print(f"  cost_analysis: flops={cost.get('flops')} bytes={cost.get('bytes accessed')}")
+    print(f"  collectives: {coll.summary()}")
+    return rec
+
+
+def run_snapshot_cell(
+    arch: str, mesh_kind: str, compress: bool = False, hlo_out: str | None = None,
+) -> dict[str, Any]:
+    """Lower + compile the checkpoint engine's device-tier snapshot program
+    for this arch's train state (the paper's checkpoint-creation hot path)."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.device_tier import build_snapshot_program
+    from repro.launch.steps import build_step
+    from repro.utils.hlo import analyze_hlo_collectives
+
+    cfg = get_config(arch)
+    mesh = _mesh(mesh_kind)
+    bundle = build_step(cfg, "train_4k", mesh)
+    state_sds, _ = bundle.args_sds
+    state_sh, _ = bundle.in_shardings
+    pspecs = jax.tree.map(lambda s: s.spec, state_sh)
+
+    prog = build_snapshot_program(
+        mesh, state_sds, pspecs, redundancy_axis="data", compress=compress,
+    )
+    rec: dict[str, Any] = {
+        "arch": arch,
+        "shape": "snapshot_step" + ("_compressed" if compress else ""),
+        "mesh": mesh_kind,
+        "kind": "snapshot",
+        "exchanged_bytes_global": prog.exchanged_bytes,
+        "own_bytes_global": prog.own_bytes,
+    }
+    t0 = time.time()
+    jitted = jax.jit(prog.snapshot_fn, in_shardings=(prog.in_shardings,))
+    lowered = jitted.lower(state_sds)
+    compiled = lowered.compile()
+    rec["lower_compile_s"] = round(time.time() - t0, 2)
+    hlo = compiled.as_text()
+    coll = analyze_hlo_collectives(hlo)
+    rec.update(
+        status="compiled",
+        memory=_memory_analysis_dict(compiled),
+        cost=_cost_analysis_dict(compiled),
+        collectives={
+            "bytes_by_kind": coll.bytes_by_kind,
+            "count_by_kind": coll.count_by_kind,
+            "total_bytes": coll.total_bytes,
+        },
+    )
+    if hlo_out:
+        with gzip.open(hlo_out, "wt") as f:
+            f.write(hlo)
+    print(f"[dryrun] {arch} snapshot_step x {mesh_kind}: compiled in {rec['lower_compile_s']}s; "
+          f"exchanged {prog.exchanged_bytes/2**30:.2f} GiB global; {coll.summary()}")
+    return rec
+
+
+def main() -> None:
+    from repro.configs import SHAPES, list_archs
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--snapshot", action="store_true", help="lower the checkpoint snapshot_step too")
+    ap.add_argument("--snapshot-compress", action="store_true")
+    ap.add_argument("--fast", action="store_true", help="lower only (no compile)")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip cells whose JSON already exists (resume)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.all or args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.all or args.shape is None else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                tag = f"{arch}__{shape}__{mesh_kind}".replace("/", "_")
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    continue
+                try:
+                    rec = run_cell(
+                        arch, shape, mesh_kind, fast=args.fast,
+                        hlo_out=None if args.fast else os.path.join(args.out, tag + ".hlo.gz"),
+                    )
+                except Exception as e:
+                    failures += 1
+                    rec = {
+                        "arch": arch, "shape": shape, "mesh": mesh_kind,
+                        "status": "failed", "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-4000:],
+                    }
+                    print(f"[dryrun] FAILED {tag}: {rec['error']}")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=2, default=str)
+        if args.snapshot:
+            for mesh_kind in meshes:
+                tag = f"{arch}__snapshot__{mesh_kind}"
+                if args.snapshot_compress:
+                    tag += "_comp"
+                if args.skip_existing and os.path.exists(os.path.join(args.out, tag + ".json")):
+                    continue
+                try:
+                    rec = run_snapshot_cell(
+                        arch, mesh_kind, compress=args.snapshot_compress,
+                        hlo_out=os.path.join(args.out, tag + ".hlo.gz"),
+                    )
+                except Exception as e:
+                    failures += 1
+                    rec = {"arch": arch, "shape": "snapshot", "mesh": mesh_kind,
+                           "status": "failed", "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    print(f"[dryrun] FAILED {tag}: {rec['error']}")
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=2, default=str)
+    print(f"dry-run complete; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Re-derive collective/FLOP/traffic metrics from the dry-run's saved HLO
+artifacts without recompiling (the parser evolves faster than 80 compiles).
+
+    PYTHONPATH=src python -m repro.launch.reanalyze --dir experiments/dryrun
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from repro.configs import CONFIGS
+from repro.utils.hlo import analyze_hlo_collectives, estimate_hlo_costs
+
+
+def reanalyze_file(json_path: str) -> bool:
+    with open(json_path) as f:
+        rec = json.load(f)
+    if rec.get("status") != "compiled":
+        return False
+    hlo_path = json_path.replace(".json", ".hlo.gz")
+    if not os.path.exists(hlo_path):
+        return False
+    with gzip.open(hlo_path, "rt") as f:
+        hlo = f.read()
+    cfg = CONFIGS.get(rec["arch"])
+    trip = cfg.num_periods if (cfg and cfg.scan_layers) else rec.get("while_trip", 1)
+    coll = analyze_hlo_collectives(hlo, while_trip=trip)
+    hw = estimate_hlo_costs(hlo, while_trip=trip)
+    rec["while_trip"] = trip
+    rec["collectives"] = {
+        "bytes_by_kind": coll.bytes_by_kind,
+        "static_bytes_by_kind": coll.static_bytes_by_kind,
+        "count_by_kind": coll.count_by_kind,
+        "total_bytes": coll.total_bytes,
+        "total_static_bytes": coll.total_static_bytes,
+        "n_fusions": coll.n_fusions,
+        "n_while": coll.n_while,
+        "duplicate_ops": coll.duplicate_ops,
+    }
+    rec["hlo_estimate"] = {
+        "flops_weighted": hw.flops_weighted,
+        "flops_static": hw.flops_static,
+        "traffic_bytes_weighted": hw.traffic_bytes_weighted,
+        "traffic_bytes_static": hw.traffic_bytes_static,
+        "n_dots": hw.n_dots,
+    }
+    with open(json_path, "w") as f:
+        json.dump(rec, f, indent=2, default=str)
+    return True
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    n = 0
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        if reanalyze_file(path):
+            n += 1
+    print(f"reanalyzed {n} cells in {args.dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,225 @@
+"""Step-function + input/state declaration factory shared by the dry-run and
+the real drivers: for any (arch, input shape) it builds the function to jit
+(train_step / prefill_step / serve_step), its ShapeDtypeStruct inputs, and
+the in/out PartitionSpecs on a given mesh."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig, SHAPES, InputShape
+from repro.models.common import ShardCtx
+from repro.models.model import Model, build_model
+from repro.optim.adamw import AdamWConfig, abstract_opt_state, adamw_update
+from repro.optim.schedule import warmup_cosine
+from repro.sharding.axes import (
+    ShardingRules,
+    dims_to_pspec,
+    rules_for_shape,
+    tree_pspecs,
+    tree_zero1_pspecs,
+)
+from repro.sharding.spec import specs_to_shape_dtype
+
+
+@dataclass
+class StepBundle:
+    """Everything the dry-run needs for one (arch x shape x mesh) cell."""
+
+    name: str
+    fn: Any                    # function to jit
+    args_sds: tuple            # ShapeDtypeStruct args
+    in_shardings: Any
+    out_shardings: Any
+    model: Model
+    rules: ShardingRules
+    donate_argnums: tuple = ()
+
+
+def _batch_sds(cfg: ModelConfig, shape: InputShape) -> dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.is_encoder:
+        return {
+            "frames": jax.ShapeDtypeStruct((B, S, cfg.frontend_stub_dim), jnp.float32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "mask": jax.ShapeDtypeStruct((B, S), jnp.bool_),
+        }
+    out = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.vision_tokens:
+        out["vision"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_tokens, cfg.frontend_stub_dim), jnp.float32
+        )
+    return out
+
+
+def _batch_pspecs(batch_sds: dict, rules: ShardingRules, mesh: Mesh) -> dict:
+    dims_map = {
+        "tokens": ("batch", "seq"),
+        "labels": ("batch", "seq"),
+        "mask": ("batch", "seq"),
+        "frames": ("batch", "seq", None),
+        "vision": ("batch", "vision", None),
+    }
+    return {
+        k: dims_to_pspec(dims_map[k], v.shape, rules, mesh) for k, v in batch_sds.items()
+    }
+
+
+def input_specs(arch_cfg: ModelConfig, shape_name: str) -> dict[str, Any]:
+    """Public helper per the assignment: ShapeDtypeStruct stand-ins for every
+    model input of the given shape (no device allocation)."""
+    shape = SHAPES[shape_name]
+    cfg = arch_cfg
+    model = build_model(cfg)
+    if shape.kind == "train":
+        return {
+            "state": {
+                "params": specs_to_shape_dtype(model.abstract_params),
+                "opt": specs_to_shape_dtype(
+                    abstract_opt_state(model.abstract_params, cfg.optimizer_dtype)
+                ),
+                "step": jax.ShapeDtypeStruct((), jnp.int32),
+            },
+            "batch": _batch_sds(cfg, shape),
+        }
+    if shape.kind == "prefill":
+        return {"params": specs_to_shape_dtype(model.abstract_params),
+                "batch": _batch_sds(cfg, shape)}
+    return {
+        "params": specs_to_shape_dtype(model.abstract_params),
+        "cache": specs_to_shape_dtype(model.abstract_cache(shape.global_batch, shape.seq_len)),
+        "token": jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def build_step(cfg: ModelConfig, shape_name: str, mesh: Mesh) -> StepBundle:
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    rules = rules_for_shape(model.rules, shape.kind, shape.global_batch)
+    ctx = ShardCtx(mesh, rules)
+    p_specs = model.abstract_params
+    params_ps = tree_pspecs(p_specs, rules, mesh)
+    params_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), params_ps)
+
+    if shape.kind == "train":
+        opt_specs = abstract_opt_state(p_specs, cfg.optimizer_dtype)
+        opt_ps = {k: tree_zero1_pspecs(v, rules, mesh) for k, v in opt_specs.items()}
+        state_sds = {
+            "params": specs_to_shape_dtype(p_specs),
+            "opt": specs_to_shape_dtype(opt_specs),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        state_sh = {
+            "params": params_sh,
+            "opt": jax.tree.map(
+                lambda s: NamedSharding(mesh, s), opt_ps,
+                is_leaf=lambda x: isinstance(x, P),
+            ),
+            "step": NamedSharding(mesh, P()),
+        }
+        batch_sds = _batch_sds(cfg, shape)
+        batch_sh = {
+            k: NamedSharding(mesh, v)
+            for k, v in _batch_pspecs(batch_sds, rules, mesh).items()
+        }
+        hp = AdamWConfig(lr=3e-4)
+        sched = warmup_cosine(3e-4, 2000, 100_000)
+
+        opt_master_sh = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), opt_ps["master"],
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+        def train_step(state, batch):
+            def loss_of(p):
+                return model.loss(p, batch, ctx=ctx)
+
+            (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                state["params"]
+            )
+            # ZeRO-1: reduce-scatter gradients straight into the optimizer
+            # sharding; the Adam update then runs on 1/N-sized shards instead
+            # of replicated full-size temporaries.
+            grads = jax.lax.with_sharding_constraint(grads, opt_master_sh)
+            new_params, new_opt, stats = adamw_update(
+                grads, state["opt"], state["step"], hp,
+                lr_schedule=sched, param_dtype=cfg.param_dtype,
+            )
+            new_state = {
+                "params": new_params, "opt": new_opt, "step": state["step"] + 1
+            }
+            return new_state, {"loss": loss}
+
+        return StepBundle(
+            name="train_step",
+            fn=train_step,
+            args_sds=(state_sds, batch_sds),
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+            model=model,
+            rules=rules,
+            donate_argnums=(0,),
+        )
+
+    if shape.kind == "prefill":
+        batch_sds = _batch_sds(cfg, shape)
+        batch_sh = {
+            k: NamedSharding(mesh, v)
+            for k, v in _batch_pspecs(batch_sds, rules, mesh).items()
+        }
+
+        def prefill_step(params, batch):
+            return model.prefill(
+                params,
+                ctx=ctx,
+                tokens=batch.get("tokens"),
+                frames=batch.get("frames"),
+                vision=batch.get("vision"),
+            )
+
+        return StepBundle(
+            name="prefill_step",
+            fn=prefill_step,
+            args_sds=(specs_to_shape_dtype(p_specs), batch_sds),
+            in_shardings=(params_sh, batch_sh),
+            out_shardings=None,
+            model=model,
+            rules=rules,
+        )
+
+    # decode: one new token against a seq_len-deep cache (serve_step)
+    cache_specs = model.abstract_cache(shape.global_batch, shape.seq_len)
+    cache_ps = tree_pspecs(cache_specs, rules, mesh)
+    cache_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), cache_ps)
+    token_sds = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    token_sh = NamedSharding(
+        mesh, dims_to_pspec(("batch",), (shape.global_batch,), rules, mesh)
+    )
+
+    def serve_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos, ctx=ctx)
+
+    return StepBundle(
+        name="serve_step",
+        fn=serve_step,
+        args_sds=(
+            specs_to_shape_dtype(p_specs),
+            specs_to_shape_dtype(cache_specs),
+            token_sds,
+            jax.ShapeDtypeStruct((), jnp.int32),
+        ),
+        in_shardings=(params_sh, cache_sh, token_sh, NamedSharding(mesh, P())),
+        out_shardings=(None, cache_sh),
+        model=model,
+        rules=rules,
+        donate_argnums=(1,),
+    )

@@ -1,0 +1,98 @@
+"""End-to-end fault-tolerant training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --reduced \
+        --steps 200 --batch 8 --seq 128 --mtbf 3600 --spares 2
+
+On this CPU container use ``--reduced`` (full configs are exercised by the
+dry-run); on a real pod drop it and pass --mesh to shard over devices.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import get_config, list_archs
+from repro.core.checkpoint import EngineConfig
+from repro.models import build_model
+from repro.runtime.failures import FailureInjector
+from repro.runtime.trainer import Trainer, TrainerConfig
+from repro.utils.logging import get_logger
+
+log = get_logger("launch.train")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b", choices=list_archs())
+    ap.add_argument("--reduced", action="store_true", help="tiny same-family config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--hosts", type=int, default=4, help="virtual failure-domain ranks")
+    ap.add_argument("--spares", type=int, default=2)
+    ap.add_argument("--policy", choices=["spare", "shrink"], default="spare")
+    ap.add_argument("--mtbf", type=float, default=3600.0, help="per-host MTBF (s)")
+    ap.add_argument("--inject-mtbf", type=float, default=None,
+                    help="simulate failures with this per-host MTBF (s)")
+    ap.add_argument("--period", type=int, default=None,
+                    help="checkpoint period in steps (default: Daly-optimal)")
+    ap.add_argument("--scheme", default="pairwise")
+    ap.add_argument("--parity-group", type=int, default=0)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--out", default=None, help="write history JSON here")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    log.info("arch %s: %s params (%s active)", cfg.name, f"{model.n_params:,}",
+             f"{model.n_active_params:,}")
+
+    injector = None
+    if args.inject_mtbf:
+        injector = FailureInjector(
+            args.hosts, mtbf_rank_s=args.inject_mtbf, step_time_s=1.0, seed=17
+        )
+
+    tcfg = TrainerConfig(
+        batch=args.batch,
+        seq=args.seq,
+        lr=args.lr,
+        total_steps=args.steps,
+        n_virtual_hosts=args.hosts,
+        n_spares=args.spares,
+        recovery_policy=args.policy,
+        mtbf_individual_s=args.mtbf,
+        checkpoint_period=args.period,
+        engine=EngineConfig(
+            scheme=args.scheme,
+            parity_group=args.parity_group,
+            compress=args.compress,
+        ),
+    )
+    trainer = Trainer(model, tcfg, injector=injector)
+    history = trainer.run(args.steps)
+
+    log.info(
+        "done: %d steps, %d recoveries, %d checkpoints (%.3fs each), "
+        "Daly period %d steps, predicted overhead %.2f%%",
+        int(trainer.state["step"]),
+        trainer.n_recoveries,
+        trainer.engine.stats.created,
+        trainer.engine.stats.last_create_s,
+        trainer.scheduler.period_steps,
+        100 * trainer.scheduler.expected_overhead,
+    )
+    log.info("loss: first=%.4f last=%.4f", history[0]["loss"], history[-1]["loss"])
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"history": history, "timers": trainer.timers.report()}, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Composable model definitions for the ten assigned architectures."""
+
+from repro.models.model import Model, build_model
+
+__all__ = ["Model", "build_model"]

@@ -1,0 +1,81 @@
+"""Shared model building blocks: norms, RoPE, softcap, activation sharding."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.axes import ShardingRules, dims_to_pspec
+from repro.sharding.spec import ParamSpec
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    """Mesh + logical rules threaded through model code for activation
+    sharding constraints. ``None`` ctx (CPU unit tests) means no constraints."""
+
+    mesh: Mesh
+    rules: ShardingRules
+
+
+def constrain(x: jax.Array, ctx: ShardCtx | None, dims: tuple[str | None, ...]) -> jax.Array:
+    if ctx is None:
+        return x
+    spec = dims_to_pspec(dims, x.shape, ctx.rules, ctx.mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), ("embed",), dtype=jnp.float32, init="zeros")
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    # (1 + scale): zero-init scale == identity (gemma/llama convention).
+    return (x * (1.0 + scale)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponent)  # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def embed_spec(vocab: int, d_model: int, dtype: Any) -> ParamSpec:
+    return ParamSpec((vocab, d_model), ("vocab", "embed"), dtype=dtype, init="normal", scale=0.02)

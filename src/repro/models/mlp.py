@@ -1,0 +1,43 @@
+"""Dense MLP variants: SwiGLU (llama/granite/mixtral), GeGLU (gemma), GELU."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ShardCtx, constrain
+from repro.sharding.spec import ParamSpec
+
+
+def abstract_params(cfg: ModelConfig) -> dict[str, ParamSpec]:
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.param_dtype
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": ParamSpec((d, f), ("embed", "mlp"), dtype=dt),
+            "w_up": ParamSpec((d, f), ("embed", "mlp"), dtype=dt),
+            "w_down": ParamSpec((f, d), ("mlp", "embed"), dtype=dt),
+        }
+    return {
+        "w_in": ParamSpec((d, f), ("embed", "mlp"), dtype=dt),
+        "w_out": ParamSpec((f, d), ("mlp", "embed"), dtype=dt),
+    }
+
+
+def _act(kind: str, x: jax.Array) -> jax.Array:
+    if kind == "swiglu":
+        return jax.nn.silu(x)
+    return jax.nn.gelu(x, approximate=True)
+
+
+def apply(params: dict[str, jax.Array], x: jax.Array, cfg: ModelConfig, ctx: ShardCtx | None = None) -> jax.Array:
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        u = jnp.einsum("...d,df->...f", x, params["w_up"])
+        h = _act(cfg.mlp_kind, g) * u
+    else:
+        h = _act("gelu", jnp.einsum("...d,df->...f", x, params["w_in"]))
+    h = constrain(h, ctx, ("batch", "seq", "mlp"))
+    w_out = params["w_down"] if "w_down" in params else params["w_out"]
+    out = jnp.einsum("...f,fd->...d", h, w_out)
+    return constrain(out, ctx, ("batch", "seq", "act_embed"))

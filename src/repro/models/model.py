@@ -1,0 +1,71 @@
+"""Model facade: bundles config + param/cache declarations + step functions."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import cached_property
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.models.common import ShardCtx
+from repro.sharding.axes import ShardingRules, FSDP_RULES, TP_RULES
+from repro.sharding.spec import init_tree, specs_to_shape_dtype, tree_count
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- declarations ------------------------------------------------------
+    @cached_property
+    def abstract_params(self) -> Any:
+        return lm.abstract_params(self.cfg)
+
+    def abstract_cache(self, batch: int, max_seq: int) -> Any:
+        return lm.abstract_cache(self.cfg, batch, max_seq)
+
+    @cached_property
+    def n_params(self) -> int:
+        return tree_count(self.abstract_params)
+
+    @cached_property
+    def n_active_params(self) -> int:
+        return lm.active_param_count(self.cfg)
+
+    @property
+    def rules(self) -> ShardingRules:
+        rules = FSDP_RULES if self.cfg.sharding_preset == "fsdp" else TP_RULES
+        if self.cfg.moe_mode == "ep" and self.cfg.num_experts:
+            # Expert parallelism: experts shard over "data"; GSPMD realizes
+            # dispatch/combine as all-to-alls, and expert weights need no
+            # per-layer data-axis gather at all (each shard owns its experts).
+            rules = rules.override(experts="data")
+        return rules
+
+    # -- materialization ---------------------------------------------------
+    def init(self, key: jax.Array) -> Any:
+        return init_tree(key, self.abstract_params)
+
+    def init_cache(self, batch: int, max_seq: int) -> Any:
+        return init_tree(jax.random.PRNGKey(0), self.abstract_cache(batch, max_seq))
+
+    def param_shape_dtypes(self) -> Any:
+        return specs_to_shape_dtype(self.abstract_params)
+
+    # -- step functions ----------------------------------------------------
+    def loss(self, params, batch, ctx: ShardCtx | None = None):
+        return lm.loss_fn(params, batch, self.cfg, ctx=ctx)
+
+    def prefill(self, params, ctx: ShardCtx | None = None, **inputs):
+        return lm.prefill(params, self.cfg, ctx=ctx, **inputs)
+
+    def decode_step(self, params, cache, token, pos, ctx: ShardCtx | None = None):
+        return lm.decode_step(params, cache, token, pos, self.cfg, ctx=ctx)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,121 @@
+"""Mixture-of-Experts with GShard-style capacity-based einsum dispatch.
+
+TPU-idiomatic: dispatch/combine are dense one-hot einsums (MXU-friendly, no
+gather/scatter), grouped along the token dim so the dispatch matmul cost stays
+O(T^2/G) per group rather than O(T^2).
+
+Two sharding modes (see DESIGN.md §6):
+  * ``tp`` (baseline): experts replicated across data axes, expert d_ff sharded
+    over "model" — collectives look like dense TP.
+  * ``ep`` (hillclimb): the expert dim sharded over "data" — GSPMD materializes
+    all-to-alls for dispatch/combine, the classic expert-parallel schedule.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ShardCtx, constrain
+from repro.models.mlp import _act
+from repro.sharding.spec import ParamSpec
+
+GROUP_TOKENS = 512  # target tokens per dispatch group
+
+
+def abstract_params(cfg: ModelConfig) -> dict[str, ParamSpec]:
+    d, f, e, dt = cfg.d_model, cfg.d_ff, cfg.num_experts, cfg.param_dtype
+    out = {"router": ParamSpec((d, e), ("embed", None), dtype=jnp.float32)}
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        out["w_gate"] = ParamSpec((e, d, f), ("experts", "embed", "mlp"), dtype=dt)
+        out["w_up"] = ParamSpec((e, d, f), ("experts", "embed", "mlp"), dtype=dt)
+        out["w_down"] = ParamSpec((e, f, d), ("experts", "mlp", "embed"), dtype=dt)
+    else:
+        out["w_in"] = ParamSpec((e, d, f), ("experts", "embed", "mlp"), dtype=dt)
+        out["w_out"] = ParamSpec((e, f, d), ("experts", "mlp", "embed"), dtype=dt)
+    return out
+
+
+def expert_capacity(tokens_per_group: int, num_experts: int, k: int, factor: float = 1.25) -> int:
+    cap = int(factor * k * tokens_per_group / num_experts)
+    # C == tokens_per_group guarantees droplessness (a token picks each expert
+    # at most once), so never allocate beyond it.
+    return max(min(cap, tokens_per_group), 1)
+
+
+def apply(
+    params: dict[str, jax.Array],
+    x: jax.Array,  # (B, S, d_model)
+    cfg: ModelConfig,
+    ctx: ShardCtx | None = None,
+    num_groups: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_loss). Aux loss = load-balancing (Switch style)."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_tok
+    T = B * S
+    # Group along tokens. Group size is THE dispatch-cost knob: the dispatch/
+    # combine einsums cost 2·T·(E·C)·D with E·C = k·cf·tg, i.e. linear in the
+    # group size — tg=4096 makes dispatch ~10x the expert matmuls (measured:
+    # EXPERIMENTS §Perf iter 2), tg<=512 keeps it ~13%. Groups subdivide batch
+    # rows so the group dim stays cleanly data-sharded.
+    if num_groups is None:
+        per_row = max(1, S // GROUP_TOKENS) if S % GROUP_TOKENS == 0 else 1
+        G = B * per_row
+    else:
+        G = num_groups
+    assert T % G == 0, (T, G)
+    tg = T // G
+    C = expert_capacity(tg, E, K, cfg.moe_capacity_factor)
+
+    xt = x.reshape(G, tg, D)
+    # Router matmul in compute dtype (its f32 version back-propagates an f32
+    # cotangent into the whole residual stream, doubling every TP all-reduce
+    # in the backward pass — §Perf iter 3); softmax stays f32.
+    logits = jnp.einsum(
+        "gtd,de->gte", xt, params["router"].astype(x.dtype)
+    ).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # Top-k selection -> per-token (expert, weight) slots.
+    weights, sel = jax.lax.top_k(probs, K)  # (G, tg, K)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+    # Position of each (token, slot) in its expert's capacity buffer.
+    onehot = jax.nn.one_hot(sel, E, dtype=jnp.int32)            # (G, tg, K, E)
+    slot_flat = onehot.reshape(G, tg * K, E)
+    pos_in_expert = jnp.cumsum(slot_flat, axis=1) * slot_flat - 1  # (G, tg*K, E)
+    pos_in_expert = pos_in_expert.reshape(G, tg, K, E)
+    within_cap = (pos_in_expert >= 0) & (pos_in_expert < C)
+
+    # dispatch: (G, tg, E, C) one-hot; combine: same with gate weights.
+    pos_oh = jax.nn.one_hot(pos_in_expert, C, dtype=x.dtype) * within_cap[..., None]
+    dispatch = jnp.einsum("gtke,gtkec->gtec", onehot.astype(x.dtype), pos_oh)
+    combine = jnp.einsum("gtk,gtke,gtkec->gtec", weights.astype(x.dtype),
+                         onehot.astype(x.dtype), pos_oh)
+
+    ex_in = jnp.einsum("gtec,gtd->gecd", dispatch, xt)  # (G, E, C, D)
+    # Keep the group dim batch-sharded: a replicated constraint here makes
+    # GSPMD all-gather the dispatch output and compute every expert on every
+    # data shard (16x redundant FLOPs — EXPERIMENTS §Perf iter 2).
+    ex_in = constrain(ex_in, ctx, ("moe_group", "experts", None, None))
+
+    if "w_gate" in params:
+        g = jnp.einsum("gecd,edf->gecf", ex_in, params["w_gate"])
+        u = jnp.einsum("gecd,edf->gecf", ex_in, params["w_up"])
+        h = _act(cfg.mlp_kind, g) * u
+        ex_out = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+    else:
+        h = _act("gelu", jnp.einsum("gecd,edf->gecf", ex_in, params["w_in"]))
+        ex_out = jnp.einsum("gecf,efd->gecd", h, params["w_out"])
+    ex_out = constrain(ex_out, ctx, ("moe_group", "experts", None, None))
+
+    out = jnp.einsum("gtec,gecd->gtd", combine, ex_out).reshape(B, S, D)
+    out = constrain(out, ctx, ("batch", "seq", "act_embed"))
+
+    # Switch-transformer load-balance loss: E * sum(frac_tokens * frac_probs).
+    frac_tokens = jnp.mean(onehot[..., 0, :].astype(jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return out.astype(x.dtype), aux

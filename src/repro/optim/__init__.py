@@ -1,0 +1,12 @@
+"""Optimizer substrate: sharded AdamW (ZeRO-1), schedules, gradient compression."""
+
+from repro.optim.adamw import AdamWConfig, abstract_opt_state, init_opt_state, adamw_update
+from repro.optim.schedule import warmup_cosine
+
+__all__ = [
+    "AdamWConfig",
+    "abstract_opt_state",
+    "init_opt_state",
+    "adamw_update",
+    "warmup_cosine",
+]

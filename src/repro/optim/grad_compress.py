@@ -1,0 +1,74 @@
+"""Gradient / snapshot compression for distributed exchange.
+
+Two distributed-optimization tricks used by the framework:
+
+  * ``compress_tree`` / ``decompress_tree``: blockwise int8 quantization of a
+    pytree (delegates to ``repro.kernels.ops.quantize_blockwise``). Used by the
+    checkpoint engine's compressed-snapshot mode (halves/quarters the paper's
+    eq. 2 exchange volume) and by host-tier snapshot shipping.
+  * ``compressed_psum``: shard_map-level all-reduce of quantized values for
+    manual data-parallel gradient reduction (EXPERIMENTS §Perf ablation).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+# dtype registry so compressed payloads stay pure-array pytrees (packable to
+# flat bytes + manifest without string leaves).
+_DTYPES = ["float32", "bfloat16", "float16", "float64"]
+
+
+def compress_tree(tree: Any, block: int = 256) -> Any:
+    """Quantize floating leaves to (int8 values, f32 scales); pass others through."""
+    import numpy as np
+
+    from repro.kernels import ops
+
+    def comp(x):
+        xa = jnp.asarray(x)
+        if jnp.issubdtype(xa.dtype, jnp.floating) and xa.size >= block and xa.dtype.name in _DTYPES:
+            q, scale = ops.quantize_blockwise(xa.reshape(-1), block=block)
+            meta = np.array([*xa.shape, _DTYPES.index(xa.dtype.name), xa.size], np.int64)
+            return {"_q": q, "_scale": scale, "_meta": meta}
+        return x
+
+    return jax.tree.map(comp, tree)
+
+
+def decompress_tree(tree: Any) -> Any:
+    import numpy as np
+
+    from repro.kernels import ops
+
+    def is_packed(x):
+        return isinstance(x, dict) and "_q" in x
+
+    def decomp(x):
+        if is_packed(x):
+            meta = np.asarray(x["_meta"]).reshape(-1)
+            shape = tuple(int(v) for v in meta[:-2])
+            dtype = _DTYPES[int(meta[-2])]
+            size = int(meta[-1])
+            flat = ops.dequantize_blockwise(jnp.asarray(x["_q"]), jnp.asarray(x["_scale"]))
+            return flat[:size].reshape(shape).astype(dtype)
+        return x
+
+    return jax.tree.map(decomp, tree, is_leaf=is_packed)
+
+
+def compressed_psum(x: jax.Array, axis_name: str, block: int = 256) -> jax.Array:
+    """Quantize -> psum -> dequantize (inside shard_map). Emulates int8 gradient
+    all-reduce; the quantization error is the compression/accuracy trade-off."""
+    from repro.kernels import ops
+
+    q, scale = ops.quantize_blockwise(x.reshape(-1), block=block)
+    # Dequantize locally and reduce: the wire format in a real int8-allreduce
+    # would stay int8 per hop; the numerics (quantize-once-then-sum) match.
+    deq = q.astype(jnp.float32) * jnp.repeat(scale, block)[: q.size]
+    acc = jax.lax.psum(deq, axis_name)
+    return acc.reshape(x.shape).astype(x.dtype)

@@ -1,0 +1,24 @@
+"""Distributed runtime: virtual cluster, failure injection, fault-tolerant
+training/serving loops, elastic recovery, straggler mitigation."""
+
+from repro.runtime.cluster import VirtualCluster, StabilizationReport
+from repro.runtime.failures import FailureInjector, ProcessFaultException
+from repro.runtime.server import Server, ServerConfig
+from repro.runtime.state import ShardPlan, ShardedStateEntity
+from repro.runtime.straggler import StragglerDetector, worth_evicting
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+__all__ = [
+    "VirtualCluster",
+    "StabilizationReport",
+    "FailureInjector",
+    "ProcessFaultException",
+    "Server",
+    "ServerConfig",
+    "ShardPlan",
+    "ShardedStateEntity",
+    "StragglerDetector",
+    "worth_evicting",
+    "Trainer",
+    "TrainerConfig",
+]

@@ -1,0 +1,140 @@
+"""VirtualCluster — single-process simulation of the multi-pod host set.
+
+Ranks are failure domains: one rank = one data-axis coordinate of the
+production mesh (a group of TPU hosts that live and die together from the
+training job's perspective). The cluster owns liveness, the revoked flag, the
+spare pool and the ULFM-analogue stabilization pipeline:
+
+  revoke()  — the cluster-wide fault signal (MPI_Comm_revoke: after a fault,
+              every subsequent barrier raises until stabilized)
+  shrink()  — dense rank renumbering over survivors (MPI_Comm_shrink), used
+              by the elastic-shrink recovery policy
+  substitute_spares() — the paper's §5.2.4 spare-process policy: dead ranks
+              are replaced, the rank count stays constant
+
+The CheckpointEngine's stores are wired to cluster liveness: killing a rank
+wipes its in-memory snapshots — diskless checkpoints die with their host.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Literal
+
+from repro.core.checkpoint import CheckpointEngine
+from repro.core.distribution import shrink_reassignment
+from repro.runtime.failures import ProcessFaultException
+from repro.utils.logging import get_logger
+
+log = get_logger("runtime.cluster")
+
+RecoveryPolicy = Literal["spare", "shrink"]
+
+
+@dataclass
+class StabilizationReport:
+    policy: str
+    failed: list[int]
+    n_ranks_before: int
+    n_ranks_after: int
+    spares_used: int
+    reassignment: dict[int, int]
+    # Post-recovery load factor: work per surviving rank relative to before
+    # (paper §5.2.4 — the imbalance that load balancing must fix).
+    load_factor: float
+
+
+class VirtualCluster:
+    def __init__(self, n_ranks: int, n_spares: int = 0) -> None:
+        self.n_ranks = n_ranks
+        self.n_spares = n_spares
+        self._alive: set[int] = set(range(n_ranks))
+        self._spares_left = n_spares
+        self.revoked = False
+        self.fault_log: list[tuple[str, list[int]]] = []
+        self.engine: CheckpointEngine | None = None
+
+    # ------------------------------------------------------------------ #
+    def attach_engine(self, engine: CheckpointEngine) -> None:
+        self.engine = engine
+        engine._alive_fn = self.alive  # engine liveness = cluster liveness
+
+    def alive(self) -> set[int]:
+        return set(self._alive)
+
+    @property
+    def failed(self) -> set[int]:
+        return set(range(self.n_ranks)) - self._alive
+
+    # ------------------------------------------------------------------ #
+    # fault signalling (ULFM analogue)
+    # ------------------------------------------------------------------ #
+    def kill(self, rank: int) -> None:
+        """Host failure: the rank leaves; its in-memory snapshots are erased."""
+        if rank not in self._alive:
+            return
+        self._alive.discard(rank)
+        if self.engine is not None:
+            self.engine.stores[rank].wipe()
+        self.revoked = True  # next communication raises (MPI_ERR_REVOKED)
+        self.fault_log.append(("kill", [rank]))
+        log.warning("rank %d killed (alive: %d/%d)", rank, len(self._alive), self.n_ranks)
+
+    def barrier(self, phase: str = "step") -> None:
+        """A collective entry point: raises if the communicator is revoked.
+        This is how faults surface deterministically at step granularity."""
+        if self.revoked:
+            raise ProcessFaultException(sorted(self.failed), phase)
+
+    # ------------------------------------------------------------------ #
+    # stabilization (revoke -> shrink / spare substitution)
+    # ------------------------------------------------------------------ #
+    def stabilize(self, policy: RecoveryPolicy = "spare") -> StabilizationReport:
+        failed = sorted(self.failed)
+        n_before = self.n_ranks
+        spares_used = 0
+        if policy == "spare" and self._spares_left >= len(failed):
+            # Replace every dead rank with a spare; mesh shape is preserved.
+            for r in failed:
+                self._alive.add(r)
+                if self.engine is not None:
+                    self.engine.stores[r].revive(r)
+                spares_used += 1
+            self._spares_left -= spares_used
+            reassignment = {r: r for r in range(self.n_ranks)}
+            n_after = self.n_ranks
+            load = 1.0
+        else:
+            # Elastic shrink: dense renumbering of survivors (MPI_Comm_shrink
+            # semantics); the data axis contracts, survivors inherit the work.
+            policy = "shrink"
+            reassignment = shrink_reassignment(self.n_ranks, set(failed))
+            n_after = len(reassignment)
+            load = n_before / max(n_after, 1)
+            if self.engine is not None:
+                # Stores keep their data; ranks are renumbered by the caller
+                # when a new engine is built for the shrunken world.
+                pass
+        self.revoked = False
+        report = StabilizationReport(
+            policy=policy,
+            failed=failed,
+            n_ranks_before=n_before,
+            n_ranks_after=n_after,
+            spares_used=spares_used,
+            reassignment=reassignment,
+            load_factor=load,
+        )
+        log.info(
+            "stabilized via %s: failed=%s ranks %d->%d load_factor=%.2f",
+            report.policy, failed, n_before, n_after, load,
+        )
+        return report
+
+    def regrow(self, n_new_ranks: int) -> None:
+        """Elastic scale-up: new hosts join (paper §5.2.4's 'add available
+        resources ... as soon as they are available')."""
+        assert n_new_ranks >= self.n_ranks
+        for r in range(self.n_ranks, n_new_ranks):
+            self._alive.add(r)
+        self.n_ranks = n_new_ranks

@@ -1,0 +1,73 @@
+"""Failure model + deterministic fault injection.
+
+``ProcessFaultException`` is the Algorithm-3 signal: raised out of the step
+(the analogue of MPI_ERR_PROC_FAILED surfacing through the error handler) and
+caught in the trainer's main loop, where the deterministic recovery pipeline
+runs (stabilize → restore).
+
+``FailureInjector`` drives *when* hosts die: either an explicit
+(step -> ranks) schedule (tests, the paper's kill-signal experiment in §7.5)
+or an MTBF-driven Bernoulli process per rank per step (eq. 1: system failure
+rate scales with rank count), fully deterministic given the seed.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+class ProcessFaultException(RuntimeError):
+    """A process/host fault was signaled; the main loop must recover."""
+
+    def __init__(self, ranks: list[int], phase: str = "step") -> None:
+        super().__init__(f"host fault: ranks {ranks} died during {phase}")
+        self.ranks = ranks
+        self.phase = phase
+
+
+@dataclass
+class FailureInjector:
+    n_ranks: int
+    mtbf_rank_s: float | None = None        # per-rank MTBF (None = schedule only)
+    step_time_s: float = 1.0                # simulated step duration
+    seed: int = 0
+    schedule: dict[int, list[int]] = field(default_factory=dict)  # step -> ranks
+    # Ranks may also die *during* a checkpoint; phase-targeted kills for the
+    # Algorithm-2 tests:
+    checkpoint_schedule: dict[int, list[int]] = field(default_factory=dict)
+    _fired: set = field(default_factory=set)
+    _tick: int = 0  # wall-clock step count (monotonic across rollbacks)
+
+    def kills_at_step(self, step: int) -> list[int]:
+        """Kills are wall-clock events: a scheduled kill fires exactly once
+        even though the logical step is replayed after a rollback."""
+        self._tick += 1
+        kills = []
+        for r in self.schedule.get(step, []):
+            key = ("step", step, r)
+            if key not in self._fired:
+                self._fired.add(key)
+                kills.append(r)
+        if self.mtbf_rank_s:
+            p = min(self.step_time_s / self.mtbf_rank_s, 1.0)
+            rng = np.random.default_rng(self.seed * 1_000_003 + self._tick)
+            draws = rng.random(self.n_ranks)
+            kills.extend(int(r) for r in np.nonzero(draws < p)[0])
+        return sorted(set(kills))
+
+    def kills_at_checkpoint(self, ckpt_index: int) -> list[int]:
+        kills = []
+        for r in self.checkpoint_schedule.get(ckpt_index, []):
+            key = ("ckpt", ckpt_index, r)
+            if key not in self._fired:
+                self._fired.add(key)
+                kills.append(r)
+        return sorted(set(kills))
+
+    def expected_system_mtbf_s(self) -> float | None:
+        """Eq. 1: mu = mu_ind / N."""
+        if not self.mtbf_rank_s:
+            return None
+        return self.mtbf_rank_s / self.n_ranks

@@ -1,0 +1,158 @@
+"""Fault-tolerant batched serving loop.
+
+The paper's scheme applies to any "sequence of well-defined states" — for
+inference that state is the decode session set: KV/SSM caches, generated
+tokens, and the position counter. The server checkpoints sessions every
+``checkpoint_every_tokens`` decode steps under the same engine (params are
+registered too but change never, so their snapshot cost is paid once per
+checkpoint — or excluded via ``snapshot_params=False`` since they can be
+re-read from the job's initial weights).
+
+Recovery rolls sessions back to the last snapshot and re-decodes; greedy
+decoding makes the regenerated continuation bitwise identical.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import AbstractMesh
+
+from repro.core.checkpoint import CheckpointEngine, EngineConfig
+from repro.models.model import Model
+from repro.runtime.cluster import VirtualCluster
+from repro.runtime.failures import FailureInjector, ProcessFaultException
+from repro.runtime.state import ShardPlan, ShardedStateEntity
+from repro.sharding.axes import rules_for_shape, tree_pspecs
+from repro.sharding.spec import specs_to_shape_dtype
+from repro.utils.logging import get_logger
+
+log = get_logger("runtime.server")
+
+
+@dataclass
+class ServerConfig:
+    batch: int = 4
+    max_seq: int = 64
+    checkpoint_every_tokens: int = 8
+    n_virtual_hosts: int = 4
+    n_spares: int = 4
+    snapshot_params: bool = False
+    engine: EngineConfig = field(default_factory=EngineConfig)
+
+
+class Server:
+    def __init__(self, model: Model, scfg: ServerConfig, params: Any | None = None,
+                 injector: FailureInjector | None = None) -> None:
+        assert not model.cfg.is_encoder, "serving loop decodes; encoder archs export prefill only"
+        self.model = model
+        self.scfg = scfg
+        self.params = params if params is not None else model.init(jax.random.PRNGKey(0))
+
+        self.sessions: dict[str, Any] = {}  # cache/tokens/pos once prefilled
+        self._prefill = jax.jit(
+            lambda p, toks, **kw: model.prefill(p, tokens=toks, **kw)
+        )
+        self._decode = jax.jit(
+            lambda p, cache, tok, pos: model.decode_step(p, cache, tok, pos)
+        )
+
+        # Failure-domain plan from production decode rules.
+        prod_mesh = AbstractMesh((16, 16), ("data", "model"))
+        rules = rules_for_shape(model.rules, "decode", scfg.batch)
+        cache_specs = model.abstract_cache(scfg.batch, scfg.max_seq)
+        sess_sds = {
+            "cache": specs_to_shape_dtype(cache_specs),
+            "tokens": jax.ShapeDtypeStruct((scfg.batch, scfg.max_seq), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        sess_pspecs = {
+            "cache": tree_pspecs(cache_specs, rules, prod_mesh),
+            "tokens": jax.sharding.PartitionSpec(),
+            "pos": jax.sharding.PartitionSpec(),
+        }
+        self.plan = ShardPlan.from_pspecs(sess_sds, sess_pspecs)
+
+        self.cluster = VirtualCluster(scfg.n_virtual_hosts, scfg.n_spares)
+        self.engine = CheckpointEngine(scfg.n_virtual_hosts, scfg.engine)
+        self.cluster.attach_engine(self.engine)
+        self.engine.register(
+            "sessions",
+            ShardedStateEntity(lambda: self.sessions, self._set_sessions, self.plan),
+        )
+        self.injector = injector or FailureInjector(scfg.n_virtual_hosts)
+        self.n_recoveries = 0
+
+    def _set_sessions(self, np_sessions: dict[str, Any]) -> None:
+        self.sessions = jax.tree.map(jnp.asarray, np_sessions)
+
+    # ------------------------------------------------------------------ #
+    def prefill(self, prompts: np.ndarray, **extra_inputs: Any) -> None:
+        """prompts: (batch, prompt_len) int32."""
+        B, P = prompts.shape
+        assert B == self.scfg.batch
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts), **extra_inputs)
+        # Grow prefill cache (length P) into the max_seq serving cache.
+        full = self.model.init_cache(B, self.scfg.max_seq)
+        def merge(fc, pc):
+            if fc.shape == pc.shape:
+                return pc
+            return fc.at[tuple(slice(0, s) for s in pc.shape)].set(pc)
+        cache = jax.tree.map(merge, full, cache)
+        tokens = jnp.zeros((B, self.scfg.max_seq), jnp.int32)
+        tokens = tokens.at[:, :P].set(jnp.asarray(prompts))
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        tokens = tokens.at[:, P].set(nxt)
+        self.sessions = {"cache": cache, "tokens": tokens, "pos": jnp.asarray(P, jnp.int32)}
+
+    def decode(self, n_tokens: int) -> np.ndarray:
+        """Greedy-decode n_tokens for every session, fault-tolerantly."""
+        produced = 0
+        ticks = 0
+        while produced < n_tokens:
+            try:
+                self.cluster.barrier("decode")
+                for r in self.injector.kills_at_step(ticks):
+                    self.cluster.kill(r)
+                ticks += 1
+                self.cluster.barrier("decode")
+
+                pos = int(self.sessions["pos"])
+                tok = self.sessions["tokens"][:, pos]
+                logits, cache = self._decode(self.params, self.sessions["cache"], tok, jnp.asarray(pos, jnp.int32))
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                tokens = self.sessions["tokens"].at[:, pos + 1].set(nxt)
+                self.sessions = {"cache": cache, "tokens": tokens, "pos": jnp.asarray(pos + 1, jnp.int32)}
+                produced = self._produced()
+
+                if produced % self.scfg.checkpoint_every_tokens == 0:
+                    ok = self.engine.checkpoint({"pos": pos + 1})
+                    if not ok:
+                        raise ProcessFaultException(sorted(self.cluster.failed), "checkpoint")
+            except ProcessFaultException as e:
+                log.warning("serving fault: %s", e)
+                self.recover()
+                produced = self._produced()
+        return np.asarray(self.sessions["tokens"])
+
+    def _produced(self) -> int:
+        return int(self.sessions["pos"]) - self._prompt_len
+
+    def prefill_and_decode(self, prompts: np.ndarray, n_tokens: int, **extra) -> np.ndarray:
+        self._prompt_len = prompts.shape[1]
+        self.prefill(prompts, **extra)
+        # First checkpoint right after prefill (the serving baseline state).
+        self.engine.checkpoint({"pos": int(self.sessions["pos"])})
+        return self.decode(n_tokens)
+
+    def recover(self) -> None:
+        if not self.engine.has_valid_checkpoint:
+            raise RuntimeError("no valid session checkpoint")
+        self.cluster.stabilize("spare")
+        meta = self.engine.restore()
+        self.n_recoveries += 1
+        log.info("sessions rolled back to pos %s", meta.get("pos"))

@@ -1,0 +1,352 @@
+"""The fault-tolerant training loop — paper Algorithm 3, end to end.
+
+    while current step < number of steps:
+        try:
+            barrier (faults surface here, deterministically)
+            single step
+            checkpoint if due (Algorithm 2, at the Daly interval)
+        catch ProcessFaultException:
+            stabilize parallel environment (revoke -> shrink / spares)
+            recover last checkpoint (Algorithm 4; zero-comm for survivors)
+
+Because the data pipeline's state is part of the checkpoint, the replayed
+trajectory after a rollback is bitwise identical to a fault-free run — the
+recovery tests assert exactly that.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import AbstractMesh, Mesh, NamedSharding
+
+from repro.configs.base import ModelConfig
+from repro.core.checkpoint import CheckpointEngine, EngineConfig
+from repro.core.interval import CheckpointScheduler, system_mtbf
+from repro.data.synthetic import SyntheticDataPipeline
+from repro.models.common import ShardCtx
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state, abstract_opt_state
+from repro.optim.schedule import warmup_cosine
+from repro.runtime.cluster import VirtualCluster
+from repro.runtime.failures import FailureInjector, ProcessFaultException
+from repro.runtime.state import ShardPlan, ShardedStateEntity
+from repro.runtime.straggler import StragglerDetector
+from repro.sharding.axes import tree_pspecs, tree_zero1_pspecs
+from repro.sharding.spec import specs_to_shape_dtype
+from repro.utils.logging import get_logger
+from repro.utils.timing import TimerRegistry
+
+log = get_logger("runtime.trainer")
+
+
+@dataclass
+class TrainerConfig:
+    batch: int = 8
+    seq: int = 64
+    lr: float = 1e-3
+    warmup_steps: int = 10
+    total_steps: int = 1000
+    seed: int = 0
+    # fault tolerance
+    n_virtual_hosts: int = 4          # failure-domain ranks in the simulation
+    n_spares: int = 0
+    recovery_policy: str = "spare"    # spare | shrink
+    mtbf_individual_s: float = 3600.0
+    checkpoint_period: int | None = None  # None -> Daly-optimal (adaptive)
+    engine: EngineConfig = field(default_factory=EngineConfig)
+    moment_dtype: Any = jnp.float32
+    # Optional low-frequency disk tier (paper §5.2.1: protects against
+    # failures that strike the whole system). Every `disk_every` successful
+    # in-memory checkpoints, the read-only buffers are persisted.
+    disk_path: str | None = None
+    disk_every: int = 8
+    # Overlapped checkpointing: capture the snapshot synchronously at the
+    # step boundary (consistency preserved), defer the partner exchange +
+    # handshake + swap to the next step (compute/comm overlap).
+    async_checkpoint: bool = False
+
+
+class Trainer:
+    def __init__(
+        self,
+        model: Model,
+        tcfg: TrainerConfig,
+        mesh: Mesh | None = None,
+        injector: FailureInjector | None = None,
+    ) -> None:
+        self.model = model
+        self.cfg = model.cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.timers = TimerRegistry()
+
+        # -- data pipeline (its (seed, step) state is a checkpoint entity) ---
+        self.data = SyntheticDataPipeline(self.cfg, tcfg.batch, tcfg.seq, tcfg.seed)
+
+        # -- live state -------------------------------------------------------
+        key = jax.random.PRNGKey(tcfg.seed)
+        params = model.init(key)
+        self.state: dict[str, Any] = {
+            "params": params,
+            "opt": init_opt_state(params, tcfg.moment_dtype),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+        # -- sharding plan against the PRODUCTION mesh (abstract) -------------
+        prod_mesh = AbstractMesh((16, 16), ("data", "model"))
+        pspecs = self._state_pspecs(prod_mesh)
+        sds = self._state_sds()
+        self.plan = ShardPlan.from_pspecs(sds, pspecs)
+
+        # -- cluster + engine + scheduler -------------------------------------
+        self.cluster = VirtualCluster(tcfg.n_virtual_hosts, tcfg.n_spares)
+        self.engine = CheckpointEngine(tcfg.n_virtual_hosts, tcfg.engine)
+        self.cluster.attach_engine(self.engine)
+        self.engine.register(
+            "train_state",
+            ShardedStateEntity(lambda: self.state, self._set_state, self.plan),
+        )
+        self.engine.register("data_pipeline", self.data)
+        self.engine.register("timers", self.timers)
+
+        mtbf = system_mtbf(tcfg.mtbf_individual_s, tcfg.n_virtual_hosts)
+        self.scheduler = CheckpointScheduler(mtbf_s=mtbf, step_time_s=0.1)
+        self.injector = injector or FailureInjector(tcfg.n_virtual_hosts)
+        self.straggler = StragglerDetector(tcfg.n_virtual_hosts)
+
+        # -- jitted step -------------------------------------------------------
+        self._train_step = self._build_train_step()
+        self.history: list[dict[str, float]] = []
+        self.n_recoveries = 0
+        self._last_ckpt_step = -(10**9)
+        self._pending_ckpt_step = -(10**9)
+
+    # ------------------------------------------------------------------ #
+    def _state_pspecs(self, mesh) -> dict[str, Any]:
+        rules = self.model.rules
+        p_specs = self.model.abstract_params
+        opt_specs = abstract_opt_state(p_specs, self.tcfg.moment_dtype)
+        return {
+            "params": tree_pspecs(p_specs, rules, mesh),
+            "opt": {
+                "master": tree_zero1_pspecs(opt_specs["master"], rules, mesh),
+                "m": tree_zero1_pspecs(opt_specs["m"], rules, mesh),
+                "v": tree_zero1_pspecs(opt_specs["v"], rules, mesh),
+            },
+            "step": jax.sharding.PartitionSpec(),
+        }
+
+    def _state_sds(self) -> dict[str, Any]:
+        p = specs_to_shape_dtype(self.model.abstract_params)
+        o = abstract_opt_state(self.model.abstract_params, self.tcfg.moment_dtype)
+        return {
+            "params": p,
+            "opt": specs_to_shape_dtype(o),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def _set_state(self, np_state: dict[str, Any]) -> None:
+        self.state = jax.tree.map(jnp.asarray, np_state)
+
+    def _build_train_step(self):
+        model, tcfg = self.model, self.tcfg
+        hp = AdamWConfig(lr=tcfg.lr)
+        sched = warmup_cosine(tcfg.lr, tcfg.warmup_steps, tcfg.total_steps)
+        ctx = None
+        if self.mesh is not None:
+            ctx = ShardCtx(self.mesh, model.rules)
+
+        def step_fn(state, batch):
+            def loss_of(p):
+                return model.loss(p, batch, ctx=ctx)
+
+            (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(state["params"])
+            new_params, new_opt, stats = adamw_update(
+                grads, state["opt"], state["step"], hp,
+                lr_schedule=sched, param_dtype=model.cfg.param_dtype,
+            )
+            new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+            return new_state, {"loss": loss, **metrics, **stats}
+
+        return jax.jit(step_fn, donate_argnums=(0,))
+
+    # ------------------------------------------------------------------ #
+    # Algorithm 3
+    # ------------------------------------------------------------------ #
+    def run(self, num_steps: int) -> list[dict[str, float]]:
+        ckpt_count = 0
+        while int(self.state["step"]) < num_steps:
+            try:
+                self.cluster.barrier("step")
+
+                # Finalize an overlapped checkpoint from the previous step
+                # (its exchange ran "behind" that step's compute).
+                pending = self.engine.finalize_async()
+                if pending is not None:
+                    self.engine._fault_hook = lambda phase: None
+                if pending is True:
+                    self._last_ckpt_step = self._pending_ckpt_step
+                    self.scheduler.record_checkpoint_duration(
+                        self.timers("checkpoint").mean
+                    )
+                elif pending is False:
+                    raise ProcessFaultException(
+                        sorted(self.cluster.failed), "checkpoint"
+                    )
+
+                # Fault injection models hosts dying *during* the step; the
+                # fault surfaces at the next barrier (step granularity).
+                step = int(self.state["step"])
+                for r in self.injector.kills_at_step(step):
+                    self.cluster.kill(r)
+                self.cluster.barrier("step")
+
+                with self.timers("train_step"):
+                    batch = self.data.next()
+                    self.state, metrics = self._train_step(self.state, batch)
+                    jax.block_until_ready(self.state["step"])
+                self.scheduler.record_step_time(self.timers("train_step").mean)
+                self.history.append(
+                    {"step": step, "loss": float(metrics["loss"])}
+                )
+
+                if self._checkpoint_due(int(self.state["step"])):
+                    kills = self.injector.kills_at_checkpoint(ckpt_count)
+                    hook_fired = {"done": False}
+
+                    def hook(phase: str) -> None:
+                        if phase == "after_create" and kills and not hook_fired["done"]:
+                            hook_fired["done"] = True
+                            for r in kills:
+                                self.cluster.kill(r)
+
+                    self.engine._fault_hook = hook
+                    ckpt_count += 1
+                    if self.tcfg.async_checkpoint:
+                        # Capture now; exchange overlaps the next step.
+                        with self.timers("checkpoint"):
+                            created = self.engine.checkpoint_async(
+                                {"step": int(self.state["step"])}
+                            )
+                        self._pending_ckpt_step = int(self.state["step"])
+                        if not created:
+                            raise ProcessFaultException(
+                                sorted(self.cluster.failed), "checkpoint"
+                            )
+                        continue
+                    with self.timers("checkpoint"):
+                        ok = self.engine.checkpoint({"step": int(self.state["step"])})
+                    self.engine._fault_hook = lambda phase: None
+                    if ok:
+                        self._last_ckpt_step = int(self.state["step"])
+                        self.scheduler.record_checkpoint_duration(
+                            self.timers("checkpoint").mean
+                        )
+                        if (
+                            self.tcfg.disk_path
+                            and self.engine.stats.created % self.tcfg.disk_every == 0
+                        ):
+                            from repro.core.disk import save_to_disk
+
+                            with self.timers("disk_checkpoint"):
+                                save_to_disk(self.engine, self.tcfg.disk_path)
+                    else:
+                        raise ProcessFaultException(
+                            sorted(self.cluster.failed), "checkpoint"
+                        )
+
+            except ProcessFaultException as e:
+                log.warning("fault caught in main loop: %s", e)
+                self.recover()
+        return self.history
+
+    # ------------------------------------------------------------------ #
+    def _checkpoint_due(self, step: int) -> bool:
+        if self.tcfg.checkpoint_period is not None:
+            return step > 0 and step % self.tcfg.checkpoint_period == 0
+        return self.scheduler.due(step, max(self._last_ckpt_step, 0))
+
+    def recover(self) -> None:
+        """Stabilize the parallel environment, then roll back (Algorithm 3)."""
+        if not self.engine.has_valid_checkpoint:
+            if self.tcfg.disk_path:
+                # Whole-system-loss path: rehydrate in-memory stores from the
+                # low-frequency disk tier, then recover normally.
+                from repro.core.disk import load_from_disk
+
+                log.warning("no in-memory checkpoint; falling back to disk tier")
+                for r in range(self.engine.n_ranks):
+                    if not self.engine.stores[r].alive:
+                        self.engine.stores[r].revive(r)
+                self.cluster._alive = set(range(self.cluster.n_ranks))
+                self.cluster.revoked = False
+                load_from_disk(self.engine, self.tcfg.disk_path)
+                meta = self.engine.restore()
+                self.n_recoveries += 1
+                log.info("recovered from disk to step %s", meta.get("step"))
+                return
+            raise RuntimeError(
+                "fault before the first checkpoint and no disk tier configured"
+            )
+        report = self.cluster.stabilize(self.tcfg.recovery_policy)  # revoke+shrink
+        if report.policy == "shrink":
+            meta = self._shrink_engine(report)
+        else:
+            meta = self.engine.restore()  # Algorithm 4 under the hood
+        # Restored entities include the data pipeline + timers + train state;
+        # the loop continues from the checkpointed step.
+        self.n_recoveries += 1
+        log.info(
+            "recovered to step %s (policy=%s, load_factor=%.2f)",
+            meta.get("step"), report.policy, report.load_factor,
+        )
+
+    def _shrink_engine(self, report) -> dict[str, Any]:
+        """Elastic shrink: restore from the OLD world's surviving stores, then
+        rebuild the engine over the dense-renumbered survivor set. The live
+        state pytree is global in this simulation, so 'survivors inherit the
+        failed ranks' blocks' happens inside restore_shards (the re-sharding
+        to new_n ranks occurs at the next checkpoint — the paper's post-
+        recovery load-balancing step)."""
+        old = self.engine
+        failed = set(report.failed)
+        old._alive_fn = lambda: {
+            r for r in range(old.n_ranks) if r not in failed
+        }
+        meta = old.restore()  # Algorithm 4 against the old rank space
+
+        new_n = report.n_ranks_after
+        self._swap_engine(new_n)
+        return meta
+
+    def _swap_engine(self, n_new: int) -> None:
+        """Rebuild the engine for a new world size; entities carry over and
+        re-shard themselves at the next checkpoint."""
+        old = self.engine
+        new_engine = CheckpointEngine(n_new, self.tcfg.engine)
+        for name, ent in old._entities.items():
+            new_engine._entities[name] = ent
+        new_engine._replicated = set(old._replicated)
+        self.cluster.n_ranks = n_new
+        self.cluster._alive = set(range(n_new))
+        self.cluster.attach_engine(new_engine)
+        self.engine = new_engine
+
+    def regrow(self, n_new: int) -> None:
+        """Elastic scale-up (paper §5.2.4: reintegrate resources during
+        runtime, 'also apart from a failure scenario'): expand the failure-
+        domain world to ``n_new`` ranks and immediately checkpoint so the new
+        ranks hold their re-balanced shards + backups."""
+        assert n_new >= self.engine.n_ranks
+        self._swap_engine(n_new)
+        ok = self.engine.checkpoint({"step": int(self.state["step"])})
+        if ok:
+            self._last_ckpt_step = int(self.state["step"])
+        log.info("regrown to %d ranks (checkpoint %s)", n_new, "ok" if ok else "failed")

@@ -1,0 +1,30 @@
+"""Sharding layer: logical-axis rules, ParamSpec declarations, mesh helpers."""
+
+from repro.sharding.spec import ParamSpec, stack_spec, init_tree, specs_to_shape_dtype
+from repro.sharding.axes import (
+    ShardingRules,
+    TP_RULES,
+    FSDP_RULES,
+    resolve_axis,
+    spec_to_pspec,
+    tree_pspecs,
+    zero1_pspec,
+)
+from repro.sharding.mesh import mesh_axis_size, data_axes, flat_device_index
+
+__all__ = [
+    "ParamSpec",
+    "stack_spec",
+    "init_tree",
+    "specs_to_shape_dtype",
+    "ShardingRules",
+    "TP_RULES",
+    "FSDP_RULES",
+    "resolve_axis",
+    "spec_to_pspec",
+    "tree_pspecs",
+    "zero1_pspec",
+    "mesh_axis_size",
+    "data_axes",
+    "flat_device_index",
+]

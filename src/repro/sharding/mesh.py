@@ -1,0 +1,35 @@
+"""Mesh helpers. The production mesh itself lives in repro.launch.mesh."""
+
+from __future__ import annotations
+
+import numpy as np
+from jax.sharding import Mesh
+
+
+def mesh_axis_size(mesh: Mesh, axes: tuple[str, ...] | str | None) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape.get(a, 1)
+    return size
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The axes that constitute the data-parallel/failure dimension."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def flat_device_index(mesh: Mesh) -> np.ndarray:
+    """device_id -> flat index in the mesh's row-major device ordering."""
+    return np.array([d.id for d in mesh.devices.flat])
+
+
+def hosts_of_mesh(mesh: Mesh, host_chips: int = 8) -> dict[int, list[int]]:
+    """host index -> device ids, assuming device ids dense & hosts contiguous."""
+    out: dict[int, list[int]] = {}
+    for d in mesh.devices.flat:
+        out.setdefault(d.id // host_chips, []).append(d.id)
+    return out

@@ -1,0 +1,26 @@
+"""Shared utilities: pytree helpers, logging, snapshot-able timers, HLO analysis."""
+
+from repro.utils.pytree import (
+    tree_bytes,
+    tree_num_params,
+    tree_allclose,
+    tree_equal,
+    tree_zeros_like,
+    tree_cast,
+    flatten_with_names,
+)
+from repro.utils.timing import Timer, TimerRegistry
+from repro.utils.logging import get_logger
+
+__all__ = [
+    "tree_bytes",
+    "tree_num_params",
+    "tree_allclose",
+    "tree_equal",
+    "tree_zeros_like",
+    "tree_cast",
+    "flatten_with_names",
+    "Timer",
+    "TimerRegistry",
+    "get_logger",
+]

@@ -1,0 +1,104 @@
+"""Pytree helpers used throughout the framework.
+
+The checkpointing core treats state as opaque pytrees (the paper's "black box"
+block data); these helpers provide sizing, comparison and casting on them.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _leaf_bytes(x: Any) -> int:
+    if hasattr(x, "nbytes"):
+        return int(x.nbytes)
+    if hasattr(x, "shape") and hasattr(x, "dtype"):
+        return int(np.prod(x.shape, dtype=np.int64)) * np.dtype(x.dtype).itemsize
+    return 0
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes of all array leaves (global, pre-sharding)."""
+    return sum(_leaf_bytes(l) for l in jax.tree.leaves(tree))
+
+
+def tree_num_params(tree: Any) -> int:
+    """Total element count of all array leaves."""
+    total = 0
+    for l in jax.tree.leaves(tree):
+        if hasattr(l, "shape"):
+            total += int(np.prod(l.shape, dtype=np.int64))
+    return total
+
+
+def tree_allclose(a: Any, b: Any, rtol: float = 1e-6, atol: float = 1e-6) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(np.allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol) for x, y in zip(la, lb))
+
+
+def tree_equal(a: Any, b: Any) -> bool:
+    """Bitwise equality of two pytrees (used for recovery-continuation tests)."""
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    if len(la) != len(lb):
+        return False
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        if x.shape != y.shape or x.dtype != y.dtype:
+            return False
+        if not np.array_equal(x, y, equal_nan=True):
+            return False
+    return True
+
+
+def tree_zeros_like(tree: Any) -> Any:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_cast(tree: Any, dtype: Any) -> Any:
+    """Cast floating leaves to ``dtype``; leave integer leaves untouched."""
+
+    def cast(x):
+        if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating):
+            return jnp.asarray(x, dtype)
+        return x
+
+    return jax.tree.map(cast, tree)
+
+
+def flatten_with_names(tree: Any) -> list[tuple[str, Any]]:
+    """Flatten a pytree into (dotted-path, leaf) pairs with deterministic order.
+
+    Paths name checkpoint "blocks"; the order is the canonical serialization
+    order used by the host-tier snapshot store.
+    """
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = ".".join(_key_str(k) for k in path)
+        out.append((name, leaf))
+    return out
+
+
+def _key_str(k: Any) -> str:
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return str(k.idx)
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return str(k.name)
+    if isinstance(k, jax.tree_util.FlattenedIndexKey):
+        return str(k.key)
+    return str(k)
+
+
+def tree_map_with_names(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """Map ``fn(name, leaf)`` over a pytree, preserving structure."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = [fn(".".join(_key_str(k) for k in path), leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves)

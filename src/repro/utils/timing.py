@@ -1,0 +1,79 @@
+"""Timers that participate in checkpointing.
+
+The paper explicitly lists timers among the entities that must be snapshot-able
+("Others are for instance timers that need to be reset to the timestamp of the
+last valid checkpoint", §5.2.1). ``Timer`` therefore implements the
+``Snapshottable`` protocol (duck-typed here to avoid an import cycle with
+``repro.core.snapshot``): ``snapshot() / restore(snap) / swap()``.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Timer:
+    """Accumulating wall-clock timer with double-buffered snapshots."""
+
+    name: str
+    total: float = 0.0
+    count: int = 0
+    _start: float | None = None
+
+    def start(self) -> None:
+        self._start = time.perf_counter()
+
+    def stop(self) -> float:
+        assert self._start is not None, f"Timer {self.name} not started"
+        dt = time.perf_counter() - self._start
+        self.total += dt
+        self.count += 1
+        self._start = None
+        return dt
+
+    def __enter__(self) -> "Timer":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        if self._start is not None:
+            self.stop()
+
+    @property
+    def mean(self) -> float:
+        return self.total / max(self.count, 1)
+
+    # --- Snapshottable protocol -------------------------------------------
+    def snapshot(self):
+        return (self.total, self.count)
+
+    def restore(self, snap) -> None:
+        self.total, self.count = snap
+        self._start = None
+
+
+class TimerRegistry:
+    """Named timer collection; the whole registry registers as one snapshot entity."""
+
+    def __init__(self) -> None:
+        self._timers: dict[str, Timer] = {}
+
+    def __call__(self, name: str) -> Timer:
+        if name not in self._timers:
+            self._timers[name] = Timer(name)
+        return self._timers[name]
+
+    def snapshot(self):
+        return {k: t.snapshot() for k, t in self._timers.items()}
+
+    def restore(self, snap) -> None:
+        for k, s in snap.items():
+            self(k).restore(s)
+
+    def report(self) -> dict[str, dict[str, float]]:
+        return {
+            k: {"total_s": t.total, "count": t.count, "mean_s": t.mean}
+            for k, t in sorted(self._timers.items())
+        }

@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests and benches must see exactly ONE device; only the dry-run sets
+# the 512-device flag (and it does so in its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,130 @@
+"""Property tests for the paper's Algorithms 1 & 4 (hypothesis)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distribution import (
+    DataLostError,
+    inverse_perm,
+    multi_copy_shifts,
+    pairwise_recovery,
+    pairwise_schedule,
+    parity_groups,
+    perm_pairs,
+    recovery_plan,
+    shrink_reassignment,
+)
+
+ranks = st.integers(min_value=2, max_value=512)
+
+
+@given(ranks)
+def test_pairwise_send_recv_consistency(n):
+    """If i sends to j, then j receives from i (Algorithm 1 is a consistent
+    schedule across all ranks)."""
+    for r in range(n):
+        send_to, _ = pairwise_schedule(n, r)
+        _, recv_from = pairwise_schedule(n, send_to)
+        assert recv_from == r
+
+
+@given(ranks)
+def test_pairwise_is_permutation(n):
+    """Every rank receives exactly one backup (no overloaded hosts)."""
+    dests = [pairwise_schedule(n, r)[0] for r in range(n)]
+    assert sorted(dests) == list(range(n))
+
+
+@given(st.integers(min_value=2, max_value=512))
+def test_pairwise_never_self(n):
+    """A backup on the failing host itself would be worthless."""
+    for r in range(n):
+        send_to, _ = pairwise_schedule(n, r)
+        if n > 1:
+            assert send_to != r
+
+
+@given(st.integers(min_value=4, max_value=512))
+def test_pairwise_guards_contiguous_nodes(n):
+    """The N/2 shift lands the backup at distance >= n//2 (different node for
+    node-contiguous ranks — the paper's single-node-failure guard)."""
+    for r in range(n):
+        send_to, _ = pairwise_schedule(n, r)
+        dist = min((send_to - r) % n, (r - send_to) % n)
+        assert dist == n // 2 or (n % 2 == 1 and dist >= n // 2 - 1)
+
+
+@given(ranks, st.data())
+def test_recovery_plan_covers_all_origins(n, data):
+    """Algorithm 4: after any single failure, every origin's blocks have
+    exactly one responsible surviving new rank."""
+    failed_rank = data.draw(st.integers(min_value=0, max_value=n - 1))
+    failed = {failed_rank}
+    # With an odd-n pairwise schedule the partner may coincide in degenerate
+    # tiny cases; recovery must still either assign or raise, never silently drop.
+    try:
+        plan = recovery_plan(n, failed)
+    except DataLostError:
+        send_to, _ = pairwise_schedule(n, failed_rank)
+        assert send_to in failed
+        return
+    reassign = shrink_reassignment(n, failed)
+    new_ranks = set(reassign.values())
+    assert set(plan) == set(range(n))
+    for origin, new_rank in plan.items():
+        assert new_rank in new_ranks
+
+
+@given(ranks, st.data())
+def test_recovery_plan_pair_failure_raises(n, data):
+    """If a rank AND its backup holder both fail, Algorithm 4 must raise."""
+    r = data.draw(st.integers(min_value=0, max_value=n - 1))
+    partner = pairwise_schedule(n, r)[0]
+    if partner == r:
+        return
+    with pytest.raises(DataLostError):
+        recovery_plan(n, {r, partner})
+
+
+@given(ranks)
+def test_shrink_reassignment_dense(n):
+    failed = {0, n - 1} if n > 2 else {0}
+    m = shrink_reassignment(n, failed)
+    assert sorted(m.values()) == list(range(n - len(failed)))
+    assert all(r not in failed for r in m)
+
+
+@given(st.integers(min_value=2, max_value=256))
+def test_perm_pairs_invertible(n):
+    pairs = perm_pairs(n, "pairwise")
+    inv = inverse_perm(pairs)
+    fwd = dict(pairs)
+    back = dict(inv)
+    for src in range(n):
+        assert back[fwd[src]] == src
+
+
+@given(st.integers(min_value=2, max_value=128), st.integers(min_value=1, max_value=4))
+def test_multi_copy_shifts_distinct(n, r_copies):
+    shifts = multi_copy_shifts(n, r_copies)
+    assert len(set(shifts)) == len(shifts)
+    assert all(0 < s < n or n <= 2 for s in shifts)
+
+
+@given(st.sampled_from([2, 4, 8, 16]), st.sampled_from([16, 32, 64, 128, 256]))
+def test_parity_groups_partition(g, n):
+    if n % g:
+        return
+    groups = parity_groups(n, g)
+    seen = [m for grp in groups for m in grp.members]
+    assert sorted(seen) == list(range(n))
+
+
+def test_pairwise_matches_paper_example():
+    """Spot-check Algorithm 1 arithmetic for n=8 (shift 4)."""
+    assert pairwise_schedule(8, 0) == (4, 4)
+    assert pairwise_schedule(8, 1) == (5, 5)
+    assert pairwise_schedule(8, 5) == (1, 1)
+    # odd n exercised too
+    assert pairwise_schedule(5, 0) == (2, 3)
+    assert pairwise_schedule(5, 3) == (0, 1)

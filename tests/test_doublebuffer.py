@@ -1,0 +1,82 @@
+"""Algorithm 2's double-buffer invariants."""
+
+import pytest
+
+from repro.core.doublebuffer import DoubleBuffer
+from repro.core.snapshot import SnapshotRegistry
+
+
+def test_swap_requires_write():
+    b = DoubleBuffer("t")
+    with pytest.raises(RuntimeError):
+        b.swap()
+
+
+def test_read_only_untouched_until_swap():
+    b = DoubleBuffer("t")
+    b.write({"step": 1})
+    b.swap()
+    assert b.read_only == {"step": 1}
+    b.write({"step": 2})
+    # A fault here discards the in-flight write; the valid checkpoint survives.
+    assert b.read_only == {"step": 1}
+    b.discard_writable()
+    assert b.read_only == {"step": 1}
+    assert b.writable is None
+
+
+def test_swap_is_pointer_swap():
+    b = DoubleBuffer("t")
+    payload1, payload2 = {"x": 1}, {"x": 2}
+    b.write(payload1)
+    b.swap()
+    b.write(payload2)
+    b.swap()
+    assert b.read_only is payload2          # no copy
+    assert b.writable is payload1           # old buffer recycled
+    assert b.generation == 2
+
+
+class _Entity:
+    def __init__(self):
+        self.value = 0
+
+    def snapshot(self):
+        return self.value
+
+    def restore(self, snap):
+        self.value = snap
+
+
+def test_registry_algorithm2_cycle():
+    reg = SnapshotRegistry()
+    e = _Entity()
+    reg.register("e", e)
+    e.value = 10
+    reg.create_all()
+    reg.swap_all()
+    e.value = 99
+    reg.restore_all()
+    assert e.value == 10
+
+    # fault during second checkpoint: writable discarded, restore gives gen-1
+    e.value = 20
+    reg.create_all()
+    reg.discard_writable()      # handshake failed
+    e.value = 77
+    reg.restore_all()
+    assert e.value == 10
+
+
+def test_registry_duplicate_name():
+    reg = SnapshotRegistry()
+    reg.register("e", _Entity())
+    with pytest.raises(KeyError):
+        reg.register("e", _Entity())
+
+
+def test_registry_no_checkpoint_raises():
+    reg = SnapshotRegistry()
+    reg.register("e", _Entity())
+    with pytest.raises(RuntimeError):
+        reg.restore_all()

@@ -1,0 +1,65 @@
+"""Young/Daly interval theory (paper eqs. 1, 3, 7; fig 6 values)."""
+
+import math
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.interval import (
+    CheckpointScheduler,
+    memory_factor,
+    optimal_interval,
+    overhead,
+    parity_memory_factor,
+    system_mtbf,
+)
+
+
+def test_eq1_mtbf_scales_inverse_with_nodes():
+    assert system_mtbf(3600.0, 1) == 3600.0
+    assert system_mtbf(3600.0, 100) == 36.0
+
+
+@given(st.floats(min_value=1.0, max_value=1e7), st.floats(min_value=1e-3, max_value=1e3))
+def test_eq3_first_order_optimum(mu, c):
+    t = optimal_interval(mu, c)
+    assert t == pytest.approx(math.sqrt(2 * mu * c))
+
+
+@given(st.floats(min_value=100.0, max_value=1e7), st.floats(min_value=1e-3, max_value=10.0))
+def test_eq7_overhead_formula(mu, c):
+    ov = overhead(c, mu)
+    assert ov == pytest.approx(c / math.sqrt(2 * mu * c))
+
+
+def test_paper_fig6_claims():
+    """Paper: at mu = 1h and the measured SuperMUC checkpoint times, overhead
+    stays below ~4% (2^15 ranks: C < 7s)."""
+    mu = 3600.0
+    assert overhead(7.0, mu) < 0.04          # claim (ii): < 4% at C<=7s
+    assert overhead(2.0, mu) < 0.03          # 2^13-rank scenario (a)
+
+
+def test_eq2_memory_factors():
+    assert memory_factor(2) == 5.0           # pairwise: own+partner double-buffered
+    assert memory_factor(1) == 3.0
+    assert parity_memory_factor(4) == pytest.approx(1 + 2 * 1.25)
+
+
+def test_scheduler_adapts():
+    s = CheckpointScheduler(mtbf_s=3600.0, step_time_s=1.0, checkpoint_s=2.0)
+    p0 = s.period_steps
+    assert p0 == int(round(math.sqrt(2 * 3600 * 2.0)))
+    s.record_checkpoint_duration(8.0)
+    for _ in range(20):
+        s.record_checkpoint_duration(8.0)
+    assert s.period_steps > p0               # costlier C -> longer interval
+    assert s.due(p0 * 100, 0)
+    assert not s.due(1, 0)
+
+
+def test_overhead_monotonic_in_system_size():
+    """Larger systems -> smaller mu (eq 1) -> larger overhead at T_opt."""
+    c = 5.0
+    ovs = [overhead(c, system_mtbf(87600.0 * 3600, n)) for n in (2**10, 2**13, 2**15)]
+    assert ovs[0] < ovs[1] < ovs[2]

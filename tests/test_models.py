@@ -1,0 +1,213 @@
+"""Per-architecture smoke tests (the assignment's reduced-config requirement):
+instantiate a REDUCED config of each family and run one forward/train step on
+CPU asserting output shapes + no NaNs; plus decode-vs-prefill consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CONFIGS, list_archs
+from repro.models import build_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _make_batch(cfg, B=2, S=32):
+    if cfg.is_encoder:
+        return {
+            "frames": jax.random.normal(KEY, (B, S, cfg.frontend_stub_dim)),
+            "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+            "mask": jnp.ones((B, S), bool),
+        }
+    batch = {
+        "tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.vision_tokens:
+        batch["vision"] = jax.random.normal(KEY, (B, cfg.vision_tokens, cfg.frontend_stub_dim))
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_train_step(arch):
+    """One forward + backward + AdamW step on the reduced config."""
+    from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+
+    cfg = CONFIGS[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(KEY)
+    batch = _make_batch(cfg)
+
+    def step(params, opt, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch), has_aux=True
+        )(params)
+        new_params, new_opt, _ = adamw_update(
+            grads, opt, jnp.zeros((), jnp.int32), AdamWConfig(lr=1e-3),
+            param_dtype=cfg.param_dtype,
+        )
+        return loss, new_params, new_opt
+
+    opt = init_opt_state(params)
+    loss, new_params, _ = jax.jit(step)(params, opt, batch)
+    assert jnp.isfinite(loss), arch
+    assert float(loss) > 0
+    for old, new in zip(jax.tree.leaves(params), jax.tree.leaves(new_params)):
+        assert old.shape == new.shape
+        assert not np.any(np.isnan(np.asarray(new, np.float32)))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_forward_shapes(arch):
+    cfg = CONFIGS[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(KEY)
+    batch = _make_batch(cfg, B=2, S=32)
+    if cfg.is_encoder:
+        logits, cache = model.prefill(params, frames=batch["frames"])
+        assert logits.shape == (2, 32, cfg.padded_vocab)
+        assert cache is None
+    else:
+        kw = {"vision": batch["vision"]} if cfg.vision_tokens else {}
+        logits, cache = model.prefill(params, tokens=batch["tokens"], **kw)
+        assert logits.shape == (2, cfg.padded_vocab)
+        assert cache is not None
+    assert not np.any(np.isnan(np.asarray(logits)))
+
+
+DECODE_ARCHS = [a for a in list_archs() if not CONFIGS[a].is_encoder]
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_decode_matches_prefill(arch):
+    """serve_step at position S-1 must reproduce prefill logits (per arch)."""
+    cfg = CONFIGS[arch].reduced()
+    if cfg.has_moe:
+        cfg = cfg.with_(moe_capacity_factor=100.0)  # dropless for exactness
+    model = build_model(cfg)
+    params = model.init(KEY)
+    B, S = 2, 32
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.vision_tokens:
+        kw["vision"] = jax.random.normal(KEY, (B, cfg.vision_tokens, cfg.frontend_stub_dim))
+    logits_full, _ = jax.jit(lambda p, t: model.prefill(p, tokens=t, **kw))(params, toks)
+    _, cache_prefix = jax.jit(lambda p, t: model.prefill(p, tokens=t, **kw))(params, toks[:, : S - 1])
+    full_cache = model.init_cache(B, S)
+    merged = jax.tree.map(
+        lambda fc, pc: pc if fc.shape == pc.shape
+        else fc.at[tuple(slice(0, s) for s in pc.shape)].set(pc),
+        full_cache, cache_prefix,
+    )
+    logits_dec, _ = jax.jit(lambda p, c, t: model.decode_step(p, c, t, jnp.int32(S - 1)))(
+        params, merged, toks[:, S - 1]
+    )
+    err = np.abs(np.asarray(logits_dec) - np.asarray(logits_full)).max()
+    assert err < 5e-4, (arch, err)
+
+
+def test_sliding_window_restricts_attention():
+    """A token beyond the window must not influence a local-attn layer."""
+    cfg = CONFIGS["mixtral-8x7b"].reduced().with_(
+        sliding_window=4, num_layers=1, layer_pattern=("local",),
+        num_experts=0, experts_per_tok=0, d_ff=64,
+    )
+    model = build_model(cfg)
+    params = model.init(KEY)
+    toks = jax.random.randint(KEY, (1, 16), 0, cfg.vocab_size)
+    toks2 = toks.at[:, 0].set((toks[:, 0] + 1) % cfg.vocab_size)  # distant change
+    l1, _ = model.prefill(params, tokens=toks)
+    l2, _ = model.prefill(params, tokens=toks2)
+    # last position attends only to [12..15] -> logits identical
+    assert np.allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)
+
+
+def test_global_attention_sees_everything():
+    cfg = CONFIGS["llama3.2-1b"].reduced().with_(num_layers=1)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    toks = jax.random.randint(KEY, (1, 16), 0, cfg.vocab_size)
+    toks2 = toks.at[:, 0].set((toks[:, 0] + 1) % cfg.vocab_size)
+    l1, _ = model.prefill(params, tokens=toks)
+    l2, _ = model.prefill(params, tokens=toks2)
+    assert not np.allclose(np.asarray(l1), np.asarray(l2), atol=1e-6)
+
+
+def test_causality():
+    """Changing a future token must not change past logits."""
+    cfg = CONFIGS["llama3.2-1b"].reduced()
+    model = build_model(cfg)
+    params = model.init(KEY)
+    from repro.models import lm
+
+    toks = jax.random.randint(KEY, (1, 16), 0, cfg.vocab_size)
+    h1, _, _ = lm.forward(params, cfg, tokens=toks)
+    toks2 = toks.at[:, 10].set((toks[:, 10] + 3) % cfg.vocab_size)
+    h2, _, _ = lm.forward(params, cfg, tokens=toks2)
+    assert np.allclose(np.asarray(h1[:, :10]), np.asarray(h2[:, :10]), atol=1e-6)
+    assert not np.allclose(np.asarray(h1[:, 10:]), np.asarray(h2[:, 10:]), atol=1e-6)
+
+
+def test_encoder_is_bidirectional():
+    cfg = CONFIGS["hubert-xlarge"].reduced()
+    model = build_model(cfg)
+    params = model.init(KEY)
+    frames = jax.random.normal(KEY, (1, 16, cfg.frontend_stub_dim))
+    frames2 = frames.at[:, 15].add(1.0)
+    l1, _ = model.prefill(params, frames=frames)
+    l2, _ = model.prefill(params, frames=frames2)
+    # changing the LAST frame changes the FIRST position's logits (bidirectional)
+    assert not np.allclose(np.asarray(l1[:, 0]), np.asarray(l2[:, 0]), atol=1e-7)
+
+
+def test_moe_capacity_and_aux_loss():
+    from repro.models import moe
+
+    cfg = CONFIGS["mixtral-8x7b"].reduced()
+    assert moe.expert_capacity(64, 4, 2, 1.25) == 40
+    assert moe.expert_capacity(64, 4, 2, 100.0) == 64  # dropless cap
+    model = build_model(cfg)
+    params = model.init(KEY)
+    batch = _make_batch(cfg)
+    loss, metrics = model.loss(params, batch)
+    assert float(metrics["moe_aux"]) > 0.0
+
+
+def test_ssd_chunked_matches_sequential():
+    """Mamba2: the chunked SSD dual form must equal the token-by-token
+    recurrence (the state-space duality itself)."""
+    from repro.models import ssm
+
+    cfg = CONFIGS["mamba2-780m"].reduced()
+    p = jax.tree.map(
+        lambda s: s, ssm.abstract_params(cfg), is_leaf=lambda x: hasattr(x, "shape")
+    )
+    from repro.sharding.spec import init_tree
+
+    params = init_tree(KEY, ssm.abstract_params(cfg))
+    x = jax.random.normal(KEY, (2, 32, cfg.d_model)) * 0.3
+    out_chunk, cache = ssm.apply(params, x, cfg, chunk=8)
+
+    # sequential decode over the same tokens
+    c = {
+        "conv": jnp.zeros((2, cfg.ssm_conv - 1, ssm.conv_dim(cfg)), jnp.float32),
+        "state": jnp.zeros((2, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+    }
+    outs = []
+    for t in range(32):
+        o, c = ssm.decode(params, x[:, t : t + 1], c, cfg)
+        outs.append(o)
+    out_seq = jnp.concatenate(outs, axis=1)
+    assert np.allclose(np.asarray(out_chunk), np.asarray(out_seq), atol=2e-4)
+    assert np.allclose(np.asarray(cache["state"]), np.asarray(c["state"]), atol=2e-3)
+
+
+def test_vocab_padding_masked():
+    cfg = CONFIGS["granite-3-8b"].reduced().with_(vocab_size=200)  # pad to 256
+    model = build_model(cfg)
+    params = model.init(KEY)
+    toks = jax.random.randint(KEY, (1, 8), 0, 200)
+    logits, _ = model.prefill(params, tokens=toks)
+    assert logits.shape[-1] == 256
+    assert np.all(np.asarray(logits[..., 200:]) < -1e29)

@@ -1,0 +1,232 @@
+"""Runtime units: cluster semantics, failure injection, straggler detection,
+state sharding plan, data pipeline determinism, optimizer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import CONFIGS
+from repro.runtime.cluster import VirtualCluster
+from repro.runtime.failures import FailureInjector, ProcessFaultException
+from repro.runtime.state import ShardPlan, ShardedStateEntity
+from repro.runtime.straggler import StragglerDetector, worth_evicting
+
+
+# ---------------------------------------------------------------------------
+# cluster
+# ---------------------------------------------------------------------------
+
+def test_cluster_revoke_semantics():
+    c = VirtualCluster(4)
+    c.barrier()  # fine
+    c.kill(2)
+    with pytest.raises(ProcessFaultException):
+        c.barrier()
+    # every subsequent communication fails until stabilized (MPI_ERR_REVOKED)
+    with pytest.raises(ProcessFaultException):
+        c.barrier()
+    rep = c.stabilize("shrink")
+    c.barrier()  # stabilized
+    assert rep.policy == "shrink"
+    assert rep.n_ranks_after == 3
+    assert rep.load_factor == pytest.approx(4 / 3)
+
+
+def test_cluster_spares_then_shrink_fallback():
+    c = VirtualCluster(4, n_spares=1)
+    c.kill(0)
+    rep = c.stabilize("spare")
+    assert rep.policy == "spare" and rep.spares_used == 1
+    c.kill(1)
+    rep = c.stabilize("spare")  # no spares left -> shrink fallback
+    assert rep.policy == "shrink"
+
+
+def test_cluster_regrow():
+    c = VirtualCluster(4)
+    c.regrow(6)
+    assert c.n_ranks == 6 and len(c.alive()) == 6
+
+
+def test_injector_fire_once_across_rollbacks():
+    inj = FailureInjector(4, schedule={5: [2]})
+    assert inj.kills_at_step(5) == [2]
+    assert inj.kills_at_step(5) == []  # replayed step: no double kill
+
+
+def test_injector_mtbf_rate():
+    """Empirical kill rate tracks 1/mtbf per rank (eq. 1 scaling input)."""
+    inj = FailureInjector(64, mtbf_rank_s=100.0, step_time_s=1.0, seed=3)
+    kills = sum(len(inj.kills_at_step(s)) for s in range(400))
+    expect = 64 * 400 / 100.0
+    assert 0.5 * expect < kills < 1.5 * expect
+    assert inj.expected_system_mtbf_s() == pytest.approx(100.0 / 64)
+
+
+# ---------------------------------------------------------------------------
+# straggler
+# ---------------------------------------------------------------------------
+
+def test_straggler_flag_and_evict():
+    d = StragglerDetector(4, threshold=1.5, window=4, evict_after=2)
+    rep = None
+    for step in range(16):
+        times = {0: 1.0, 1: 1.0, 2: 1.0, 3: 3.0}
+        r = d.record_step(times)
+        if r:
+            rep = r
+    assert rep is not None
+    assert rep.flagged == [3]
+    assert rep.evict == [3]
+    assert rep.slowdowns[3] > 2.0
+
+
+def test_straggler_recovers():
+    d = StragglerDetector(4, threshold=1.5, window=4, evict_after=3)
+    for _ in range(4):
+        d.record_step({0: 1.0, 1: 1.0, 2: 1.0, 3: 3.0})
+    for _ in range(20):
+        rep = d.record_step({0: 1.0, 1: 1.0, 2: 1.0, 3: 1.0})
+    assert rep.flagged == []
+
+
+def test_worth_evicting_tradeoff():
+    assert worth_evicting(slowdown=2.0, step_time_s=1.0, rollback_steps=50, horizon_steps=1000)
+    assert not worth_evicting(slowdown=1.05, step_time_s=1.0, rollback_steps=500, horizon_steps=1000)
+
+
+# ---------------------------------------------------------------------------
+# shard plan / state entity
+# ---------------------------------------------------------------------------
+
+def test_shard_plan_roundtrip():
+    mesh = AbstractMesh((4, 2), ("data", "model"))
+    sds = {
+        "a": jax.ShapeDtypeStruct((8, 6), jnp.float32),   # data on dim 0
+        "b": jax.ShapeDtypeStruct((5,), jnp.float32),     # replicated
+        "c": jax.ShapeDtypeStruct((2, 12), jnp.float32),  # data on dim 1
+    }
+    pspecs = {"a": P("data", "model"), "b": P(), "c": P(None, ("data",))}
+    plan = ShardPlan.from_pspecs(sds, pspecs)
+    assert plan.dims == [0, None, 1]
+
+    live = {
+        "a": np.arange(48, dtype=np.float32).reshape(8, 6),
+        "b": np.arange(5, dtype=np.float32),
+        "c": np.arange(24, dtype=np.float32).reshape(2, 12),
+    }
+    holder = {"state": {k: v.copy() for k, v in live.items()}}
+    ent = ShardedStateEntity(lambda: holder["state"], lambda s: holder.update(state=s), plan)
+    shards = ent.snapshot_shards(4)
+    assert shards[1]["a"].shape == (2, 6)
+    assert shards[1]["c"].shape == (2, 3)
+    assert shards[1]["b"].shape == (5,)  # replicated to each rank
+
+    holder["state"] = {k: np.zeros_like(v) for k, v in live.items()}
+    ent.restore_shards({r: shards[r] for r in range(4)})
+    for k in live:
+        assert np.array_equal(holder["state"][k], live[k]), k
+
+
+def test_shard_plan_non_divisible_replicates():
+    mesh = AbstractMesh((4, 2), ("data", "model"))
+    sds = {"a": jax.ShapeDtypeStruct((6, 4), jnp.float32)}  # 6 % 4 != 0
+    plan = ShardPlan.from_pspecs(sds, {"a": P("data", None)})
+    assert plan.split_dim(0, 4) is None  # falls back to replication
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_pipeline_deterministic_and_snapshot():
+    from repro.data.synthetic import SyntheticDataPipeline
+
+    cfg = CONFIGS["llama3.2-1b"].reduced()
+    p1 = SyntheticDataPipeline(cfg, batch=2, seq=16, seed=7)
+    b0, b1 = p1.next(), p1.next()
+    snap = p1.snapshot()
+    b2 = p1.next()
+
+    p2 = SyntheticDataPipeline(cfg, batch=2, seq=16, seed=7)
+    p2.restore(snap)
+    b2_again = p2.next()
+    assert np.array_equal(np.asarray(b2["tokens"]), np.asarray(b2_again["tokens"]))
+    assert not np.array_equal(np.asarray(b0["tokens"]), np.asarray(b1["tokens"]))
+    # labels are next-token targets
+    assert np.array_equal(np.asarray(b0["labels"][:, :-1]), np.asarray(b0["tokens"][:, 1:]))
+
+
+def test_data_pipeline_learnable():
+    """The bigram stream must be predictable from the previous token."""
+    import jax as _jax
+
+    from repro.data.synthetic import make_batch
+
+    cfg = CONFIGS["llama3.2-1b"].reduced()
+    b = make_batch(cfg, 0, 0, 8, 128)
+    toks = np.asarray(b["tokens"])
+    perm = np.asarray(_jax.random.permutation(_jax.random.PRNGKey(0 ^ 0x5EED), cfg.vocab_size))
+    follows = toks[:, 1:] == perm[toks[:, :-1]]
+    assert follows.mean() > 0.85  # 5% noise
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_matches_reference_math():
+    from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+
+    hp = AdamWConfig(lr=0.1, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0, grad_clip=0.0)
+    params = {"w": jnp.asarray([1.0, 2.0], jnp.float32)}
+    opt = init_opt_state(params)
+    grads = {"w": jnp.asarray([0.5, -0.5], jnp.float32)}
+    new_params, new_opt, _ = adamw_update(grads, opt, jnp.asarray(0), hp, param_dtype=jnp.float32)
+    m = 0.1 * 0.5
+    v = 0.01 * 0.25
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.99)
+    expect = 1.0 - 0.1 * mhat / (np.sqrt(vhat) + 1e-8)
+    assert np.asarray(new_params["w"])[0] == pytest.approx(expect, rel=1e-5)
+
+
+def test_adamw_grad_clip():
+    from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state, global_norm
+
+    hp = AdamWConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(4, jnp.float32)}
+    opt = init_opt_state(params)
+    grads = {"w": jnp.full(4, 100.0, jnp.float32)}
+    _, _, stats = adamw_update(grads, opt, jnp.asarray(0), hp, param_dtype=jnp.float32)
+    assert float(stats["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_warmup_cosine_shape():
+    from repro.optim.schedule import warmup_cosine
+
+    s = warmup_cosine(1.0, 10, 100)
+    assert float(s(0)) < 0.2
+    assert float(s(9)) == pytest.approx(1.0, abs=0.01)
+    assert float(s(99)) < 0.2
+    assert float(s(50)) < float(s(10))
+
+
+# ---------------------------------------------------------------------------
+# timers (snapshot-able entities, paper §5.2.1)
+# ---------------------------------------------------------------------------
+
+def test_timers_snapshot_restore():
+    from repro.utils.timing import TimerRegistry
+
+    reg = TimerRegistry()
+    with reg("step"):
+        pass
+    snap = reg.snapshot()
+    with reg("step"):
+        pass
+    assert reg("step").count == 2
+    reg.restore(snap)
+    assert reg("step").count == 1

@@ -1,0 +1,54 @@
+"""Fault-tolerant serving: generations identical across failures."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import CONFIGS
+from repro.models import build_model
+from repro.runtime.failures import FailureInjector
+from repro.runtime.server import Server, ServerConfig
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = CONFIGS["gemma2-2b"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    prompts = np.random.default_rng(0).integers(0, cfg.vocab_size, (4, 8), dtype=np.int32)
+    return cfg, model, params, prompts
+
+
+def _serve(model, params, prompts, injector=None):
+    s = Server(
+        model,
+        ServerConfig(batch=4, max_seq=40, checkpoint_every_tokens=6),
+        params=params,
+        injector=injector,
+    )
+    out = s.prefill_and_decode(prompts, 24)
+    return s, out
+
+
+def test_generation_identical_after_faults(setup):
+    cfg, model, params, prompts = setup
+    _, ref = _serve(model, params, prompts)
+    inj = FailureInjector(4, schedule={9: [2], 17: [0]})
+    s, out = _serve(model, params, prompts, injector=inj)
+    assert s.n_recoveries == 2
+    assert np.array_equal(ref, out)
+
+
+def test_sessions_survive_failure_burst(setup):
+    cfg, model, params, prompts = setup
+    _, ref = _serve(model, params, prompts)
+    inj = FailureInjector(4, schedule={10: [1], 11: [2]})
+    s, out = _serve(model, params, prompts, injector=inj)
+    assert np.array_equal(ref, out)
+
+
+def test_encoder_arch_rejected():
+    cfg = CONFIGS["hubert-xlarge"].reduced()
+    model = build_model(cfg)
+    with pytest.raises(AssertionError):
+        Server(model, ServerConfig(batch=2, max_seq=16))
