@@ -3,6 +3,7 @@
 Prints ``name,us_per_call,derived`` CSV rows:
   * bench_checkpoint_scaling — Fig 4/5 (weak scaling of checkpoint creation)
   * bench_recovery           — Fig 7   (weak scaling of recovery, zero-comm)
+  * bench_elastic_recovery   — N-to-M restore time + bytes moved vs lower bound
   * bench_overhead           — Fig 6   (Daly-interval overhead vs MTBF)
   * bench_fault_e2e          — Fig 8   (kill-signal fault tolerance, e2e)
   * bench_kernels            — checkpoint hot-path Pallas kernels
@@ -18,6 +19,7 @@ import traceback
 def main() -> None:
     from benchmarks import (
         bench_checkpoint_scaling,
+        bench_elastic_recovery,
         bench_fault_e2e,
         bench_kernels,
         bench_overhead,
@@ -30,6 +32,7 @@ def main() -> None:
     for mod in (
         bench_checkpoint_scaling,
         bench_recovery,
+        bench_elastic_recovery,
         bench_overhead,
         bench_fault_e2e,
         bench_kernels,

@@ -24,6 +24,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Protocol
 
+import numpy as np
+
 from repro.core import distribution as dist
 from repro.core import parity as parity_mod
 from repro.core.hoststore import HostStore, StorePayload
@@ -108,8 +110,13 @@ class CheckpointEngine:
         self._fault_hook = fault_hook or (lambda phase: None)
         self._pending: Any = None  # un-finalized async snapshot
         self.stats = CheckpointStats()
+        self.last_elastic_report: Any = None  # ElasticReport of the last N-to-M restore
         if cfg.parity_group:
-            assert n_ranks % cfg.parity_group == 0, (n_ranks, cfg.parity_group)
+            # Non-dividing world sizes get a short last group (parity_groups):
+            # the elastic N-to-M path lands on arbitrary M. Group size 1 is
+            # the degenerate neighbor-copy scheme (a singleton's parity is
+            # its snapshot, stored on the next group) and stays allowed.
+            assert cfg.parity_group >= 1, cfg.parity_group
 
     # ------------------------------------------------------------------ #
     # registration
@@ -155,9 +162,19 @@ class CheckpointEngine:
             # -- create: every entity serializes its per-rank shards ---------
             packed: dict[str, list[tuple[Any, Manifest]]] = {}
             packed_partner: dict[str, list[tuple[Any, Manifest]]] = {}
+            coords_tables: dict[str, Any] = {}
             for name, ent in self._entities.items():
                 shards = ent.snapshot_shards(self.n_ranks)
                 packed[name] = [pack_bytes(s) for s in shards]
+                if hasattr(ent, "shard_coords"):
+                    # Global-coordinate manifest: each shard records its slice
+                    # of the logical entity, the layer elastic N-to-M restore
+                    # repartitions on. The full table is tiny and replicated
+                    # with every store's meta (like the parity manifests).
+                    table = ent.shard_coords(self.n_ranks)
+                    for r, (_, man) in enumerate(packed[name]):
+                        man.coords = table[r]
+                    coords_tables[name] = table
                 if hasattr(ent, "partner_payload"):
                     # Exchange only the uniquely-owned subset (replicated
                     # leaves exist on every rank already — paper §5.2.1).
@@ -170,6 +187,8 @@ class CheckpointEngine:
 
             for r in alive0:
                 payload = StorePayload(meta=dict(meta or {}))
+                if coords_tables:
+                    payload.meta["coords"] = dict(coords_tables)
                 for name, shards in packed.items():
                     flat, man = shards[r]
                     payload.own[name] = (flat, man)
@@ -296,8 +315,10 @@ class CheckpointEngine:
                     continue  # equal on all ranks: no parity needed
                 bufs = [shards[m][0] for m in grp.members]
                 parity = parity_mod.encode_parity(bufs)
-                stripes = parity_mod.split_stripes(parity, g)
+                # Stripe over however many members the *target* group has
+                # (ragged last groups appear at elastic world sizes).
                 target_grp = groups[(gi + 1) % n_groups]
+                stripes = parity_mod.split_stripes(parity, len(target_grp.members))
                 for j, member in enumerate(target_grp.members):
                     st = self.stores[member]
                     if not st.alive:
@@ -356,28 +377,140 @@ class CheckpointEngine:
         failed = set(range(self.n_ranks)) - alive
 
         for name, ent in self._entities.items():
-            shards: dict[int, Any] = {}
-            partials: dict[int, Any] = {}
-            for origin in range(self.n_ranks):
-                kind, payload = self._recover_shard(origin, name, alive, failed)
-                if kind == "full":
-                    shards[origin] = payload
-                elif kind == "partial":
-                    partials[origin] = payload
-            if not shards:
-                raise dist.DataLostError(f"no shard of entity {name!r} recoverable")
-            if partials:
-                # Adopted copies hold only the uniquely-owned subset; merge in
-                # the replicated leaves from any survivor's full payload.
-                ref = shards[min(shards)]
-                for origin, subset in partials.items():
-                    shards[origin] = ent.merge_payload(subset, ref, self.n_ranks)
+            shards = self._recover_entity_shards(name, ent, alive, failed)
             ent.restore_shards(shards)
 
         meta = self.checkpoint_step()
         self.stats.restored += 1
         self.stats.last_restore_s = time.perf_counter() - t0
         return meta
+
+    def _recover_entity_shards(
+        self, name: str, ent: DistributedEntity, alive: set[int], failed: set[int]
+    ) -> dict[int, Any]:
+        """Recover every origin's shard of one entity (Algorithm 4 inner loop)."""
+        shards: dict[int, Any] = {}
+        partials: dict[int, Any] = {}
+        for origin in range(self.n_ranks):
+            kind, payload = self._recover_shard(origin, name, alive, failed)
+            if kind == "full":
+                shards[origin] = payload
+            elif kind == "partial":
+                partials[origin] = payload
+        if not shards:
+            raise dist.DataLostError(f"no shard of entity {name!r} recoverable")
+        if partials:
+            # Adopted copies hold only the uniquely-owned subset; merge in
+            # the replicated leaves from any survivor's full payload.
+            ref = shards[min(shards)]
+            for origin, subset in partials.items():
+                shards[origin] = ent.merge_payload(subset, ref, self.n_ranks)
+        return shards
+
+    # ------------------------------------------------------------------ #
+    # Elastic N-to-M restore (beyond-paper: Ham et al.'s N-to-M algorithm)
+    # ------------------------------------------------------------------ #
+    def restore_elastic(self, new_n_ranks: int) -> dict[str, Any]:
+        """Recover the last valid checkpoint (created on this engine's N
+        ranks, possibly with failures) and restore it onto ``new_n_ranks``
+        ranks — shrink after a failure without spares, or grow on scale-up.
+
+        Entities exposing a global-coordinate manifest (``shard_coords``) are
+        repartitioned with minimal data movement via elastic/plan.py; others
+        restore through their old-world shard map unchanged. The engine's
+        stores are rebuilt for the new world (empty until the next
+        checkpoint re-protects it). Returns the checkpoint meta; movement
+        accounting lands in ``self.last_elastic_report``.
+        """
+        import jax
+
+        from repro.elastic.plan import ElasticReport, plan_repartition
+        from repro.elastic.reshard import reshard_leaves
+
+        assert new_n_ranks >= 1
+        self.discard_pending()
+        t0 = time.perf_counter()
+        alive = self._alive_fn()
+        failed = set(range(self.n_ranks)) - alive
+        meta = self.checkpoint_step()  # read before the stores are rebuilt
+
+        # Physical residency of every origin's recovered payload in the NEW
+        # world: survivors keep their own shard on-host under the dense
+        # renumbering; adopted/reconstructed shards materialize on the
+        # recovering host. Hosts renumbered past M leave the job (their data
+        # counts as movement if the plan still needs it).
+        reassign = dist.shrink_reassignment(self.n_ranks, failed)
+        residency: dict[int, int | None] = {}
+        for origin in range(self.n_ranks):
+            holder = self._recovery_host(origin, alive)
+            dense = reassign.get(holder) if holder is not None else None
+            residency[origin] = dense if dense is not None and dense < new_n_ranks else None
+
+        report = ElasticReport(n_old=self.n_ranks, n_new=new_n_ranks)
+        for name, ent in self._entities.items():
+            shards = self._recover_entity_shards(name, ent, alive, failed)
+            coords = self._stored_coords(name)
+            if coords is None and hasattr(ent, "shard_coords"):
+                coords = ent.shard_coords(self.n_ranks)
+            if name in self._replicated or coords is None:
+                # No global coordinates: the entity merges its old-world
+                # shard map globally; it re-shards at the next checkpoint.
+                ent.restore_shards(shards)
+                continue
+            leaves_by_origin = {o: jax.tree.leaves(p) for o, p in shards.items()}
+            axes = [ls.axis for ls in coords[0]]
+            row_nb = _row_nbytes(leaves_by_origin[min(leaves_by_origin)], coords[0])
+            plan = plan_repartition(coords, new_n_ranks, residency, row_nb)
+            new_leaves = reshard_leaves(plan, leaves_by_origin, axes)
+            treedef = jax.tree.structure(shards[min(shards)])
+            ent.restore_shards(
+                {j: jax.tree.unflatten(treedef, new_leaves[j]) for j in range(new_n_ranks)}
+            )
+            report.add(name, plan)
+
+        # Rebuild the engine topology for the new world. The consumed
+        # checkpoint dies with the old rank space; callers re-protect by
+        # checkpointing immediately (trainer/server do).
+        self.n_ranks = new_n_ranks
+        self.stores = {r: HostStore(r) for r in range(new_n_ranks)}
+        self.last_elastic_report = report
+        self.stats.restored += 1
+        self.stats.last_restore_s = time.perf_counter() - t0
+        log.info(
+            "elastic restore %d->%d ranks: %.1f MiB held, %.1f MiB moved (lower bound %.1f)",
+            report.n_old, report.n_new,
+            report.bytes_total / 2**20, report.bytes_moved / 2**20,
+            report.bytes_lower_bound / 2**20,
+        )
+        return meta
+
+    def _recovery_host(self, origin: int, alive: set[int]) -> int | None:
+        """Old-world rank whose host ends up holding ``origin``'s recovered
+        payload (the survivor itself, the adopting partner, or the parity
+        rebuilder)."""
+        if origin in alive:
+            return origin
+        if self.cfg.parity_group:
+            grp = dist.parity_groups(self.n_ranks, self.cfg.parity_group)[
+                dist.group_of(origin, self.cfg.parity_group)
+            ]
+            for m in grp.members:
+                if m in alive:
+                    return m
+            return None
+        for h in self._backup_holders(origin):
+            if h in alive:
+                return h
+        return None
+
+    def _stored_coords(self, name: str):
+        """Global-coordinate table recorded with the last valid checkpoint."""
+        for st in self.stores.values():
+            if st.alive and st.buffer.valid:
+                table = st.buffer.read_only.meta.get("coords", {}).get(name)
+                if table is not None:
+                    return table
+        return None
 
     def _recover_shard(self, origin: int, name: str, alive: set[int], failed: set[int]):
         """Returns ("full"|"partial", payload). Partial = partner-exchange
@@ -472,6 +605,19 @@ class CheckpointEngine:
             "total_bytes": sum(per_rank.values()),
             "n_ranks": self.n_ranks,
         }
+
+
+def _row_nbytes(leaves: list[Any], coords: list[Any]) -> list[int]:
+    """Bytes per planner row for each leaf: a slice along the leaf's data
+    axis, or the full leaf for replicated ones (one logical row)."""
+    out = []
+    for leaf, ls in zip(leaves, coords):
+        a = np.asarray(leaf)
+        if ls.axis is None:
+            out.append(int(a.nbytes))
+        else:
+            out.append(int(a.nbytes // max(a.shape[ls.axis], 1)))
+    return out
 
 
 class _FnEntity:

@@ -33,6 +33,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import distribution as dist
+from repro.sharding.mesh import shard_map
 
 
 def _full_rank(pspec: P, ndim: int) -> tuple:
@@ -124,7 +125,7 @@ def build_snapshot_program(
         target = _pad_shape(x.shape, ps, mesh)
         if target != x.shape:
             x = jnp.pad(x, [(0, t - s) for s, t in zip(x.shape, target)])
-        fn = jax.shard_map(
+        fn = shard_map(
             partial(jax.lax.ppermute, axis_name=axis, perm=_leaf_pairs(axis)),
             mesh=mesh,
             in_specs=P(*full),
@@ -156,7 +157,7 @@ def build_snapshot_program(
             s = jax.lax.ppermute(s, axis, pairs)
             return q, s
 
-        fn = jax.shard_map(
+        fn = shard_map(
             local, mesh=mesh, in_specs=P(*full), out_specs=(P(all_axes), P(all_axes))
         )
         q, s = fn(x)
@@ -165,7 +166,7 @@ def build_snapshot_program(
     def _unexchange_leaf(y: jax.Array, ps: P, orig_shape: tuple[int, ...]) -> jax.Array:
         full = _full_rank(ps, y.ndim)
         axis = _leaf_axis(ps, len(orig_shape))
-        fn = jax.shard_map(
+        fn = shard_map(
             partial(jax.lax.ppermute, axis_name=axis,
                     perm=dist.inverse_perm(_leaf_pairs(axis))),
             mesh=mesh,
@@ -232,7 +233,7 @@ def build_snapshot_program(
                 c = kref.checksum(u)
                 return jax.lax.psum(c, tuple(used)) if used else c
 
-            fn = jax.shard_map(local, mesh=mesh, in_specs=P(*full), out_specs=P())
+            fn = shard_map(local, mesh=mesh, in_specs=P(*full), out_specs=P())
             return fn(x)
 
         acc = jnp.zeros((2,), jnp.uint32)

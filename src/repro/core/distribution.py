@@ -179,12 +179,59 @@ class ParityGroup:
 
 
 def parity_groups(n_ranks: int, group_size: int) -> list[ParityGroup]:
-    assert n_ranks % group_size == 0, (n_ranks, group_size)
+    """Partition ranks into XOR groups of ``group_size``; when the world size
+    is not a multiple (the elastic N-to-M path lands on arbitrary M), the last
+    group is short — it simply XORs fewer members, and its parity is striped
+    over however many members the next group has."""
+    assert group_size >= 1 and n_ranks >= 1
     return [
-        ParityGroup(tuple(range(g, g + group_size)))
+        ParityGroup(tuple(range(g, min(g + group_size, n_ranks))))
         for g in range(0, n_ranks, group_size)
     ]
 
 
 def group_of(rank: int, group_size: int) -> int:
     return rank // group_size
+
+
+def parity_recovery_plan(
+    n_prev: int, failed: set[int], group_size: int
+) -> dict[int, int]:
+    """Algorithm 4 for parity-group mode: origin_prev_rank -> new_rank that
+    reconstructs (or locally restores) its blocks.
+
+    XOR tolerates one failure per group, and reconstruction additionally
+    needs every stripe of the group's parity, hosted on the *next* group.
+    Handles a short last group (elastic world sizes): its parity is striped
+    over the following group's members, wrapping to group 0.
+    """
+    reassign = shrink_reassignment(n_prev, failed)
+    groups = parity_groups(n_prev, group_size)
+    plan: dict[int, int] = {}
+    for origin in range(n_prev):
+        if origin not in failed:
+            plan[origin] = reassign[origin]
+            continue
+        gi = group_of(origin, group_size)
+        grp = groups[gi]
+        others = [m for m in grp.others(origin) if m not in failed]
+        if len(others) != len(grp.members) - 1:
+            raise DataLostError(
+                f"parity group {gi} lost >=2 members; XOR tolerates 1"
+            )
+        stripe_holders = groups[(gi + 1) % len(groups)].members
+        # The origin is NOT excluded: in a single-group world the stripes
+        # wrap onto the group itself, so a failed member takes its own
+        # stripe down with it — the engine's restore path rejects exactly
+        # this, and the plan must agree with it.
+        dead_holders = [m for m in stripe_holders if m in failed]
+        if dead_holders:
+            raise DataLostError(
+                f"parity stripes of group {gi} lost (holders {dead_holders} dead)"
+            )
+        # The lowest surviving member of the group performs the XOR rebuild;
+        # a singleton group's parity IS its snapshot, so any stripe holder
+        # can adopt it (lowest holder, deterministically).
+        rebuilders = others or list(stripe_holders)
+        plan[origin] = reassign[min(rebuilders)]
+    return plan

@@ -58,6 +58,25 @@ def deserialize_tree(snap: SerializedSnapshot) -> Any:
 # Flat byte packing (for parity / compression / wire transfer)
 # ---------------------------------------------------------------------------
 
+@dataclass(frozen=True)
+class LeafSlice:
+    """Global coordinates of one leaf's shard (the elastic N-to-M layer).
+
+    A shard holds rows ``[start, stop)`` along ``axis`` of a logical leaf of
+    ``global_shape``. ``axis is None`` marks a leaf with no failure-domain
+    dimension (replicated: every rank holds the full leaf); a leaf with an
+    axis but a full ``[0, global_shape[axis])`` range is one whose dimension
+    did not divide the old world size. Recording the slice of the *logical*
+    entity — not just the origin rank — is what lets a checkpoint created on
+    N ranks be repartitioned onto M != N (elastic/plan.py).
+    """
+
+    global_shape: tuple[int, ...]
+    axis: int | None
+    start: int
+    stop: int
+
+
 @dataclass
 class Manifest:
     names: list[str]
@@ -66,6 +85,10 @@ class Manifest:
     offsets: list[int]  # byte offsets into the flat buffer
     total: int
     treedef: Any
+    # Global-coordinate manifest (optional): one LeafSlice per leaf giving
+    # this shard's slice of the logical entity. Attached by the engine when
+    # the entity exposes shard_coords(); consumed by restore_elastic.
+    coords: list[LeafSlice] | None = None
 
 
 def pack_bytes(tree: Any) -> tuple[np.ndarray, Manifest]:

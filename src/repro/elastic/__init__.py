@@ -1,0 +1,22 @@
+"""Elastic N-to-M recovery: repartition a checkpoint onto a new world size.
+
+The paper's recovery path is N-to-N (spares) or implicit-shrink; this package
+is the production-grade generalization (Ham et al.'s N-to-M algorithm,
+TeaMPI-style substitution): a checkpoint created on N ranks restores onto
+M != N ranks with minimal data movement.
+
+  plan.py     — pure planner: old shard coordinates -> new-rank row segments
+  reshard.py  — executor: host-tier numpy + device-tier Pallas gather
+
+Entry point: CheckpointEngine.restore_elastic(new_n_ranks).
+"""
+
+from repro.elastic.plan import (  # noqa: F401
+    ElasticReport,
+    LeafTarget,
+    RepartitionPlan,
+    Segment,
+    new_world_targets,
+    plan_repartition,
+)
+from repro.elastic.reshard import reshard_leaf_device, reshard_leaves  # noqa: F401

@@ -18,6 +18,7 @@ import numpy as np
 from repro.kernels import checksum as _checksum_k
 from repro.kernels import quantize as _quantize_k
 from repro.kernels import ref
+from repro.kernels import reshard as _reshard_k
 from repro.kernels import xor_parity as _xor_k
 
 
@@ -79,6 +80,30 @@ def xor_encode_arrays(arrays: list[jax.Array]) -> jax.Array:
     n = max(v.shape[0] for v in views)
     views = [_pad_to(v, n) if v.shape[0] < n else v for v in views]
     return xor_reduce(jnp.stack(views))
+
+
+# ---------------------------------------------------------------------------
+# Reshard row gather (elastic N-to-M recovery)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("interpret",))
+def gather_rows(src: jax.Array, idx: jax.Array, interpret: bool | None = None) -> jax.Array:
+    """out[i] = src[idx[i]] for src (rows, cols), idx (rows_out,) int32.
+
+    The device-tier move of the elastic reshard executor: the repartition
+    plan's row segments flatten into ``idx`` and one gather builds the new
+    shard. Columns are lane-padded here; callers keep the original width.
+    """
+    assert src.ndim == 2 and idx.ndim == 1
+    if _use_ref():
+        return ref.gather_rows(src, idx)
+    cols = src.shape[1]
+    pad = (-cols) % _reshard_k.LANE_COLS
+    padded = jnp.pad(src, ((0, 0), (0, pad))) if pad else src
+    out = _reshard_k.gather_rows_pallas(
+        padded, idx, interpret=_interpret() if interpret is None else interpret
+    )
+    return out[:, :cols]
 
 
 # ---------------------------------------------------------------------------

@@ -29,6 +29,12 @@ def checksum(x: jax.Array) -> jax.Array:
     return jnp.stack([s1, s2])
 
 
+def gather_rows(src: jax.Array, idx: jax.Array) -> jax.Array:
+    """Row gather for the elastic reshard: out[i] = src[idx[i]]."""
+    assert src.ndim == 2 and idx.ndim == 1
+    return jnp.take(src, idx, axis=0)
+
+
 def quantize_blockwise(x: jax.Array, block: int = 256) -> tuple[jax.Array, jax.Array]:
     """Symmetric int8 quantization with per-block max-abs scales.
 

@@ -28,7 +28,7 @@ from repro.utils.logging import get_logger
 
 log = get_logger("runtime.cluster")
 
-RecoveryPolicy = Literal["spare", "shrink"]
+RecoveryPolicy = Literal["spare", "shrink", "elastic"]
 
 
 @dataclass
@@ -107,7 +107,10 @@ class VirtualCluster:
         else:
             # Elastic shrink: dense renumbering of survivors (MPI_Comm_shrink
             # semantics); the data axis contracts, survivors inherit the work.
-            policy = "shrink"
+            # Policy "elastic" keeps its name: the caller repartitions the
+            # checkpoint onto the shrunken world (engine.restore_elastic)
+            # instead of replaying old-world shards.
+            policy = "elastic" if policy == "elastic" else "shrink"
             reassignment = shrink_reassignment(self.n_ranks, set(failed))
             n_after = len(reassignment)
             load = n_before / max(n_after, 1)
@@ -138,3 +141,18 @@ class VirtualCluster:
         for r in range(self.n_ranks, n_new_ranks):
             self._alive.add(r)
         self.n_ranks = n_new_ranks
+
+    @property
+    def spares_left(self) -> int:
+        return self._spares_left
+
+    def resize(self, n_new_ranks: int) -> None:
+        """Elastic shrink/grow transition after an N-to-M restore: the new
+        world is ranks 0..M-1, all alive. The engine's stores were already
+        rebuilt by restore_elastic; this realigns cluster liveness with them
+        and clears the revoked flag (the stabilized communicator)."""
+        self.n_ranks = n_new_ranks
+        self._alive = set(range(n_new_ranks))
+        self.revoked = False
+        self.fault_log.append(("resize", [n_new_ranks]))
+        log.info("cluster resized to %d ranks", n_new_ranks)

@@ -20,14 +20,13 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AbstractMesh
-
 from repro.core.checkpoint import CheckpointEngine, EngineConfig
 from repro.models.model import Model
 from repro.runtime.cluster import VirtualCluster
 from repro.runtime.failures import FailureInjector, ProcessFaultException
 from repro.runtime.state import ShardPlan, ShardedStateEntity
 from repro.sharding.axes import rules_for_shape, tree_pspecs
+from repro.sharding.mesh import abstract_mesh
 from repro.sharding.spec import specs_to_shape_dtype
 from repro.utils.logging import get_logger
 
@@ -42,6 +41,10 @@ class ServerConfig:
     n_virtual_hosts: int = 4
     n_spares: int = 4
     snapshot_params: bool = False
+    # "spare": paper §5.2.4 substitution (falls back to elastic when the spare
+    # pool runs dry). "elastic": N-to-M shrink onto the survivors — serving
+    # capacity degrades instead of the job dying.
+    recovery_policy: str = "spare"
     engine: EngineConfig = field(default_factory=EngineConfig)
 
 
@@ -62,7 +65,7 @@ class Server:
         )
 
         # Failure-domain plan from production decode rules.
-        prod_mesh = AbstractMesh((16, 16), ("data", "model"))
+        prod_mesh = abstract_mesh(("data", 16), ("model", 16))
         rules = rules_for_shape(model.rules, "decode", scfg.batch)
         cache_specs = model.abstract_cache(scfg.batch, scfg.max_seq)
         sess_sds = {
@@ -78,14 +81,17 @@ class Server:
         self.plan = ShardPlan.from_pspecs(sess_sds, sess_pspecs)
 
         self.cluster = VirtualCluster(scfg.n_virtual_hosts, scfg.n_spares)
-        self.engine = CheckpointEngine(scfg.n_virtual_hosts, scfg.engine)
+        self._build_engine(scfg.n_virtual_hosts)
+        self.injector = injector or FailureInjector(scfg.n_virtual_hosts)
+        self.n_recoveries = 0
+
+    def _build_engine(self, n_ranks: int) -> None:
+        self.engine = CheckpointEngine(n_ranks, self.scfg.engine)
         self.cluster.attach_engine(self.engine)
         self.engine.register(
             "sessions",
             ShardedStateEntity(lambda: self.sessions, self._set_sessions, self.plan),
         )
-        self.injector = injector or FailureInjector(scfg.n_virtual_hosts)
-        self.n_recoveries = 0
 
     def _set_sessions(self, np_sessions: dict[str, Any]) -> None:
         self.sessions = jax.tree.map(jnp.asarray, np_sessions)
@@ -152,7 +158,31 @@ class Server:
     def recover(self) -> None:
         if not self.engine.has_valid_checkpoint:
             raise RuntimeError("no valid session checkpoint")
-        self.cluster.stabilize("spare")
-        meta = self.engine.restore()
+        elastic = self.scfg.recovery_policy == "elastic" or (
+            self.cluster.spares_left < len(self.cluster.failed)
+        )
+        if elastic:
+            # Shrink onto the survivors: repartition the session checkpoint
+            # onto M = |alive| ranks and re-protect the new world right away.
+            # restore_elastic consumed the old checkpoint, so a failed
+            # re-protect (rank death mid-exchange) shrinks again and retries
+            # — the restored sessions are still live in memory.
+            m = len(self.cluster.alive())
+            meta = self.engine.restore_elastic(m)
+            self.cluster.resize(m)
+            while not self.engine.checkpoint({"pos": int(meta.get("pos", 0))}):
+                m = len(self.cluster.alive())
+                if m < 1:
+                    raise RuntimeError("all ranks died while re-protecting sessions")
+                log.warning("re-protect checkpoint failed; shrinking to %d", m)
+                self._build_engine(m)
+                self.cluster.resize(m)
+            log.info(
+                "elastic shrink to %d ranks; sessions rolled back to pos %s",
+                m, meta.get("pos"),
+            )
+        else:
+            self.cluster.stabilize("spare")
+            meta = self.engine.restore()
+            log.info("sessions rolled back to pos %s", meta.get("pos"))
         self.n_recoveries += 1
-        log.info("sessions rolled back to pos %s", meta.get("pos"))

@@ -21,6 +21,8 @@ import jax
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core.serialization import LeafSlice
+
 DATA_AXES = ("pod", "data")
 
 
@@ -57,9 +59,38 @@ class ShardPlan:
             return None
         return d
 
+    def shard_coords(self, n_ranks: int) -> list[list[LeafSlice]]:
+        """Global-coordinate manifest: per rank, each leaf's slice of the
+        logical entity. ``axis`` records the leaf's failure-domain dim even
+        when ``n_ranks`` does not divide it (the shard then holds the full
+        range) — the elastic planner uses that to re-split on a world size
+        that does divide."""
+        out: list[list[LeafSlice]] = []
+        for r in range(n_ranks):
+            coords: list[LeafSlice] = []
+            for i, shape in enumerate(self.shapes):
+                d = self.dims[i]
+                if d is None:
+                    coords.append(LeafSlice(shape, None, 0, 1))
+                    continue
+                g = shape[d]
+                eff = self.split_dim(i, n_ranks)
+                if eff is None:
+                    coords.append(LeafSlice(shape, d, 0, g))
+                else:
+                    rows = g // n_ranks
+                    coords.append(LeafSlice(shape, d, r * rows, (r + 1) * rows))
+            out.append(coords)
+        return out
+
 
 class ShardedStateEntity:
-    """DistributedEntity over a live state accessed via get/set callbacks."""
+    """DistributedEntity over a live state accessed via get/set callbacks.
+
+    Exposes ``shard_coords`` (the plan's global-coordinate manifest), which
+    the engine attaches to each shard's serialization Manifest — the layer
+    the elastic N-to-M restore path repartitions on.
+    """
 
     def __init__(
         self,
@@ -70,6 +101,9 @@ class ShardedStateEntity:
         self._get = get_state
         self._set = set_state
         self.plan = plan
+
+    def shard_coords(self, n_ranks: int) -> list[list[LeafSlice]]:
+        return self.plan.shard_coords(n_ranks)
 
     # -- snapshot ------------------------------------------------------------
     def snapshot_shards(self, n_ranks: int) -> list[Any]:

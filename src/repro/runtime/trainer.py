@@ -24,7 +24,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AbstractMesh, Mesh, NamedSharding
+from jax.sharding import Mesh, NamedSharding
 
 from repro.configs.base import ModelConfig
 from repro.core.checkpoint import CheckpointEngine, EngineConfig
@@ -39,6 +39,7 @@ from repro.runtime.failures import FailureInjector, ProcessFaultException
 from repro.runtime.state import ShardPlan, ShardedStateEntity
 from repro.runtime.straggler import StragglerDetector
 from repro.sharding.axes import tree_pspecs, tree_zero1_pspecs
+from repro.sharding.mesh import abstract_mesh
 from repro.sharding.spec import specs_to_shape_dtype
 from repro.utils.logging import get_logger
 from repro.utils.timing import TimerRegistry
@@ -57,7 +58,7 @@ class TrainerConfig:
     # fault tolerance
     n_virtual_hosts: int = 4          # failure-domain ranks in the simulation
     n_spares: int = 0
-    recovery_policy: str = "spare"    # spare | shrink
+    recovery_policy: str = "spare"    # spare | shrink | elastic (N-to-M repartition)
     mtbf_individual_s: float = 3600.0
     checkpoint_period: int | None = None  # None -> Daly-optimal (adaptive)
     engine: EngineConfig = field(default_factory=EngineConfig)
@@ -100,7 +101,7 @@ class Trainer:
         }
 
         # -- sharding plan against the PRODUCTION mesh (abstract) -------------
-        prod_mesh = AbstractMesh((16, 16), ("data", "model"))
+        prod_mesh = abstract_mesh(("data", 16), ("model", 16))
         pspecs = self._state_pspecs(prod_mesh)
         sds = self._state_sds()
         self.plan = ShardPlan.from_pspecs(sds, pspecs)
@@ -296,7 +297,9 @@ class Trainer:
                 "fault before the first checkpoint and no disk tier configured"
             )
         report = self.cluster.stabilize(self.tcfg.recovery_policy)  # revoke+shrink
-        if report.policy == "shrink":
+        if report.policy == "elastic":
+            meta = self._elastic_recover(report.n_ranks_after)
+        elif report.policy == "shrink":
             meta = self._shrink_engine(report)
         else:
             meta = self.engine.restore()  # Algorithm 4 under the hood
@@ -325,6 +328,35 @@ class Trainer:
         new_n = report.n_ranks_after
         self._swap_engine(new_n)
         return meta
+
+    def _elastic_recover(self, n_new: int) -> dict[str, Any]:
+        """N-to-M recovery: repartition the checkpoint onto the ``n_new``-rank
+        world (engine.restore_elastic), realign the cluster, and immediately
+        re-checkpoint so the new world is protected before the next step.
+
+        restore_elastic consumes the old checkpoint, so a failed re-protect
+        (a rank dying during the exchange) must not be ignored: the restored
+        state is still live in memory, so we shrink onto whoever survived and
+        re-protect again until a checkpoint commits."""
+        meta = self.engine.restore_elastic(n_new)
+        self.cluster.resize(n_new)
+        while not self.engine.checkpoint({"step": int(self.state["step"])}):
+            survivors = len(self.cluster.alive())
+            if survivors < 1:
+                raise RuntimeError("all ranks died while re-protecting the elastic world")
+            log.warning(
+                "re-protect checkpoint failed; shrinking to %d survivors", survivors
+            )
+            self._swap_engine(survivors)
+            self.cluster.resize(survivors)  # clears the revoked flag too
+        self._last_ckpt_step = int(self.state["step"])
+        return meta
+
+    def restore_elastic(self, n_new: int) -> dict[str, Any]:
+        """Elastic transition to ``n_new`` ranks from the last checkpoint —
+        shrink (fewer hosts, no spares needed) or grow (scale-up). The merged
+        global state is bit-identical; only the shard topology changes."""
+        return self._elastic_recover(n_new)
 
     def _swap_engine(self, n_new: int) -> None:
         """Rebuild the engine for a new world size; entities carry over and

@@ -3,7 +3,34 @@
 from __future__ import annotations
 
 import numpy as np
-from jax.sharding import Mesh
+from jax.sharding import AbstractMesh, Mesh
+
+
+def abstract_mesh(*axes: tuple[str, int]) -> AbstractMesh:
+    """Version-portable ``AbstractMesh`` constructor from (name, size) pairs.
+
+    jax >= 0.4.36 takes a single shape-tuple of (name, size) pairs; earlier
+    releases took (sizes, names). Call as ``abstract_mesh(("data", 16),
+    ("model", 16))``.
+    """
+    try:
+        return AbstractMesh(tuple(axes))
+    except TypeError:
+        sizes = tuple(s for _, s in axes)
+        names = tuple(n for n, _ in axes)
+        return AbstractMesh(sizes, names)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """Version-portable ``shard_map``: top-level ``jax.shard_map`` when the
+    release exports it, ``jax.experimental.shard_map`` otherwise."""
+    import jax
+
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
 
 
 def mesh_axis_size(mesh: Mesh, axes: tuple[str, ...] | str | None) -> int:

@@ -1,7 +1,7 @@
 """Property tests for the paper's Algorithms 1 & 4 (hypothesis)."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.distribution import (
     DataLostError,

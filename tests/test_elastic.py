@@ -1,0 +1,370 @@
+"""Elastic N-to-M recovery: planner properties, reshard executor (host +
+device tiers), engine round trips across world sizes, ragged parity groups,
+and the trainer-level acceptance path (checkpoint on 8, restore on 6 and 12).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core.checkpoint import CheckpointEngine, EngineConfig
+from repro.core.distribution import (
+    DataLostError,
+    parity_groups,
+    parity_recovery_plan,
+)
+from repro.core.serialization import LeafSlice
+from repro.elastic import plan_repartition, reshard_leaf_device, reshard_leaves
+from repro.kernels import ops, ref
+from repro.runtime.state import ShardPlan, ShardedStateEntity
+
+# ---------------------------------------------------------------------------
+# fixtures: a small state with split, replicated, and non-divisible leaves
+# ---------------------------------------------------------------------------
+
+GLOBAL = {
+    "a": np.arange(48, dtype=np.float32).reshape(24, 2),   # splits for most N
+    "b": np.arange(5, dtype=np.float32),                   # replicated
+    "c": np.arange(21, dtype=np.float32).reshape(7, 3),    # 7 divides almost nothing
+    "step": np.int64(11),                                  # 0-d replicated
+}
+SDS = {
+    "a": jax.ShapeDtypeStruct((24, 2), jnp.float32),
+    "b": jax.ShapeDtypeStruct((5,), jnp.float32),
+    "c": jax.ShapeDtypeStruct((7, 3), jnp.float32),
+    "step": jax.ShapeDtypeStruct((), jnp.int64),
+}
+PSPECS = {"a": P("data", None), "b": P(), "c": P("data", None), "step": P()}
+
+
+def make_entity():
+    plan = ShardPlan.from_pspecs(SDS, PSPECS)
+    holder = {"s": {k: v.copy() for k, v in GLOBAL.items()}}
+    ent = ShardedStateEntity(lambda: holder["s"], lambda s: holder.update(s=s), plan)
+    return ent, holder, plan
+
+
+def assert_global(holder):
+    for k, v in GLOBAL.items():
+        assert np.array_equal(np.asarray(holder["s"][k]), v), k
+
+
+# ---------------------------------------------------------------------------
+# planner: pure properties
+# ---------------------------------------------------------------------------
+
+def coords_for(n):
+    plan = ShardPlan.from_pspecs(SDS, PSPECS)
+    return plan.shard_coords(n)
+
+
+@pytest.mark.parametrize("n_old", [1, 2, 3, 4, 6, 8])
+@pytest.mark.parametrize("n_new", [1, 2, 3, 5, 6, 8, 12])
+def test_plan_covers_every_target_exactly(n_old, n_new):
+    coords = coords_for(n_old)
+    residency = {o: o if o < n_new else None for o in range(n_old)}
+    p = plan_repartition(coords, n_new, residency)
+    for j in range(n_new):
+        by_leaf = {}
+        for seg in p.segments[j]:
+            by_leaf.setdefault(seg.leaf, []).append(seg)
+        for i, tgt in p.targets[j].items():
+            segs = sorted(by_leaf[i], key=lambda s: s.dst_start)
+            # Segments tile [0, need) with no gaps or overlaps.
+            cursor = 0
+            for s in segs:
+                assert s.dst_start == cursor
+                cursor += s.rows
+            assert cursor == tgt.stop - tgt.start
+
+
+@pytest.mark.parametrize("n_new", [2, 3, 6, 12])
+def test_plan_movement_is_minimal(n_new):
+    """bytes_moved equals the residency-determined lower bound (minimal
+    movement is exact, not heuristic — every uniquely-owned byte has one
+    source, and replicated leaves always prefer a local copy)."""
+    coords = coords_for(4)
+    row_nb = [8, 20, 63, 8]
+    residency = {0: 0, 1: 1, 2: None, 3: 2}  # rank 2's payload reconstructed
+    p = plan_repartition(coords, n_new, residency, row_nb)
+    assert p.bytes_moved == p.bytes_lower_bound
+    assert p.movement_ratio == 1.0
+
+
+def test_plan_local_rows_stay_local():
+    """A survivor that keeps its dense slot receives its own rows for free."""
+    coords = coords_for(4)
+    p = plan_repartition(coords, 4, {o: o for o in range(4)}, [8, 20, 63, 8])
+    assert p.bytes_moved == 0  # N == M, everyone resident: nothing moves
+
+
+def test_plan_missing_rows_raise():
+    coords = [[LeafSlice((8, 2), 0, 0, 4)]]  # rows [4, 8) held by nobody
+    with pytest.raises(ValueError):
+        plan_repartition(coords, 1, {0: 0})
+
+
+# ---------------------------------------------------------------------------
+# executor: host tier vs device tier (Pallas gather kernel)
+# ---------------------------------------------------------------------------
+
+def test_gather_rows_kernel_matches_ref(rng):
+    for rows, cols, rows_out in [(4, 2, 6), (16, 128, 5), (9, 300, 9), (3, 1, 8)]:
+        src = rng.standard_normal((rows, cols)).astype(np.float32)
+        idx = rng.integers(0, rows, size=rows_out).astype(np.int32)
+        got = np.asarray(ops.gather_rows(jnp.asarray(src), jnp.asarray(idx)))
+        want = np.asarray(ref.gather_rows(jnp.asarray(src), jnp.asarray(idx)))
+        assert np.array_equal(got, want)
+        assert np.array_equal(got, src[idx])
+
+
+@pytest.mark.parametrize("n_old,n_new", [(4, 2), (4, 6), (3, 4), (8, 6)])
+def test_device_reshard_matches_host(n_old, n_new):
+    coords = coords_for(n_old)
+    residency = {o: o if o < n_new else None for o in range(n_old)}
+    p = plan_repartition(coords, n_new, residency)
+    ent, holder, plan = make_entity()
+    shards = ent.snapshot_shards(n_old)
+    leaves = {o: jax.tree.leaves(shards[o]) for o in range(n_old)}
+    axes = [ls.axis for ls in coords[0]]
+    host = reshard_leaves(p, leaves, axes)
+    leaf_a = 0  # leaf "a" is the axis-ful one (alphabetical flatten order)
+    for j in range(n_new):
+        segs = [s for s in p.segments[j] if s.leaf == leaf_a]
+        dev = reshard_leaf_device({o: leaves[o][leaf_a] for o in range(n_old)}, segs, axes[leaf_a])
+        assert np.array_equal(dev, np.asarray(host[j][leaf_a])), j
+
+
+# ---------------------------------------------------------------------------
+# engine round trips: checkpoint on N, restore on M
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_old", [1, 2, 4, 6, 8])
+@pytest.mark.parametrize("n_new", [1, 3, 5, 6, 8, 12])
+def test_engine_elastic_roundtrip(n_old, n_new):
+    ent, holder, _ = make_entity()
+    eng = CheckpointEngine(n_old, EngineConfig())
+    eng.register("state", ent)
+    assert eng.checkpoint({"step": 7})
+    holder["s"] = {k: np.zeros_like(v) for k, v in GLOBAL.items()}
+    meta = eng.restore_elastic(n_new)
+    assert meta["step"] == 7
+    assert_global(holder)
+    assert eng.n_ranks == n_new and set(eng.stores) == set(range(n_new))
+    assert eng.last_elastic_report.movement_ratio == 1.0
+    assert eng.checkpoint({"step": 8})  # the new world re-protects itself
+
+
+@pytest.mark.parametrize("kill", [0, 3, 7])
+def test_engine_elastic_roundtrip_one_failed(kill):
+    """Shrink after a failure without spares: N=8 with one dead rank -> M=6."""
+    ent, holder, _ = make_entity()
+    eng = CheckpointEngine(8, EngineConfig())
+    eng.register("state", ent)
+    assert eng.checkpoint({"step": 3})
+    eng.stores[kill].wipe()
+    holder["s"] = {k: np.zeros_like(v) for k, v in GLOBAL.items()}
+    eng.restore_elastic(6)
+    assert_global(holder)
+    assert eng.stats.adopted_restores >= 1  # the dead rank's shard was adopted
+
+
+def test_engine_elastic_grow_after_failure():
+    """M > N with a failure in the old world (scale-up during recovery)."""
+    ent, holder, _ = make_entity()
+    eng = CheckpointEngine(4, EngineConfig())
+    eng.register("state", ent)
+    assert eng.checkpoint({"step": 1})
+    eng.stores[2].wipe()
+    holder["s"] = {k: np.zeros_like(v) for k, v in GLOBAL.items()}
+    eng.restore_elastic(12)
+    assert_global(holder)
+    assert eng.n_ranks == 12
+
+
+def test_manifest_records_global_coords():
+    """The serialization manifests carry each shard's slice of the logical
+    entity, and the full table replicates with every store's meta."""
+    ent, holder, _ = make_entity()
+    eng = CheckpointEngine(4, EngineConfig())
+    eng.register("state", ent)
+    assert eng.checkpoint({"step": 0})
+    for r in range(4):
+        flat, man = eng.stores[r].buffer.read_only.own["state"]
+        assert man.coords is not None
+        a = man.coords[0]  # leaf "a": (24, 2) split on dim 0
+        assert a.global_shape == (24, 2) and a.axis == 0
+        assert (a.start, a.stop) == (r * 6, (r + 1) * 6)
+        table = eng.stores[r].buffer.read_only.meta["coords"]["state"]
+        assert len(table) == 4 and table[r][0] == a
+
+
+# ---------------------------------------------------------------------------
+# ragged parity groups (elastic world sizes) + recovery-plan edge cases
+# ---------------------------------------------------------------------------
+
+def test_parity_groups_last_group_short():
+    groups = parity_groups(10, 4)
+    assert [g.members for g in groups] == [
+        (0, 1, 2, 3), (4, 5, 6, 7), (8, 9),
+    ]
+
+
+def test_parity_recovery_plan_short_last_group():
+    # Rank 9 (in the short group {8, 9}) dies: rank 8 rebuilds it; survivors
+    # keep their dense slots.
+    plan = parity_recovery_plan(10, {9}, 4)
+    reassigned = {r: r for r in range(9)}
+    assert plan == {**reassigned, 9: 8}
+    # Member of a full group dies: lowest surviving member rebuilds.
+    plan = parity_recovery_plan(10, {5}, 4)
+    assert plan[5] == 4
+    assert plan[6] == 5  # dense renumbering shifts ranks above the hole
+
+
+def test_parity_recovery_plan_two_failures_in_short_group_fatal():
+    with pytest.raises(DataLostError):
+        parity_recovery_plan(10, {8, 9}, 4)
+
+
+def test_parity_recovery_plan_stripe_holder_dead_fatal():
+    # Group 2 = {8, 9}; its parity stripes live on group 0. Losing rank 9
+    # AND a stripe holder (rank 0) makes reconstruction impossible.
+    with pytest.raises(DataLostError):
+        parity_recovery_plan(10, {9, 0}, 4)
+
+
+def test_parity_recovery_plan_single_group_world_matches_engine():
+    """In a single-group world the stripes wrap onto the group itself, so a
+    failed member takes its own stripe down — the plan must reject exactly
+    what the engine's restore path rejects."""
+    with pytest.raises(DataLostError):
+        parity_recovery_plan(4, {1}, 4)
+    ent, holder, _ = make_entity()
+    eng = CheckpointEngine(4, EngineConfig(parity_group=4))
+    eng.register("state", ent)
+    assert eng.checkpoint({"step": 0})
+    eng.stores[1].wipe()
+    with pytest.raises(DataLostError):
+        eng.restore()
+
+
+def test_engine_parity_group_one_still_works():
+    """parity_group=1 (reachable via the launch CLI) is the degenerate
+    neighbor-copy scheme: a singleton's parity is its snapshot, hosted on
+    the next group — single failures recover."""
+    ent, holder, _ = make_entity()
+    eng = CheckpointEngine(4, EngineConfig(parity_group=1))
+    eng.register("state", ent)
+    assert eng.checkpoint({"step": 9})
+    eng.stores[2].wipe()
+    holder["s"] = {k: np.zeros_like(v) for k, v in GLOBAL.items()}
+    meta = eng.restore()
+    assert meta["step"] == 9
+    assert_global(holder)
+    plan = parity_recovery_plan(4, {2}, 1)
+    assert plan[2] == 3 - 1  # rebuilt by the stripe holder (rank 3), dense id 2
+
+
+def test_engine_parity_mode_on_ragged_world():
+    """Checkpoint + single-failure restore with n_ranks % group != 0 (the
+    world an elastic shrink can land on)."""
+    ent, holder, _ = make_entity()
+    eng = CheckpointEngine(6, EngineConfig(parity_group=4))
+    eng.register("state", ent)
+    assert eng.checkpoint({"step": 2})
+    eng.stores[5].wipe()  # member of the short group {4, 5}
+    holder["s"] = {k: np.zeros_like(v) for k, v in GLOBAL.items()}
+    meta = eng.restore()
+    assert meta["step"] == 2
+    assert_global(holder)
+    assert eng.stats.reconstructed_restores >= 1
+
+
+def test_engine_elastic_roundtrip_parity_mode():
+    ent, holder, _ = make_entity()
+    eng = CheckpointEngine(8, EngineConfig(parity_group=4))
+    eng.register("state", ent)
+    assert eng.checkpoint({"step": 5})
+    eng.stores[1].wipe()
+    holder["s"] = {k: np.zeros_like(v) for k, v in GLOBAL.items()}
+    eng.restore_elastic(6)
+    assert_global(holder)
+    assert eng.stats.reconstructed_restores >= 1
+    assert eng.checkpoint({"step": 6})  # 6 % 4 != 0: ragged groups re-protect
+
+
+# ---------------------------------------------------------------------------
+# trainer acceptance: checkpoint on N=8, restore on M=6 (shrink) / M=12 (grow)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def trainer_setup():
+    from repro.configs import CONFIGS
+    from repro.models import build_model
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    model = build_model(CONFIGS["llama3.2-1b"].reduced())
+    kw = dict(batch=4, seq=32, total_steps=20, checkpoint_period=5)
+    ref = Trainer(model, TrainerConfig(**kw, n_virtual_hosts=8))
+    ref.run(20)
+    return model, kw, jax.device_get(ref.state)
+
+
+def _bitwise(a, b):
+    return all(np.array_equal(x, y) for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def test_trainer_shrink_8_to_6_one_failed_then_grow_12(trainer_setup):
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    model, kw, ref_state = trainer_setup
+    t = Trainer(model, TrainerConfig(**kw, n_virtual_hosts=8))
+    t.run(12)  # checkpoints at 5 and 10
+    t.cluster.kill(3)
+    t.restore_elastic(6)  # shrink onto 6 ranks with one rank dead
+    assert t.engine.n_ranks == 6 and t.cluster.n_ranks == 6
+    t.restore_elastic(12)  # grow
+    assert t.engine.n_ranks == 12 and t.cluster.n_ranks == 12
+    t.run(20)
+    assert _bitwise(jax.device_get(t.state), ref_state)
+
+
+def test_trainer_elastic_policy_in_run(trainer_setup):
+    from repro.runtime.failures import FailureInjector
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    model, kw, ref_state = trainer_setup
+    inj = FailureInjector(8, schedule={17: [5]})
+    t = Trainer(
+        model,
+        TrainerConfig(**kw, n_virtual_hosts=8, recovery_policy="elastic"),
+        injector=inj,
+    )
+    t.run(20)
+    assert t.n_recoveries == 1
+    assert t.engine.n_ranks == 7  # shrunk onto the survivors
+    rep = t.engine.last_elastic_report
+    assert rep is not None and rep.n_old == 8 and rep.n_new == 7
+    assert rep.movement_ratio == 1.0
+    assert _bitwise(jax.device_get(t.state), ref_state)
+
+
+def test_trainer_elastic_survives_second_failure(trainer_setup):
+    """The re-checkpoint after an elastic shrink protects the new world."""
+    from repro.runtime.failures import FailureInjector
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    model, kw, ref_state = trainer_setup
+    inj = FailureInjector(8, schedule={8: [2], 17: [0]})
+    t = Trainer(
+        model,
+        TrainerConfig(**kw, n_virtual_hosts=8, recovery_policy="elastic"),
+        injector=inj,
+    )
+    t.run(20)
+    assert t.n_recoveries == 2
+    assert t.engine.n_ranks == 6
+    assert _bitwise(jax.device_get(t.state), ref_state)

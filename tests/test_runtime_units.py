@@ -5,7 +5,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.mesh import abstract_mesh
 
 from repro.configs import CONFIGS
 from repro.runtime.cluster import VirtualCluster
@@ -102,7 +104,7 @@ def test_worth_evicting_tradeoff():
 # ---------------------------------------------------------------------------
 
 def test_shard_plan_roundtrip():
-    mesh = AbstractMesh((4, 2), ("data", "model"))
+    mesh = abstract_mesh(("data", 4), ("model", 2))
     sds = {
         "a": jax.ShapeDtypeStruct((8, 6), jnp.float32),   # data on dim 0
         "b": jax.ShapeDtypeStruct((5,), jnp.float32),     # replicated
@@ -131,7 +133,7 @@ def test_shard_plan_roundtrip():
 
 
 def test_shard_plan_non_divisible_replicates():
-    mesh = AbstractMesh((4, 2), ("data", "model"))
+    mesh = abstract_mesh(("data", 4), ("model", 2))
     sds = {"a": jax.ShapeDtypeStruct((6, 4), jnp.float32)}  # 6 % 4 != 0
     plan = ShardPlan.from_pspecs(sds, {"a": P("data", None)})
     assert plan.split_dim(0, 4) is None  # falls back to replication

@@ -12,8 +12,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.sharding.mesh import abstract_mesh
 from repro.sharding.axes import (
     FSDP_RULES,
     TP_RULES,
@@ -24,8 +25,8 @@ from repro.sharding.axes import (
 from repro.sharding.spec import ParamSpec
 
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-POD_MESH = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = abstract_mesh(("data", 16), ("model", 16))
+POD_MESH = abstract_mesh(("pod", 2), ("data", 16), ("model", 16))
 
 
 def test_tp_param_spec():
