@@ -1,0 +1,100 @@
+"""Redundancy-codec throughput: GB/s encode + decode per codec (DESIGN.md §8).
+
+Host-tier numbers are real CPU throughput (the engine's production path for
+the simulated host set); the device encode row exercises the Pallas GF(2^8)
+kernel (interpret-mode wall time on CPU — the derived column carries the v5e
+HBM roofline bound instead, like bench_kernels).
+
+Decode is measured at the codec's full tolerance (worst case: m concurrent
+losses solved by Gaussian elimination for rs, single-XOR rebuild for xor,
+memcpy adoption for copy).
+
+``main(smoke=True)`` shrinks shapes to CI-smoke size: the numbers are
+meaningless as throughput but any encode/decode regression (shape bugs,
+accidental O(k^2) passes) still fails loudly.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.roofline import HBM_BW
+from repro.core import gf256, parity
+from repro.core.codec import CopyCodec, RSCodec, XorCodec
+
+
+def _time(fn, repeats: int = 3) -> float:
+    fn()  # warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _line(name: str, t: float, nbytes: int) -> str:
+    return f"{name},{t * 1e6:.0f},GBps={nbytes / t / 1e9:.2f}"
+
+
+def main(smoke: bool = False) -> list[str]:
+    k, nbytes = (4, 1 << 16) if smoke else (4, 1 << 24)  # 64 KiB | 16 MiB shards
+    r = np.random.default_rng(0)
+    bufs = [r.integers(0, 256, size=nbytes, dtype=np.uint8) for _ in range(k)]
+    total = k * nbytes
+    lines = []
+
+    codecs = {
+        "copy": CopyCodec("pairwise", 1),
+        "xor": XorCodec(k),
+        "rs_m2": RSCodec(k, 2),
+        "rs_m3": RSCodec(k, 3),
+    }
+    tag = "smoke" if smoke else f"{k}x{nbytes >> 20}MiB"
+    for name, codec in codecs.items():
+        if name == "copy":
+            # encode is a passthrough; the distribution cost is the stripe
+            # copy, and adoption's cost is materializing the blob bytes
+            # (decode itself returns a reference — time the memcpy honestly).
+            blobs = [bufs[0]]
+            t = _time(lambda: parity.split_stripes(bufs[0], 1))
+            lines.append(_line(f"codec_copy_encode_{tag}", t, nbytes))
+            t = _time(lambda: np.copy(codec.decode({}, {0: blobs[0]}, [0])[0]))
+            lines.append(_line(f"codec_copy_decode_{tag}", t, nbytes))
+            continue
+        m = codec.n_blobs(k)
+        blobs = codec.encode(bufs, m)
+        t = _time(lambda: codec.encode(bufs, m))
+        lines.append(_line(f"codec_{name}_encode_{tag}", t, total))
+        missing = list(range(codec.tolerance()))
+        present = {i: bufs[i] for i in range(k) if i not in missing}
+        blob_map = {j: blobs[j] for j in range(m)}
+        out = codec.decode(present, blob_map, missing)
+        for i in missing:  # sanity: decode must actually be correct
+            assert np.array_equal(out[i][:nbytes], bufs[i]), (name, i)
+        t = _time(lambda: codec.decode(present, blob_map, missing))
+        lines.append(_line(f"codec_{name}_decode_t{len(missing)}_{tag}", t, total))
+
+    # Pallas GF(2^8) kernel (interpret mode on CPU; roofline as derived)
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    C = tuple(tuple(int(c) for c in row) for row in gf256.cauchy_matrix(2, k))
+    stacked = jnp.asarray(
+        np.stack([b.view(np.uint32) for b in bufs])
+    )
+    t = _time(lambda: np.asarray(ops.gf256_matmul(stacked, C)))
+    bound = total / HBM_BW
+    lines.append(
+        f"kernel_rs_encode_m2_{tag},{t * 1e6:.0f},v5e_bound_us={bound * 1e6:.1f}"
+    )
+    return lines
+
+
+if __name__ == "__main__":
+    import sys
+
+    print("\n".join(main(smoke="--smoke" in sys.argv)))

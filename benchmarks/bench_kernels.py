@@ -23,28 +23,29 @@ def _time(fn, *args, repeats: int = 3) -> float:
     return best
 
 
-def main() -> list[str]:
+def main(smoke: bool = False) -> list[str]:
     lines = []
-    n = 1 << 22  # 4 Mi words = 16 MiB
+    n = 1 << 14 if smoke else 1 << 22  # smoke: 64 KiB; full: 4 Mi words = 16 MiB
+    tag = "64KiB" if smoke else "16MiB"
     r = np.random.default_rng(0)
 
     stacked = jnp.asarray(r.integers(0, 2**32, size=(4, n), dtype=np.uint32))
     t = _time(ops.xor_reduce, stacked)
     bound = stacked.nbytes / HBM_BW
-    lines.append(f"kernel_xor_parity_4x16MiB,{t * 1e6:.0f},v5e_bound_us={bound * 1e6:.1f}")
+    lines.append(f"kernel_xor_parity_4x{tag},{t * 1e6:.0f},v5e_bound_us={bound * 1e6:.1f}")
 
     x = jnp.asarray(r.standard_normal(n), jnp.float32)
     t = _time(ops.checksum, x)
     bound = x.nbytes / HBM_BW
-    lines.append(f"kernel_checksum_16MiB,{t * 1e6:.0f},v5e_bound_us={bound * 1e6:.1f}")
+    lines.append(f"kernel_checksum_{tag},{t * 1e6:.0f},v5e_bound_us={bound * 1e6:.1f}")
 
     t = _time(lambda v: ops.quantize_blockwise(v)[0], x)
     bound = (x.nbytes + n + n // 256 * 4) / HBM_BW
-    lines.append(f"kernel_quantize_16MiB,{t * 1e6:.0f},v5e_bound_us={bound * 1e6:.1f}")
+    lines.append(f"kernel_quantize_{tag},{t * 1e6:.0f},v5e_bound_us={bound * 1e6:.1f}")
 
     q, s = ops.quantize_blockwise(x)
     t = _time(ops.dequantize_blockwise, q, s)
-    lines.append(f"kernel_dequantize_16MiB,{t * 1e6:.0f},v5e_bound_us={bound * 1e6:.1f}")
+    lines.append(f"kernel_dequantize_{tag},{t * 1e6:.0f},v5e_bound_us={bound * 1e6:.1f}")
     return lines
 
 

@@ -7,11 +7,16 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * bench_overhead           — Fig 6   (Daly-interval overhead vs MTBF)
   * bench_fault_e2e          — Fig 8   (kill-signal fault tolerance, e2e)
   * bench_kernels            — checkpoint hot-path Pallas kernels
+  * bench_codecs             — GB/s encode + decode per redundancy codec
   * bench_roofline_table     — §Roofline rows from the dry-run artifacts
+
+``--smoke`` runs only the smoke-capable modules (codecs, kernels) at tiny
+shapes — a fast CI perf-regression tripwire, not a measurement.
 """
 
 from __future__ import annotations
 
+import inspect
 import sys
 import traceback
 
@@ -19,6 +24,7 @@ import traceback
 def main() -> None:
     from benchmarks import (
         bench_checkpoint_scaling,
+        bench_codecs,
         bench_elastic_recovery,
         bench_fault_e2e,
         bench_kernels,
@@ -27,19 +33,27 @@ def main() -> None:
         bench_roofline_table,
     )
 
-    print("name,us_per_call,derived")
-    failed = 0
-    for mod in (
+    smoke = "--smoke" in sys.argv[1:]
+    full = (
         bench_checkpoint_scaling,
         bench_recovery,
         bench_elastic_recovery,
         bench_overhead,
         bench_fault_e2e,
         bench_kernels,
+        bench_codecs,
         bench_roofline_table,
-    ):
+    )
+    smoke_capable = tuple(
+        m for m in full if "smoke" in inspect.signature(m.main).parameters
+    )
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for mod in smoke_capable if smoke else full:
         try:
-            for line in mod.main():
+            lines = mod.main(smoke=True) if smoke else mod.main()
+            for line in lines:
                 print(line)
         except Exception as e:  # pragma: no cover
             failed += 1

@@ -1,0 +1,116 @@
+"""Surviving a correlated 2-failure burst with the Reed-Solomon codec.
+
+Real clusters lose correlated host sets (a rack power domain, a shared
+switch) — and a single-parity scheme like XOR cannot survive two concurrent
+losses in one group (the exascale gap of Agullo et al., arXiv:2010.13342).
+This demo runs the same burst against both codecs:
+
+  1. Engine level: an 8-rank world checkpoints under xor(k=4) and
+     rs(k=4, m=2); ranks 1 AND 2 (same parity group) die. XOR raises
+     DataLostError; RS rebuilds both shards bit-identically, at half a
+     shard of extra memory per rank (m/g = 2/4 vs 1/4 — see the itemized
+     memory report and DESIGN.md §8's trade-off table).
+
+  2. End to end: a training run where an MTBF-style burst kills two ranks of
+     one group mid-flight (FailureInjector.schedule_group_burst); with
+     codec="rs" the run recovers and finishes bitwise-identical to a
+     fault-free run.
+
+    PYTHONPATH=src python examples/multi_failure_burst.py
+"""
+
+import numpy as np
+
+from repro.core.checkpoint import CheckpointEngine, EngineConfig
+from repro.core.distribution import DataLostError
+
+
+class ShardedVec:
+    def __init__(self, n, dim=4096):
+        self.n = n
+        self.data = [np.arange(dim, dtype=np.float32) + 1000 * r for r in range(n)]
+
+    def snapshot_shards(self, n):
+        return [{"v": self.data[r].copy()} for r in range(n)]
+
+    def restore_shards(self, shards):
+        for origin, payload in shards.items():
+            self.data[origin] = np.asarray(payload["v"]).copy()
+
+
+def burst(cfg_name: str, cfg: EngineConfig) -> None:
+    eng = CheckpointEngine(8, cfg)
+    vec = ShardedVec(8)
+    eng.register("state", vec)
+    assert eng.checkpoint({"step": 7})
+    orig = [d.copy() for d in vec.data]
+    rep = eng.memory_report()
+    print(
+        f"  [{cfg_name}] codec={rep['codec']} tolerance={rep['tolerance']} "
+        f"redundancy={rep['redundancy_bytes'][rep['codec']] / 2**10:.0f} KiB "
+        f"(overhead {rep['redundancy_overhead']:.2f} bytes/byte)"
+    )
+    for d in vec.data:
+        d *= 0.0
+    eng.stores[1].wipe()
+    eng.stores[2].wipe()  # correlated burst: both in parity group {0..3}
+    try:
+        eng.restore()
+    except DataLostError as e:
+        print(f"  [{cfg_name}] LOST after 2-failure burst: {e}")
+        return
+    ok = all(np.array_equal(vec.data[r], orig[r]) for r in range(8))
+    print(
+        f"  [{cfg_name}] recovered bit-identically: {ok} "
+        f"({eng.stats.reconstructed_restores} shards rebuilt)"
+    )
+    assert ok
+
+
+print("=== engine-level burst: xor vs rs ===")
+burst("xor  k=4     ", EngineConfig(parity_group=4))
+burst("rs   k=4 m=2 ", EngineConfig(codec="rs", parity_group=4, rs_parity=2))
+
+print("\n=== end-to-end: training through a mid-run group burst (rs, spares) ===")
+import jax
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.runtime.failures import FailureInjector
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+STEPS = 20
+cfg = get_config("llama3.2-1b").reduced()
+model = build_model(cfg)
+base = dict(batch=4, seq=32, total_steps=STEPS, checkpoint_period=5, n_virtual_hosts=8)
+
+ref = Trainer(model, TrainerConfig(**base))
+ref.run(STEPS)
+
+injector = FailureInjector(8)
+doomed = injector.schedule_group_burst(step=12, group_index=0, group_size=4, count=2)
+print(f"burst kills ranks {doomed} (group 0) at step 12")
+faulty = Trainer(
+    model,
+    TrainerConfig(
+        **base,
+        n_spares=4,
+        engine=EngineConfig(codec="rs", parity_group=4, rs_parity=2),
+    ),
+    injector=injector,
+)
+faulty.run(STEPS)
+
+same = all(
+    np.array_equal(a, b)
+    for a, b in zip(
+        jax.tree.leaves(jax.device_get(ref.state)),
+        jax.tree.leaves(jax.device_get(faulty.state)),
+    )
+)
+s = faulty.engine.stats
+print(f"recoveries: {faulty.n_recoveries}; restore breakdown: "
+      f"{s.zero_comm_restores} zero-comm, {s.reconstructed_restores} RS-rebuilt")
+print(f"final state bitwise-identical to fault-free run: {same}")
+assert same and faulty.n_recoveries >= 1
+print("OK")

@@ -4,14 +4,18 @@ Implements the coordinated, application-level, diskless scheme over a set of
 per-rank host stores:
 
   Algorithm 2 (``checkpoint``): create snapshots into writable buffers →
-  distribute partner copies per the registered scheme → handshake (liveness +
+  distribute redundancy per the registered codec → handshake (liveness +
   checksum validation) → pointer-swap all double buffers. A fault at any point
   before the swap leaves every read-only buffer untouched.
 
   Algorithm 4 (``restore``): a pure recovery plan maps every pre-fault rank to
   the store holding its data; survivors restore their own shards with zero
-  communication, lost shards are adopted from partner copies (or reconstructed
-  from XOR parity in erasure mode).
+  communication, lost shards are rebuilt by the codec (adopted whole copies,
+  XOR reconstruction, or Reed-Solomon multi-erasure decode).
+
+All redundancy math and placement lives behind the ``RedundancyCodec``
+interface (core/codec.py, DESIGN.md §8) — the engine encodes/decodes through
+``self.codec`` and has no scheme-specific branches.
 
 The engine is single-controller (it simulates the SPMD host set — see
 runtime.cluster); the device-tier collective program used on real pods is in
@@ -26,6 +30,7 @@ from typing import Any, Callable, Protocol
 
 import numpy as np
 
+from repro.core import codec as codec_mod
 from repro.core import distribution as dist
 from repro.core import parity as parity_mod
 from repro.core.hoststore import HostStore, StorePayload
@@ -65,9 +70,14 @@ class _ReplicatedAdapter:
 class EngineConfig:
     scheme: str = "pairwise"       # pairwise | neighbor (distribution callbacks)
     n_copies: int = 1              # R remote copies (eq. 2: MEM = S(1+2R'), R' = 1+n_copies)
-    parity_group: int = 0          # >0: erasure-coded mode with this group size
+    parity_group: int = 0          # >0: erasure-coded group size (k for xor/rs)
     compress: bool = False         # int8-compress partner payloads (beyond-paper)
     validate: bool = True          # checksum handshake
+    # Redundancy codec (DESIGN.md §8): "copy" | "xor" | "rs" | any registered
+    # name. Empty keeps the legacy inference — parity_group>0 selects "xor",
+    # otherwise the full-copy scheme — so existing configs are bit-identical.
+    codec: str = ""
+    rs_parity: int = 2             # m parity blobs per group for codec="rs"
 
 
 @dataclass
@@ -117,6 +127,9 @@ class CheckpointEngine:
             # the degenerate neighbor-copy scheme (a singleton's parity is
             # its snapshot, stored on the next group) and stays allowed.
             assert cfg.parity_group >= 1, cfg.parity_group
+        # All redundancy math + placement dispatches through the codec
+        # (DESIGN.md §8); the engine itself is scheme-agnostic.
+        self.codec = codec_mod.make_codec(cfg)
 
     # ------------------------------------------------------------------ #
     # registration
@@ -192,7 +205,7 @@ class CheckpointEngine:
                 for name, shards in packed.items():
                     flat, man = shards[r]
                     payload.own[name] = (flat, man)
-                    if self.cfg.parity_group and packed_partner[name] is not packed[name]:
+                    if self.codec.striped and packed_partner[name] is not packed[name]:
                         payload.own_exch[name] = packed_partner[name][r]
                     if self.cfg.validate:
                         payload.meta.setdefault("checksums", {})[name] = np_checksum(flat)
@@ -219,11 +232,8 @@ class CheckpointEngine:
         self._pending = None
         bytes_exchanged = 0
         try:
-            # -- distribute partner copies / parity stripes ------------------
-            if self.cfg.parity_group:
-                bytes_exchanged += self._distribute_parity(alive0, packed_partner)
-            else:
-                bytes_exchanged += self._distribute_copies(alive0, packed_partner)
+            # -- distribute redundancy (codec encode + placement) ------------
+            bytes_exchanged += self._distribute(alive0, packed_partner)
 
             self._fault_hook("after_distribute")
 
@@ -262,69 +272,64 @@ class CheckpointEngine:
                 s.buffer.discard_writable()
             self.stats.aborted += 1
 
-    def _backup_holders(self, origin: int) -> list[int]:
-        """Ranks that receive ``origin``'s snapshot under the active scheme."""
-        if self.cfg.n_copies == 1:
-            return [dist.get_scheme(self.cfg.scheme)(self.n_ranks, origin)[0]]
-        return [
-            (origin + s) % self.n_ranks
-            for s in dist.multi_copy_shifts(self.n_ranks, self.cfg.n_copies)
-        ]
+    def _groups(self) -> list[dist.ParityGroup]:
+        return dist.parity_groups(self.n_ranks, self.codec.group_size(self.n_ranks))
 
-    def _distribute_copies(self, alive: set[int], packed) -> int:
-        """Full-copy distribution per Algorithm 1 (R = n_copies shifts)."""
+    def _distribute(self, alive: set[int], packed) -> int:
+        """Codec-driven redundancy distribution (Algorithm 1 generalized):
+        per group, ``encode`` the members' packed shards into blobs and store
+        each blob's stripes on the ``placement`` holders. Full-copy codecs
+        are the degenerate case — singleton groups, whole-copy stripes."""
+        codec = self.codec
+        groups = self._groups()
         total = 0
-        for r in alive:
-            for send_to in self._backup_holders(r):
-                if send_to == r:
-                    continue
-                dest = self.stores[send_to]
-                if not dest.alive:
-                    continue
-                entry = {}
-                for name, shards in packed.items():
-                    if name in self._replicated:
-                        continue  # equal on all ranks: no exchange needed
-                    flat, man = shards[r]
-                    if self.cfg.compress:
-                        flat, man = self._compress(flat, man)
-                    entry[name] = (flat, man)
-                    total += int(flat.nbytes) if hasattr(flat, "nbytes") else 0
-                dest.buffer.writable.recv[r] = entry
-        return total
-
-    def _distribute_parity(self, alive: set[int], packed) -> int:
-        """XOR-parity stripes: group g's parity striped across group g+1."""
-        g = self.cfg.parity_group
-        total = 0
-        groups = dist.parity_groups(self.n_ranks, g)
-        n_groups = len(groups)
         # Manifests are tiny: replicate all of them with every store's meta so
-        # reconstruction can unpack any origin's bytes.
+        # any survivor can unpack any origin's rebuilt bytes. (Compression
+        # below swaps in the tagged compressed manifest per origin.)
         manifests = {
             (r, name): shards[r][1]
             for name, shards in packed.items()
             for r in range(self.n_ranks)
         }
-        for r in alive:
-            self.stores[r].buffer.writable.meta["manifests"] = manifests
         for gi, grp in enumerate(groups):
-            # One parity buffer per entity over the group's packed shards.
+            placements = codec.placement(groups, gi, self.n_ranks)
+            if not placements:
+                continue
             for name, shards in packed.items():
                 if name in self._replicated:
-                    continue  # equal on all ranks: no parity needed
-                bufs = [shards[m][0] for m in grp.members]
-                parity = parity_mod.encode_parity(bufs)
+                    continue  # equal on all ranks: no redundancy needed
+                bufs = []
+                for m in grp.members:
+                    flat, man = shards[m]
+                    if self.cfg.compress and codec.compressible:
+                        flat, man = self._compress(flat, man)
+                        manifests[(m, name)] = man
+                    bufs.append(flat)
+                blobs = codec.encode(bufs, len(placements))
                 # Stripe over however many members the *target* group has
-                # (ragged last groups appear at elastic world sizes).
-                target_grp = groups[(gi + 1) % n_groups]
-                stripes = parity_mod.split_stripes(parity, len(target_grp.members))
-                for j, member in enumerate(target_grp.members):
-                    st = self.stores[member]
-                    if not st.alive:
-                        continue
-                    st.buffer.writable.parity.setdefault(gi, {})[(name, j)] = stripes[j]
-                    total += stripes[j].nbytes
+                # (ragged last groups appear at elastic world sizes). A
+                # single-holder blob is stored by reference — whole copies
+                # must stay memcpy-free, and the stores never mutate buffers
+                # in place (wipe() drops the dict), so aliasing is safe.
+                for b, (blob, holders) in enumerate(zip(blobs, placements)):
+                    blob = np.asarray(blob).reshape(-1)
+                    stripes = (
+                        [blob]
+                        if len(holders) == 1
+                        else parity_mod.split_stripes(blob, len(holders))
+                    )
+                    for j, member in enumerate(holders):
+                        st = self.stores[member]
+                        if not st.alive:
+                            continue
+                        st.buffer.writable.parity.setdefault(gi, {})[(name, b, j)] = stripes[j]
+                        total += stripes[j].nbytes
+        for r in alive:
+            # ``alive`` is the create-time set; a rank killed mid-checkpoint
+            # has a wiped store (the handshake aborts the snapshot later).
+            st = self.stores[r]
+            if st.alive and st.buffer.writable is not None:
+                st.buffer.writable.meta["manifests"] = manifests
         return total
 
     def _compress(self, flat, man):
@@ -391,8 +396,12 @@ class CheckpointEngine:
         """Recover every origin's shard of one entity (Algorithm 4 inner loop)."""
         shards: dict[int, Any] = {}
         partials: dict[int, Any] = {}
+        # codec.decode solves ALL of a group's missing shards at once (an RS
+        # burst is one Gaussian solve); cache per group so co-failed origins
+        # share it instead of re-decoding per origin.
+        decode_cache: dict[int, dict[int, Any]] = {}
         for origin in range(self.n_ranks):
-            kind, payload = self._recover_shard(origin, name, alive, failed)
+            kind, payload = self._recover_shard(origin, name, alive, failed, decode_cache)
             if kind == "full":
                 shards[origin] = payload
             elif kind == "partial":
@@ -486,22 +495,15 @@ class CheckpointEngine:
 
     def _recovery_host(self, origin: int, alive: set[int]) -> int | None:
         """Old-world rank whose host ends up holding ``origin``'s recovered
-        payload (the survivor itself, the adopting partner, or the parity
-        rebuilder)."""
-        if origin in alive:
+        payload (the survivor itself, the adopting copy holder, or the
+        erasure rebuilder — the codec decides). An alive-but-empty origin
+        (revived spare) holds nothing: its shard is rebuilt elsewhere, and
+        residency must say so or elastic movement accounting undercounts."""
+        if origin in alive and self.stores[origin].buffer.valid:
             return origin
-        if self.cfg.parity_group:
-            grp = dist.parity_groups(self.n_ranks, self.cfg.parity_group)[
-                dist.group_of(origin, self.cfg.parity_group)
-            ]
-            for m in grp.members:
-                if m in alive:
-                    return m
-            return None
-        for h in self._backup_holders(origin):
-            if h in alive:
-                return h
-        return None
+        groups = self._groups()
+        gi = dist.group_of(origin, self.codec.group_size(self.n_ranks))
+        return self.codec.rebuilder(groups, gi, origin, alive)
 
     def _stored_coords(self, name: str):
         """Global-coordinate table recorded with the last valid checkpoint."""
@@ -512,7 +514,14 @@ class CheckpointEngine:
                     return table
         return None
 
-    def _recover_shard(self, origin: int, name: str, alive: set[int], failed: set[int]):
+    def _recover_shard(
+        self,
+        origin: int,
+        name: str,
+        alive: set[int],
+        failed: set[int],
+        decode_cache: dict[int, dict[int, Any]] | None = None,
+    ):
         """Returns ("full"|"partial", payload). Partial = partner-exchange
         subset needing a merge with a survivor's replicated leaves."""
         has_subset = hasattr(self._entities[name], "partner_payload")
@@ -531,62 +540,76 @@ class CheckpointEngine:
                     return "full", unpack_bytes(flat, man)
             raise dist.DataLostError(f"replicated entity {name!r} lost everywhere")
 
-        # 2. Full-copy modes: adopt from the partner that received the copy.
-        if not self.cfg.parity_group:
-            for h in self._backup_holders(origin):
-                st = self.stores.get(h)
-                if st is None or not st.alive or not st.buffer.valid:
-                    continue
-                entry = st.buffer.read_only.recv.get(origin, {}).get(name)
-                if entry is None:
-                    continue
-                flat, man = entry
-                self.stats.adopted_restores += 1
-                if isinstance(man, tuple) and man[0] == "compressed":
-                    payload = self._decompress(flat, man)
-                else:
-                    payload = unpack_bytes(flat, man)
-                return ("partial" if has_subset else "full"), payload
-            raise dist.DataLostError(
-                f"rank {origin} and all holders of its backup failed (entity {name!r})"
-            )
-
-        # 3. Parity mode: reconstruct from survivors + parity stripes.
-        g = self.cfg.parity_group
-        gi = dist.group_of(origin, g)
-        groups = dist.parity_groups(self.n_ranks, g)
+        # 2. Codec rebuild: gather the group's surviving shards + intact
+        # redundancy blobs and ask the codec to decode the missing ones.
+        # Full-copy codecs take the same path — singleton group, present={},
+        # decode adopts any surviving whole-copy blob (communication!).
+        codec = self.codec
+        groups = self._groups()
+        gi = dist.group_of(origin, codec.group_size(self.n_ranks))
         grp = groups[gi]
-        other_failed = [m for m in grp.members if m in failed and m != origin]
-        if other_failed:
-            raise dist.DataLostError(
-                f"parity group {gi} lost {len(other_failed) + 1} members; XOR tolerates 1"
-            )
-        # Gather parity stripes (hosted on the next group).
-        target_grp = groups[(gi + 1) % len(groups)]
-        stripes = []
-        for j, member in enumerate(target_grp.members):
-            st = self.stores[member]
-            if not st.alive or not st.buffer.valid:
-                raise dist.DataLostError(
-                    f"parity stripe {j} of group {gi} lost (host {member} dead)"
-                )
-            stripes.append(st.buffer.read_only.parity[gi][(name, j)])
-        parity = parity_mod.join_stripes(stripes)
-        # Gather surviving members' packed exchange subsets (communication!).
-        surv_bufs = []
-        for m in grp.members:
-            if m == origin:
-                continue
-            ro = self.stores[m].buffer.read_only
-            flat, _ = ro.own_exch.get(name, ro.own[name])
-            surv_bufs.append(flat)
-        origin_man = self._parity_manifest(origin, name, gi)
-        rebuilt = parity_mod.reconstruct(surv_bufs, parity)[: origin_man.total]
-        self.stats.reconstructed_restores += 1
-        has_subset = hasattr(self._entities[name], "partner_payload")
-        return ("partial" if has_subset else "full"), unpack_bytes(rebuilt, origin_man)
 
-    def _parity_manifest(self, origin: int, name: str, gi: int) -> Manifest:
+        def _has_data(m: int) -> bool:
+            st = self.stores.get(m)
+            return st is not None and st.alive and st.buffer.valid
+
+        rebuilt_map = decode_cache.get(gi) if decode_cache is not None else None
+        if rebuilt_map is None:
+            # Missing = dead ranks AND alive-but-empty ones (revived spares):
+            # both lost their in-memory shard and count against tolerance().
+            missing_idx = [i for i, m in enumerate(grp.members) if not _has_data(m)]
+            if len(missing_idx) > codec.tolerance():
+                raise dist.DataLostError(
+                    f"group {gi} lost {len(missing_idx)} members; "
+                    f"codec {codec.name!r} tolerates {codec.tolerance()}"
+                )
+            blobs: dict[int, np.ndarray] = {}
+            for b, holders in enumerate(codec.placement(groups, gi, self.n_ranks)):
+                stripes: list[np.ndarray] | None = []
+                for j, member in enumerate(holders):
+                    stripe = (
+                        self.stores[member].buffer.read_only.parity.get(gi, {}).get((name, b, j))
+                        if _has_data(member)
+                        else None
+                    )
+                    if stripe is None:
+                        stripes = None  # any lost stripe kills the whole blob
+                        break
+                    stripes.append(stripe)
+                if stripes is not None:
+                    # Single-stripe blobs (whole copies) adopt by reference —
+                    # no memcpy, mirroring the distribute path.
+                    blobs[b] = (
+                        stripes[0]
+                        if len(stripes) == 1
+                        else parity_mod.join_stripes(stripes)
+                    )
+            present: dict[int, np.ndarray] = {}
+            for i, m in enumerate(grp.members):
+                if i in missing_idx:
+                    continue
+                ro = self.stores[m].buffer.read_only
+                present[i] = ro.own_exch.get(name, ro.own[name])[0]
+            try:
+                rebuilt_map = codec.decode(present, blobs, missing_idx)
+            except codec_mod.CodecDecodeError as e:
+                raise dist.DataLostError(
+                    f"rank {origin} (group {gi}) unrecoverable under codec "
+                    f"{codec.name!r}, entity {name!r}: {e}"
+                ) from e
+            if decode_cache is not None:
+                decode_cache[gi] = rebuilt_map
+        rebuilt = np.asarray(rebuilt_map[grp.members.index(origin)]).reshape(-1)
+        if codec.striped:
+            self.stats.reconstructed_restores += 1
+        else:
+            self.stats.adopted_restores += 1
+        man = self._redundancy_manifest(origin, name)
+        if isinstance(man, tuple) and man[0] == "compressed":
+            return ("partial" if has_subset else "full"), self._decompress(rebuilt, man)
+        return ("partial" if has_subset else "full"), unpack_bytes(rebuilt[: man.total], man)
+
+    def _redundancy_manifest(self, origin: int, name: str) -> Manifest:
         # Manifests are tiny; replicate them with the stripes at distribute time.
         for st in self.stores.values():
             if st.alive and st.buffer.valid:
@@ -599,11 +622,28 @@ class CheckpointEngine:
     # memory accounting (paper eq. 2)
     # ------------------------------------------------------------------ #
     def memory_report(self) -> dict[str, Any]:
+        """Eq.-2-style accounting, itemized per redundancy kind so the
+        DESIGN.md §8 memory/tolerance trade-off table is checkable from code:
+        ``by_kind[r]`` splits each rank's bytes into own snapshots, exchange
+        subsets, and redundancy (copies / XOR stripes / RS blobs), and
+        ``redundancy_bytes`` totals the latter under the active codec."""
         per_rank = {r: s.nbytes for r, s in self.stores.items() if s.alive}
+        by_kind = {r: s.nbytes_by_kind() for r, s in self.stores.items() if s.alive}
+        group = self.codec.group_size(self.n_ranks)
         return {
             "bytes_per_rank": per_rank,
+            "by_kind": by_kind,
             "total_bytes": sum(per_rank.values()),
             "n_ranks": self.n_ranks,
+            "codec": self.codec.name,
+            "tolerance": self.codec.tolerance(),
+            "redundancy_bytes": {
+                self.codec.name: sum(k["redundancy"] for k in by_kind.values())
+            },
+            "exchange_bytes": sum(k["exchange"] for k in by_kind.values()),
+            # Redundancy bytes per data byte the codec promises (copies: R;
+            # xor: 1/g; rs: m/g) — compare against the measured split above.
+            "redundancy_overhead": self.codec.memory_overhead(group, self.n_ranks),
         }
 
 

@@ -1,0 +1,365 @@
+"""The pluggable redundancy-codec layer — DESIGN.md §8.
+
+Every redundancy scheme (pairwise/neighbor/multi-copy, XOR parity,
+Reed-Solomon) is a ``RedundancyCodec``: a pure object that knows how to
+
+  * partition the rank space into **groups** (``group_size``),
+  * turn a group's serialized shards into **redundancy blobs** (``encode``),
+  * decide **where** each blob's stripes live (``placement``),
+  * rebuild missing shards from survivors + blobs (``decode``), and
+  * state its **tolerance** (max concurrent shard losses per group).
+
+``CheckpointEngine`` dispatches distribution, recovery, and the elastic
+N-to-M path exclusively through this interface — it has no mode-specific
+branches, so a new scheme is a ``register_codec`` call away (the paper's
+extensibility requirement, now covering redundancy as well as distribution).
+
+Provided codecs:
+
+  * ``copy`` — the paper's full-copy schemes. Each rank is its own group of
+    one; the "blobs" are R whole copies placed on the scheme's shifted
+    partners (Algorithm 1's pairwise N/2 shift, neighbor, multi_copy).
+  * ``xor``  — Plank-style single-parity erasure coding: one XOR blob per
+    group, striped across the next group. Tolerates 1 loss per group.
+  * ``rs``   — Reed-Solomon over GF(2^8) (core/gf256.py): m Cauchy-matrix
+    parity blobs per group of k, blob b striped across neighbor group
+    gi+1+b. With more than m+1 groups the blobs land on distinct groups,
+    so one lost group costs one blob, not all; smaller worlds wrap blobs
+    onto the same neighbor and degrade toward XOR's holder sensitivity.
+    Tolerates **any m concurrent losses per group** while the holder
+    groups are intact — the multi-failure gap Agullo et al.
+    (arXiv:2010.13342) flag for exascale failure rates.
+
+Group-local shard indices are used throughout ``encode``/``decode``; the
+engine maps them to ranks via the group list from ``core.distribution``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+from repro.core import distribution as dist
+from repro.core import gf256
+from repro.core import parity as parity_mod
+
+
+class CodecDecodeError(RuntimeError):
+    """Decode is impossible with the surviving shards + blobs (the engine
+    wraps this into distribution.DataLostError with placement context)."""
+
+
+class RedundancyCodec:
+    """Interface contract (see DESIGN.md §8 for the full semantics):
+
+    encode(bufs, n_out)   k group-local byte buffers -> n_out redundancy
+                          blobs, each ``placement()``-striped by the engine.
+                          Buffers may be ragged; blobs are padded to the
+                          4-aligned max (zero padding must be free).
+    placement(groups, gi, n_ranks)
+                          one holder-rank tuple per blob; a blob is split
+                          into len(holders) stripes, stripe j on holders[j].
+                          Holders must avoid group gi's failure domain
+                          whenever the world allows it.
+    decode(present, blobs, missing)
+                          group-local index -> rebuilt padded buffer for
+                          every index in ``missing``; raises CodecDecodeError
+                          if the surviving set is insufficient.
+    tolerance()           max len(missing) per group guaranteed decodable
+                          when the blob holders are intact.
+    rebuilder(groups, gi, origin, alive)
+                          the rank that materializes origin's rebuilt shard
+                          (recovery-plan + elastic-residency input).
+    """
+
+    name: str = "?"
+    #: blobs are striped across holder groups (False: whole copies on ranks)
+    striped: bool = True
+    #: engine may int8-compress the group's buffers before encode (full-copy
+    #: codecs only: parity blobs of lossy-compressed buffers would have to
+    #: store the compressed exchange set too — see EngineConfig.compress)
+    compressible: bool = False
+
+    def group_size(self, n_ranks: int) -> int:
+        raise NotImplementedError
+
+    def n_blobs(self, group_size: int) -> int:
+        raise NotImplementedError
+
+    def tolerance(self) -> int:
+        raise NotImplementedError
+
+    def encode(self, bufs: list[np.ndarray], n_out: int) -> list[np.ndarray]:
+        raise NotImplementedError
+
+    def placement(
+        self, groups: list[dist.ParityGroup], gi: int, n_ranks: int
+    ) -> list[tuple[int, ...]]:
+        raise NotImplementedError
+
+    def decode(
+        self,
+        present: dict[int, np.ndarray],
+        blobs: dict[int, np.ndarray],
+        missing: list[int],
+    ) -> dict[int, np.ndarray]:
+        raise NotImplementedError
+
+    def rebuilder(
+        self, groups: list[dist.ParityGroup], gi: int, origin: int, alive: set[int]
+    ) -> int | None:
+        """Default: lowest surviving group member, else lowest surviving
+        stripe holder (singleton groups: the blob IS the snapshot)."""
+        for m in groups[gi].members:
+            if m != origin and m in alive:
+                return m
+        for holders in self.placement(groups, gi, max(g.members[-1] for g in groups) + 1):
+            for h in holders:
+                if h in alive:
+                    return h
+        return None
+
+    def memory_overhead(self, group_size: int, n_ranks: int) -> float:
+        """Redundancy bytes stored per data byte (eq. 2-style accounting)."""
+        return self.n_blobs(group_size) / max(group_size, 1)
+
+
+# ---------------------------------------------------------------------------
+# copy codec — the paper's full-copy distribution schemes as a codec
+# ---------------------------------------------------------------------------
+
+class CopyCodec(RedundancyCodec):
+    name = "copy"
+    striped = False
+    compressible = True
+
+    def __init__(self, scheme: str = "pairwise", n_copies: int = 1) -> None:
+        self.scheme = scheme
+        self.n_copies = n_copies
+
+    def group_size(self, n_ranks: int) -> int:
+        return 1
+
+    def n_blobs(self, group_size: int) -> int:
+        return self.n_copies
+
+    def tolerance(self) -> int:
+        # Any single group (= rank) may die outright; its copies elsewhere
+        # rebuild it. Deeper guarantees depend on which holders survive.
+        return 1
+
+    def holders(self, n_ranks: int, origin: int) -> list[int]:
+        """Ranks receiving ``origin``'s full copy under the active scheme."""
+        if self.n_copies == 1:
+            h = dist.get_scheme(self.scheme)(n_ranks, origin)[0]
+            return [h] if h != origin else []
+        return [
+            (origin + s) % n_ranks
+            for s in dist.multi_copy_shifts(n_ranks, self.n_copies)
+            if s % n_ranks != 0
+        ]
+
+    def placement(self, groups, gi, n_ranks):
+        # Group gi is the singleton {gi}; one whole-copy "stripe" per holder.
+        return [(h,) for h in self.holders(n_ranks, gi)]
+
+    def memory_overhead(self, group_size, n_ranks):
+        # The ACTUAL copies stored, not n_copies: multi_copy_shifts dedupes
+        # at small world sizes (and a 1-rank world stores none).
+        return float(len(self.holders(n_ranks, 0)))
+
+    def encode(self, bufs, n_out):
+        assert len(bufs) == 1
+        return [bufs[0]] * n_out  # references: R copies of the same bytes
+
+    def decode(self, present, blobs, missing):
+        if missing and not blobs:
+            raise CodecDecodeError("origin and every holder of its copies failed")
+        return {i: blobs[min(blobs)] for i in missing}
+
+    def rebuilder(self, groups, gi, origin, alive):
+        for holders in self.placement(groups, gi, max(g.members[-1] for g in groups) + 1):
+            if holders[0] in alive:
+                return holders[0]  # first alive holder, scheme order
+        return None
+
+
+# ---------------------------------------------------------------------------
+# group erasure codecs — XOR (m=1) and Reed-Solomon (any m)
+# ---------------------------------------------------------------------------
+
+class GroupCodecBase(RedundancyCodec):
+    """Shared plumbing for group-structured erasure codecs: groups of
+    ``group`` ranks, blob b striped across neighbor group gi+1+b (wrapping,
+    skipping gi itself so a group never hosts its own protection unless it
+    is the only group in the world)."""
+
+    def __init__(self, group: int) -> None:
+        assert group >= 1, group
+        self.group = group
+
+    def group_size(self, n_ranks: int) -> int:
+        return self.group
+
+    def placement(self, groups, gi, n_ranks):
+        n_groups = len(groups)
+        others = [(gi + 1 + t) % n_groups for t in range(n_groups)]
+        others = [g for g in others if g != gi] or [gi]
+        return [
+            groups[others[b % len(others)]].members
+            for b in range(self.n_blobs(len(groups[gi].members)))
+        ]
+
+
+class XorCodec(GroupCodecBase):
+    name = "xor"
+
+    def n_blobs(self, group_size: int) -> int:
+        return 1
+
+    def tolerance(self) -> int:
+        return 1
+
+    def encode(self, bufs, n_out):
+        assert n_out == 1
+        return [parity_mod.encode_parity(bufs)]
+
+    def decode(self, present, blobs, missing):
+        if len(missing) > 1:
+            raise CodecDecodeError(f"{len(missing)} losses in one group; XOR tolerates 1")
+        if not missing:
+            return {}
+        if 0 not in blobs:
+            raise CodecDecodeError("XOR parity blob lost")
+        rebuilt = parity_mod.reconstruct(
+            [b.reshape(-1) for b in present.values()], blobs[0]
+        )
+        return {missing[0]: rebuilt}
+
+
+class RSCodec(GroupCodecBase):
+    name = "rs"
+
+    def __init__(self, group: int, m: int = 2) -> None:
+        super().__init__(group)
+        assert m >= 1 and group + m <= 255, (group, m)
+        self.m = m
+        self.coef = gf256.cauchy_matrix(m, group)  # sliced for ragged groups
+
+    def n_blobs(self, group_size: int) -> int:
+        return self.m
+
+    def tolerance(self) -> int:
+        return self.m
+
+    def encode(self, bufs, n_out):
+        assert n_out == self.m
+        return gf256.rs_encode(bufs, self.m, self.coef)
+
+    def decode(self, present, blobs, missing):
+        if len(missing) > self.m:
+            raise CodecDecodeError(
+                f"{len(missing)} losses in one group; rs(m={self.m}) tolerates {self.m}"
+            )
+        k = self.group
+        try:
+            return gf256.rs_decode(present, blobs, missing, k, self.coef)
+        except ValueError as e:
+            raise CodecDecodeError(str(e)) from e
+
+
+# ---------------------------------------------------------------------------
+# registry (user-extensible, mirrors distribution.register_scheme)
+# ---------------------------------------------------------------------------
+
+CodecFactory = Callable[..., RedundancyCodec]
+_CODECS: dict[str, CodecFactory] = {}
+
+
+def register_codec(name: str, factory: CodecFactory) -> None:
+    """Register a codec factory: ``factory(cfg)`` with an EngineConfig-like
+    object (duck-typed: scheme, n_copies, parity_group, rs_parity)."""
+    _CODECS[name] = factory
+
+
+def get_codec(name: str) -> CodecFactory:
+    if name not in _CODECS:
+        raise KeyError(f"unknown redundancy codec {name!r}; have {sorted(_CODECS)}")
+    return _CODECS[name]
+
+
+def make_codec(cfg) -> RedundancyCodec:
+    """Resolve an EngineConfig to a codec instance. ``cfg.codec`` names it
+    explicitly; empty keeps the legacy inference (parity_group>0 -> xor,
+    else the full-copy scheme) so existing configs are bit-identical."""
+    name = getattr(cfg, "codec", "") or ("xor" if cfg.parity_group else "copy")
+    return get_codec(name)(cfg)
+
+
+def _require_group(cfg, name: str) -> int:
+    # An explicit group codec with no group size is a silent-footgun config
+    # (k would have to be guessed; a guessed single-group world offers zero
+    # protection) — make the operator choose k.
+    if cfg.parity_group < 1:
+        raise ValueError(
+            f"codec {name!r} requires parity_group >= 1 (the group size k)"
+        )
+    return cfg.parity_group
+
+
+register_codec("copy", lambda cfg: CopyCodec(cfg.scheme, cfg.n_copies))
+register_codec("xor", lambda cfg: XorCodec(_require_group(cfg, "xor")))
+register_codec(
+    "rs", lambda cfg: RSCodec(_require_group(cfg, "rs"), getattr(cfg, "rs_parity", 2))
+)
+
+
+# ---------------------------------------------------------------------------
+# recovery planning (Algorithm 4 generalized to any codec)
+# ---------------------------------------------------------------------------
+
+def codec_recovery_plan(
+    n_prev: int, failed: set[int], codec: RedundancyCodec
+) -> dict[int, int]:
+    """origin_prev_rank -> new dense rank that restores its blocks, for any
+    codec. Raises distribution.DataLostError when the failure set exceeds a
+    group's tolerance or destroys the blobs needed to cover its losses.
+
+    ``failed`` is the plan's whole world view: the engine's restore path
+    additionally treats alive-but-empty stores (revived spares) as missing,
+    so include such ranks in ``failed`` when planning against a partially
+    revived world — with that, ``parity_recovery_plan`` (XOR) and the
+    engine agree, all dispatching through the same codec calls.
+    """
+    reassign = dist.shrink_reassignment(n_prev, failed)
+    alive = {r for r in range(n_prev) if r not in failed}
+    groups = dist.parity_groups(n_prev, codec.group_size(n_prev))
+    plan: dict[int, int] = {}
+    for origin in range(n_prev):
+        if origin not in failed:
+            plan[origin] = reassign[origin]
+            continue
+        gi = dist.group_of(origin, codec.group_size(n_prev))
+        grp = groups[gi]
+        missing = [m for m in grp.members if m in failed]
+        if len(missing) > codec.tolerance():
+            raise dist.DataLostError(
+                f"group {gi} lost {len(missing)} members; "
+                f"codec {codec.name!r} tolerates {codec.tolerance()}"
+            )
+        # A blob survives iff every holder of its stripes survives.
+        blobs_alive = sum(
+            all(h not in failed for h in holders)
+            for holders in codec.placement(groups, gi, n_prev)
+        )
+        if blobs_alive < len(missing):
+            raise dist.DataLostError(
+                f"group {gi}: {len(missing)} losses but only {blobs_alive} "
+                f"intact redundancy blobs (codec {codec.name!r})"
+            )
+        host = codec.rebuilder(groups, gi, origin, alive)
+        if host is None:
+            raise dist.DataLostError(f"no surviving rank can rebuild rank {origin}")
+        plan[origin] = reassign[host]
+    return plan

@@ -32,6 +32,7 @@ def save_to_disk(engine: CheckpointEngine, path: str) -> int:
         payload = store.buffer.read_only
         blob = {
             "own": {k: (np.asarray(v[0]), v[1]) for k, v in payload.own.items()},
+            "own_exch": payload.own_exch,
             "recv": payload.recv,
             "parity": payload.parity,
             "meta": payload.meta,
@@ -49,7 +50,9 @@ def save_to_disk(engine: CheckpointEngine, path: str) -> int:
 
 def load_from_disk(engine: CheckpointEngine, path: str) -> None:
     """Rehydrate the engine's read-only buffers from a disk checkpoint
-    (whole-system restart: every in-memory snapshot was lost)."""
+    (whole-system restart: every in-memory snapshot was lost). Pre-codec
+    checkpoints are migrated into the codec stripe layout so failed-rank
+    recovery keeps working across the format change."""
     from repro.core.hoststore import StorePayload
 
     with open(os.path.join(path, "index.pkl"), "rb") as f:
@@ -59,9 +62,50 @@ def load_from_disk(engine: CheckpointEngine, path: str) -> None:
         with open(os.path.join(path, f"rank{r:05d}.pkl"), "rb") as f:
             blob = pickle.load(f)
         payload = StorePayload(
-            own=blob["own"], recv=blob["recv"], parity=blob["parity"], meta=blob["meta"]
+            own=blob["own"],
+            own_exch=blob.get("own_exch", {}),
+            recv=blob["recv"],
+            parity=blob["parity"],
+            meta=blob["meta"],
         )
         store = engine.stores[r]
         store.revive(r)
         store.buffer.write(payload)
         store.buffer.swap()
+    _migrate_legacy_layout(engine)
+
+
+def _migrate_legacy_layout(engine: CheckpointEngine) -> None:
+    """Translate pre-codec store layouts in place after a disk load:
+
+    * parity stripes keyed ``(entity, stripe)`` -> ``(entity, blob=0, stripe)``
+      (XOR had exactly one blob per group);
+    * ``recv`` partner copies -> whole-blob stripes at the codec's placement
+      for the holder that physically held them, with their manifests
+      replicated into meta so codec decode can unpack the bytes.
+    """
+    from repro.core import distribution as dist
+
+    groups = dist.parity_groups(
+        engine.n_ranks, engine.codec.group_size(engine.n_ranks)
+    )
+    placements = {
+        gi: engine.codec.placement(groups, gi, engine.n_ranks)
+        for gi in range(len(groups))
+    }
+    for store in engine.stores.values():
+        payload = store.buffer.read_only
+        if payload is None:
+            continue
+        for stripes in payload.parity.values():
+            for key in [k for k in stripes if len(k) == 2]:
+                name, j = key
+                stripes[(name, 0, j)] = stripes.pop(key)
+        for origin, entry in list(payload.recv.items()):
+            for b, holders in enumerate(placements.get(origin, [])):
+                if store.rank not in holders:
+                    continue
+                for name, (flat, man) in entry.items():
+                    payload.parity.setdefault(origin, {})[(name, b, 0)] = flat
+                    payload.meta.setdefault("manifests", {})[(origin, name)] = man
+            del payload.recv[origin]

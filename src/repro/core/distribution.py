@@ -14,6 +14,10 @@ Provided schemes:
   * ``multi_copy`` — R evenly-spaced shifts (eq. 2's general R).
   * ``parity_group`` — XOR-parity groups (Plank-style diskless erasure coding;
                      beyond-paper memory optimization, see core/parity.py).
+
+Redundancy *encoding* (copies vs XOR vs Reed-Solomon) lives one layer up in
+core/codec.py (DESIGN.md §8); this module provides the group partitioning and
+rank-permutation primitives the codecs build their placements from.
 """
 
 from __future__ import annotations
@@ -197,41 +201,17 @@ def group_of(rank: int, group_size: int) -> int:
 def parity_recovery_plan(
     n_prev: int, failed: set[int], group_size: int
 ) -> dict[int, int]:
-    """Algorithm 4 for parity-group mode: origin_prev_rank -> new_rank that
-    reconstructs (or locally restores) its blocks.
+    """Algorithm 4 for XOR parity-group mode: origin_prev_rank -> new_rank
+    that reconstructs (or locally restores) its blocks.
 
-    XOR tolerates one failure per group, and reconstruction additionally
-    needs every stripe of the group's parity, hosted on the *next* group.
-    Handles a short last group (elastic world sizes): its parity is striped
-    over the following group's members, wrapping to group 0.
+    A thin wrapper over the codec layer's generic plan (codec.py): XOR
+    tolerates one failure per group, reconstruction additionally needs every
+    stripe of the group's parity blob (hosted on the next group, wrapping —
+    in a single-group world a failed member takes its own stripe down), and
+    short last groups from elastic world sizes are handled by the group
+    partitioning itself. The lowest surviving member rebuilds; a singleton
+    group's parity IS its snapshot, so its stripe holder adopts it.
     """
-    reassign = shrink_reassignment(n_prev, failed)
-    groups = parity_groups(n_prev, group_size)
-    plan: dict[int, int] = {}
-    for origin in range(n_prev):
-        if origin not in failed:
-            plan[origin] = reassign[origin]
-            continue
-        gi = group_of(origin, group_size)
-        grp = groups[gi]
-        others = [m for m in grp.others(origin) if m not in failed]
-        if len(others) != len(grp.members) - 1:
-            raise DataLostError(
-                f"parity group {gi} lost >=2 members; XOR tolerates 1"
-            )
-        stripe_holders = groups[(gi + 1) % len(groups)].members
-        # The origin is NOT excluded: in a single-group world the stripes
-        # wrap onto the group itself, so a failed member takes its own
-        # stripe down with it — the engine's restore path rejects exactly
-        # this, and the plan must agree with it.
-        dead_holders = [m for m in stripe_holders if m in failed]
-        if dead_holders:
-            raise DataLostError(
-                f"parity stripes of group {gi} lost (holders {dead_holders} dead)"
-            )
-        # The lowest surviving member of the group performs the XOR rebuild;
-        # a singleton group's parity IS its snapshot, so any stripe holder
-        # can adopt it (lowest holder, deterministically).
-        rebuilders = others or list(stripe_holders)
-        plan[origin] = reassign[min(rebuilders)]
-    return plan
+    from repro.core.codec import XorCodec, codec_recovery_plan
+
+    return codec_recovery_plan(n_prev, failed, XorCodec(group_size))

@@ -1,0 +1,203 @@
+"""GF(2^8) arithmetic + Reed-Solomon erasure coding — host tier.
+
+The Reed-Solomon redundancy codec (core/codec.py, DESIGN.md §8) encodes a
+parity group's k data shards into m parity blobs such that *any* m concurrent
+shard losses per group are recoverable — the multi-failure gap Agullo et al.
+(arXiv:2010.13342) identify in single-parity diskless schemes like our XOR
+mode.
+
+Construction: the m×k generator is a **Cauchy matrix** over GF(2^8)
+(``C[j][i] = 1/(x_j ⊕ y_i)`` with distinct nodes), whose every square
+submatrix is invertible — so any e ≤ m surviving parity rows solve for any e
+missing data shards (Blömer et al.'s Cauchy-RS; classic Vandermonde systematic
+forms lack this guarantee). Field arithmetic runs through log/antilog tables
+(primitive polynomial 0x11D, generator α=2); the zero-operand special case is
+folded into the tables with a sentinel log and a zero-padded antilog tail, so
+the vectorized byte ops are two ``np.take``s and an add with no branches.
+
+The device-tier encode is the Pallas kernel in kernels/rs_encode.py (same
+math, constant-folded xtime chains instead of runtime table lookups); this
+module is its numerical reference and the engine's host-tier path.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+GF_POLY = 0x11D  # x^8 + x^4 + x^3 + x^2 + 1, the standard RS(255) polynomial
+_ORDER = 255
+
+# Sentinel scheme: LOG32[0] = 512 and EXP_TABLE[510:] = 0, so any product with
+# a zero operand indexes into the zero tail (one zero: 512 + 254 = 766; both
+# zero: 512 + 512 = 1024 < 2048) while nonzero log sums stay below 509 — no
+# masking needed anywhere.
+_LOG_ZERO = 512
+
+
+def _build_tables() -> tuple[np.ndarray, np.ndarray]:
+    exp = np.zeros(2048, np.uint8)
+    log = np.full(256, _LOG_ZERO, np.int32)
+    x = 1
+    for i in range(_ORDER):
+        exp[i] = x
+        log[x] = i
+        x <<= 1
+        if x & 0x100:
+            x ^= GF_POLY
+    exp[_ORDER : 2 * _ORDER] = exp[:_ORDER]  # wrap: α^(i+255) = α^i
+    return exp, log
+
+
+EXP_TABLE, LOG32 = _build_tables()
+
+
+def gf_mul(a: int, b: int) -> int:
+    """Scalar product in GF(2^8)."""
+    return int(EXP_TABLE[LOG32[a] + LOG32[b]])
+
+
+def gf_inv(a: int) -> int:
+    assert a != 0, "zero has no inverse in GF(2^8)"
+    return int(EXP_TABLE[_ORDER - int(LOG32[a])])
+
+
+def gf_mul_bytes(c: int, buf: np.ndarray) -> np.ndarray:
+    """Vectorized c · buf over GF(2^8): two table gathers + an int add."""
+    assert buf.dtype == np.uint8
+    if c == 0:
+        return np.zeros_like(buf)
+    if c == 1:
+        return buf.copy()
+    return EXP_TABLE[LOG32[buf] + int(LOG32[c])]
+
+
+def gf_addmul_into(acc: np.ndarray, c: int, buf: np.ndarray) -> None:
+    """acc ^= c · buf, XORing over the common prefix only (ragged tails)."""
+    n = min(acc.shape[0], buf.shape[0])
+    if c == 0 or n == 0:
+        return
+    if c == 1:
+        acc[:n] ^= buf[:n]
+    else:
+        acc[:n] ^= EXP_TABLE[LOG32[buf[:n]] + int(LOG32[c])]
+
+
+def cauchy_matrix(m: int, k: int) -> np.ndarray:
+    """(m, k) Cauchy generator: C[j][i] = (x_j ⊕ y_i)^-1, x_j = j, y_i = m+i.
+
+    Node sets {0..m-1} and {m..m+k-1} are disjoint, so every entry is the
+    inverse of a nonzero element; every square submatrix of C — and of the
+    systematic stack [I_k ; C] — is invertible, which is exactly the
+    any-m-erasures guarantee.
+    """
+    assert m >= 1 and k >= 1 and m + k <= 256, (m, k)
+    out = np.zeros((m, k), np.uint8)
+    for j in range(m):
+        for i in range(k):
+            out[j, i] = gf_inv(j ^ (m + i))
+    return out
+
+
+def solve_gf(A: np.ndarray, rhs: list[np.ndarray]) -> list[np.ndarray]:
+    """Solve A·x = rhs over GF(2^8) by Gaussian elimination.
+
+    A is (e, e) uint8 and invertible (a Cauchy submatrix); rhs is e byte
+    buffers (the syndromes). Row ops are vectorized over the buffers — the
+    e ≤ m pivot loop is tiny, the data passes are the cost.
+    """
+    e = A.shape[0]
+    A = A.astype(np.uint8).copy()
+    rhs = [r.copy() for r in rhs]
+    for col in range(e):
+        piv = next(r for r in range(col, e) if A[r, col])
+        if piv != col:
+            A[[col, piv]] = A[[piv, col]]
+            rhs[col], rhs[piv] = rhs[piv], rhs[col]
+        inv = gf_inv(int(A[col, col]))
+        if inv != 1:
+            A[col] = EXP_TABLE[LOG32[A[col]] + int(LOG32[inv])]
+            rhs[col] = gf_mul_bytes(inv, rhs[col])
+        for r in range(e):
+            c = int(A[r, col])
+            if r == col or c == 0:
+                continue
+            A[r] ^= EXP_TABLE[LOG32[A[col]] + int(LOG32[c])]
+            gf_addmul_into(rhs[r], c, rhs[col])
+    return rhs
+
+
+# ---------------------------------------------------------------------------
+# Reed-Solomon encode / decode over byte buffers
+# ---------------------------------------------------------------------------
+
+def _padded_len(bufs: list[np.ndarray]) -> int:
+    n = max(b.nbytes for b in bufs)
+    return n + (-n) % 4  # 4-aligned like XOR parity (uint32 stripe views)
+
+
+def rs_encode(bufs: list[np.ndarray], m: int, coef: np.ndarray | None = None) -> list[np.ndarray]:
+    """k data buffers (ragged lengths ok) -> m parity blobs of the padded size.
+
+    blob_j = ⊕_i C[j][i] · data_i, accumulated over each buffer's prefix —
+    the implicit zero padding contributes nothing, so no buffer is copied.
+    """
+    k = len(bufs)
+    C = cauchy_matrix(m, k) if coef is None else coef[:, :k]
+    n = _padded_len(bufs)
+    blobs = []
+    for j in range(m):
+        acc = np.zeros(n, np.uint8)
+        for i, b in enumerate(bufs):
+            gf_addmul_into(acc, int(C[j, i]), b.reshape(-1))
+        blobs.append(acc)
+    return blobs
+
+
+def rs_decode(
+    present: dict[int, np.ndarray],
+    blobs: dict[int, np.ndarray],
+    missing: list[int],
+    k: int,
+    coef: np.ndarray | None = None,
+    m: int | None = None,
+) -> dict[int, np.ndarray]:
+    """Rebuild ``missing`` data shards (group-local indices) from survivors.
+
+    present: index -> surviving data buffer (ragged lengths ok)
+    blobs:   parity index -> intact parity blob (any e of them suffice)
+    Decoding needs the encode-time generator: pass the same ``coef`` matrix,
+    or the same ``m`` to rebuild it (Cauchy entries depend on m, so it cannot
+    be inferred from the surviving blob indices).
+    Returns index -> rebuilt padded buffer; callers truncate via manifests.
+    Raises ValueError if fewer than len(missing) parity blobs survive.
+    """
+    e = len(missing)
+    if e == 0:
+        return {}
+    if len(blobs) < e:
+        raise ValueError(
+            f"need {e} parity blobs to rebuild {e} shards, only {len(blobs)} survive"
+        )
+    if coef is None:
+        assert m is not None, "rs_decode needs the encode-time coef matrix or m"
+        coef = cauchy_matrix(m, k)
+    C = coef
+    rows = sorted(blobs)[:e]
+    # Syndromes: what the missing shards must XOR-sum to under each row.
+    syndromes = []
+    for j in rows:
+        s = blobs[j].copy()
+        for i, b in present.items():
+            gf_addmul_into(s, int(C[j, i]), b.reshape(-1))
+        syndromes.append(s)
+    A = np.array([[C[j, i] for i in missing] for j in rows], np.uint8)
+    solved = solve_gf(A, syndromes)
+    return {i: buf for i, buf in zip(missing, solved)}
+
+
+def device_rs_encode(arrays: list, coef: np.ndarray) -> list[np.ndarray]:
+    """Device-tier RS encode via the Pallas GF(2^8) kernel (kernels/rs_encode)."""
+    from repro.kernels import ops
+
+    out_u32 = ops.rs_encode_arrays(list(arrays), tuple(tuple(int(c) for c in row) for row in coef))
+    return [np.asarray(row).view(np.uint8) for row in out_u32]

@@ -4,9 +4,15 @@ One ``HostStore`` models the main memory of one failure-domain rank (a TPU
 host / data-axis coordinate). Its double buffer holds:
 
   * ``own``    — this rank's serialized snapshot shards, per entity
-  * ``recv``   — partner shards received under the distribution scheme
-  * ``parity`` — parity stripes hosted for other groups (parity mode)
-  * ``meta``   — step / checksums / provenance
+  * ``recv``   — legacy partner-copy slot. Dead storage since the codec
+                 layer (copies now live in ``parity`` as whole-blob
+                 stripes): pre-codec disk pickles still *load* through it,
+                 but recovery does not read it — an old-format checkpoint
+                 restores survivors' own shards only
+  * ``parity`` — redundancy stripes hosted for other groups, keyed
+                 ``group -> (entity, blob, stripe)`` (copies, XOR parity,
+                 RS blobs — whatever the active codec emits)
+  * ``meta``   — step / checksums / manifests / provenance
 
 Killing the rank wipes the store — in-memory checkpoints die with their host,
 which is exactly the failure model the paper's redundancy exists to survive.
@@ -23,14 +29,18 @@ from repro.core.doublebuffer import DoubleBuffer
 @dataclass
 class StorePayload:
     own: dict[str, Any] = field(default_factory=dict)       # entity -> (flat, manifest)
-    own_exch: dict[str, Any] = field(default_factory=dict)  # entity -> exchange subset (parity mode)
-    recv: dict[int, dict[str, Any]] = field(default_factory=dict)   # origin -> entity -> payload
-    parity: dict[int, Any] = field(default_factory=dict)    # origin group -> stripe
+    own_exch: dict[str, Any] = field(default_factory=dict)  # entity -> exchange subset (striped codecs)
+    recv: dict[int, dict[str, Any]] = field(default_factory=dict)   # legacy copy slot
+    parity: dict[int, Any] = field(default_factory=dict)    # group -> (entity, blob, stripe) -> bytes
     meta: dict[str, Any] = field(default_factory=dict)
 
     @property
     def nbytes(self) -> int:
-        total = 0
+        return sum(self.nbytes_by_kind().values())
+
+    def nbytes_by_kind(self) -> dict[str, int]:
+        """Byte split for the engine's itemized memory report: own snapshot
+        payloads vs exchange subsets vs hosted redundancy stripes."""
 
         def acc(obj: Any) -> int:
             if hasattr(obj, "nbytes"):
@@ -41,9 +51,11 @@ class StorePayload:
                 return sum(acc(v) for v in obj)
             return 0
 
-        for part in (self.own, self.own_exch, self.recv, self.parity):
-            total += acc(part)
-        return total
+        return {
+            "own": acc(self.own),
+            "exchange": acc(self.own_exch),
+            "redundancy": acc(self.recv) + acc(self.parity),
+        }
 
 
 class HostStore:
@@ -71,3 +83,11 @@ class HostStore:
             if payload is not None:
                 total += payload.nbytes
         return total
+
+    def nbytes_by_kind(self) -> dict[str, int]:
+        out = {"own": 0, "exchange": 0, "redundancy": 0}
+        for payload in (self.buffer.read_only, self.buffer.writable):
+            if payload is not None:
+                for k, v in payload.nbytes_by_kind().items():
+                    out[k] += v
+        return out

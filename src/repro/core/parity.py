@@ -16,23 +16,32 @@ from __future__ import annotations
 import numpy as np
 
 
-def _pad_to(buf: np.ndarray, n: int) -> np.ndarray:
-    assert buf.dtype == np.uint8 and buf.ndim == 1
-    if buf.nbytes == n:
-        return buf
-    out = np.zeros(n, np.uint8)
-    out[: buf.nbytes] = buf
-    return out
-
-
 def encode_parity(buffers: list[np.ndarray]) -> np.ndarray:
-    """XOR of byte buffers (padded to the max length)."""
+    """XOR of byte buffers, implicitly zero-padded to the 4-aligned max.
+
+    Zero padding is an XOR no-op, so nothing is materialized: each buffer
+    XORs into the accumulator over its own length only — a uint32 pass over
+    the 4-aligned prefix plus at most 3 ragged tail bytes. (The previous
+    version zero-copied every shorter buffer up to the max length, a full
+    extra alloc+memcpy per group member on ragged groups.)
+    """
     n = max(b.nbytes for b in buffers)
     n += (-n) % 4
-    acc = np.zeros(n // 4, np.uint32)
+    acc = np.zeros(n, np.uint8)
+    acc32 = acc.view(np.uint32)
     for b in buffers:
-        acc ^= _pad_to(b.reshape(-1), n).view(np.uint32)
-    return acc.view(np.uint8)
+        b = b.reshape(-1)
+        assert b.dtype == np.uint8, b.dtype
+        head = b.nbytes & ~3
+        if head:
+            try:
+                u32 = b[:head].view(np.uint32)
+            except ValueError:  # non-4-aligned slice view: rare fallback copy
+                u32 = np.frombuffer(b[:head].tobytes(), np.uint32)
+            acc32[: head // 4] ^= u32
+        if b.nbytes > head:
+            acc[head : b.nbytes] ^= b[head:]
+    return acc
 
 
 def split_stripes(parity: np.ndarray, g: int) -> list[np.ndarray]:

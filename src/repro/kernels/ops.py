@@ -19,6 +19,7 @@ from repro.kernels import checksum as _checksum_k
 from repro.kernels import quantize as _quantize_k
 from repro.kernels import ref
 from repro.kernels import reshard as _reshard_k
+from repro.kernels import rs_encode as _rs_k
 from repro.kernels import xor_parity as _xor_k
 
 
@@ -80,6 +81,48 @@ def xor_encode_arrays(arrays: list[jax.Array]) -> jax.Array:
     n = max(v.shape[0] for v in views)
     views = [_pad_to(v, n) if v.shape[0] < n else v for v in views]
     return xor_reduce(jnp.stack(views))
+
+
+# ---------------------------------------------------------------------------
+# Reed-Solomon GF(2^8) parity (multi-failure redundancy codec)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("coefs", "interpret"))
+def gf256_matmul(
+    stacked: jax.Array,
+    coefs: tuple[tuple[int, ...], ...],
+    interpret: bool | None = None,
+) -> jax.Array:
+    """RS parity over axis 0 of (k, n) uint32 (4 packed GF bytes per word).
+
+    coefs is the static (m, k) generator (tuple of tuples, hashable for jit).
+    Returns (m, n) uint32. The ref oracle works byte-wise, so the dispatch
+    bitcasts around it; the Pallas kernel consumes the packed words directly.
+    """
+    assert stacked.ndim == 2 and stacked.dtype == jnp.uint32
+    k, n = stacked.shape
+    assert len(coefs[0]) == k, (len(coefs[0]), k)
+    if _use_ref():
+        u8 = jax.lax.bitcast_convert_type(stacked.reshape(k, n, 1), jnp.uint8)
+        out = ref.gf256_matmul(u8.reshape(k, n * 4), coefs)
+        return jax.lax.bitcast_convert_type(out.reshape(len(coefs), n, 4), jnp.uint32)
+    tile = _rs_k.SUBLANES * _rs_k.BLOCK_COLS
+    npad = (-n) % tile
+    padded = jnp.pad(stacked, ((0, 0), (0, npad))) if npad else stacked
+    rows = padded.shape[1] // _rs_k.BLOCK_COLS
+    x3 = padded.reshape(k, rows, _rs_k.BLOCK_COLS)
+    out = _rs_k.rs_encode_pallas(
+        x3, coefs, interpret=_interpret() if interpret is None else interpret
+    )
+    return out.reshape(len(coefs), -1)[:, :n]
+
+
+def rs_encode_arrays(arrays: list[jax.Array], coefs: tuple[tuple[int, ...], ...]) -> jax.Array:
+    """RS parity of arrays of any dtype/length -> (m, n) uint32 blobs."""
+    views = [as_u32(a) for a in arrays]
+    n = max(v.shape[0] for v in views)
+    views = [_pad_to(v, n) if v.shape[0] < n else v for v in views]
+    return gf256_matmul(jnp.stack(views), coefs)
 
 
 # ---------------------------------------------------------------------------

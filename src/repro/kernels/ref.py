@@ -16,6 +16,28 @@ def xor_reduce(stacked: jax.Array) -> jax.Array:
     return jax.lax.reduce(stacked, jnp.uint32(0), jax.lax.bitwise_xor, (0,))
 
 
+def gf256_matmul(stacked: jax.Array, coefs: tuple[tuple[int, ...], ...]) -> jax.Array:
+    """Reed-Solomon parity: out[j] = ⊕_i coefs[j][i] · x[i] over GF(2^8).
+
+    stacked: (k, n) uint8 -> (m, n) uint8. The log/antilog-table definition
+    (core/gf256.py tables, poly 0x11D): c·x = EXP[LOG[c] + LOG[x]], with
+    zero operands routed into the zero tail by the LOG[0] = 512 sentinel —
+    the mathematical form the SWAR xtime-chain kernel must reproduce.
+    """
+    from repro.core.gf256 import EXP_TABLE, LOG32
+
+    assert stacked.dtype == jnp.uint8 and stacked.ndim == 2
+    exp = jnp.asarray(EXP_TABLE)
+    log = jnp.asarray(LOG32)
+    logx = jnp.take(log, stacked.astype(jnp.int32), axis=0)  # (k, n)
+    rows = []
+    for row in coefs:
+        logc = jnp.asarray([int(LOG32[c]) for c in row], jnp.int32)  # (k,)
+        terms = jnp.take(exp, logx + logc[:, None], axis=0)  # (k, n)
+        rows.append(jax.lax.reduce(terms, jnp.uint8(0), jax.lax.bitwise_xor, (0,)))
+    return jnp.stack(rows)
+
+
 def checksum(x: jax.Array) -> jax.Array:
     """Fletcher-style dual checksum of a uint32 buffer -> (2,) uint32.
 

@@ -32,6 +32,12 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=8, help="tokens between session checkpoints")
     ap.add_argument("--kill-at", default=None,
                     help="comma list of tick:rank kill events, e.g. 10:2,17:0")
+    ap.add_argument("--codec", default="",
+                    help="redundancy codec: copy | xor | rs (default: inferred)")
+    ap.add_argument("--parity-group", type=int, default=0,
+                    help="erasure group size k for xor/rs codecs")
+    ap.add_argument("--rs-parity", type=int, default=2,
+                    help="m parity blobs per group for --codec rs")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -54,7 +60,9 @@ def main() -> None:
         max_seq=args.prompt_len + args.gen + 2,
         checkpoint_every_tokens=args.ckpt_every,
         n_virtual_hosts=args.hosts,
-        engine=EngineConfig(),
+        engine=EngineConfig(
+            codec=args.codec, parity_group=args.parity_group, rs_parity=args.rs_parity
+        ),
     )
     server = Server(model, scfg, injector=injector)
     prompts = np.random.default_rng(0).integers(

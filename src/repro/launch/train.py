@@ -34,14 +34,19 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--hosts", type=int, default=4, help="virtual failure-domain ranks")
     ap.add_argument("--spares", type=int, default=2)
-    ap.add_argument("--policy", choices=["spare", "shrink"], default="spare")
+    ap.add_argument("--policy", choices=["spare", "shrink", "elastic"], default="spare")
     ap.add_argument("--mtbf", type=float, default=3600.0, help="per-host MTBF (s)")
     ap.add_argument("--inject-mtbf", type=float, default=None,
                     help="simulate failures with this per-host MTBF (s)")
     ap.add_argument("--period", type=int, default=None,
                     help="checkpoint period in steps (default: Daly-optimal)")
     ap.add_argument("--scheme", default="pairwise")
-    ap.add_argument("--parity-group", type=int, default=0)
+    ap.add_argument("--parity-group", type=int, default=0,
+                    help="erasure group size k (selects the xor codec unless --codec)")
+    ap.add_argument("--codec", default="",
+                    help="redundancy codec: copy | xor | rs (default: inferred)")
+    ap.add_argument("--rs-parity", type=int, default=2,
+                    help="m parity blobs per group for --codec rs")
     ap.add_argument("--compress", action="store_true")
     ap.add_argument("--out", default=None, help="write history JSON here")
     args = ap.parse_args()
@@ -72,6 +77,8 @@ def main() -> None:
         engine=EngineConfig(
             scheme=args.scheme,
             parity_group=args.parity_group,
+            codec=args.codec,
+            rs_parity=args.rs_parity,
             compress=args.compress,
         ),
     )

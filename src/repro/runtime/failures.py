@@ -9,6 +9,14 @@ runs (stabilize → restore).
 (step -> ranks) schedule (tests, the paper's kill-signal experiment in §7.5)
 or an MTBF-driven Bernoulli process per rank per step (eq. 1: system failure
 rate scales with rank count), fully deterministic given the seed.
+
+Multi-failure bursts: real clusters lose correlated sets of hosts (a rack
+power domain, a shared switch) — exactly the event single-parity redundancy
+cannot survive and the Reed-Solomon codec exists for (DESIGN.md §8).
+``schedule_group_burst`` targets ``count`` members of one redundancy group;
+``burst_size > 1`` widens every MTBF-driven kill into a correlated burst of
+adjacent ranks inside the victim's ``burst_group`` (clipped at the group
+boundary so the burst stays a within-group event).
 """
 
 from __future__ import annotations
@@ -37,8 +45,35 @@ class FailureInjector:
     # Ranks may also die *during* a checkpoint; phase-targeted kills for the
     # Algorithm-2 tests:
     checkpoint_schedule: dict[int, list[int]] = field(default_factory=dict)
+    # Correlated bursts: every MTBF kill takes out burst_size ranks of the
+    # victim's burst_group-sized group (1 = independent failures, the default).
+    burst_size: int = 1
+    burst_group: int = 0
     _fired: set = field(default_factory=set)
     _tick: int = 0  # wall-clock step count (monotonic across rollbacks)
+
+    def schedule_group_burst(
+        self, step: int, group_index: int, group_size: int, count: int,
+        kind: str = "step",
+    ) -> list[int]:
+        """Schedule ``count`` concurrent failures inside one redundancy group
+        (the first ``count`` members, deterministically). ``kind`` selects the
+        step schedule or the mid-checkpoint one. Returns the doomed ranks."""
+        start = group_index * group_size
+        members = list(range(start, min(start + group_size, self.n_ranks)))
+        assert count <= len(members), (count, members)
+        doomed = members[:count]
+        target = self.schedule if kind == "step" else self.checkpoint_schedule
+        target.setdefault(step, []).extend(doomed)
+        return doomed
+
+    def _widen_burst(self, rank: int) -> list[int]:
+        """Expand an MTBF kill into its correlated within-group burst."""
+        if self.burst_size <= 1:
+            return [rank]
+        g = self.burst_group or self.n_ranks
+        lo, hi = (rank // g) * g, min((rank // g + 1) * g, self.n_ranks)
+        return [lo + (rank - lo + i) % (hi - lo) for i in range(min(self.burst_size, hi - lo))]
 
     def kills_at_step(self, step: int) -> list[int]:
         """Kills are wall-clock events: a scheduled kill fires exactly once
@@ -54,7 +89,8 @@ class FailureInjector:
             p = min(self.step_time_s / self.mtbf_rank_s, 1.0)
             rng = np.random.default_rng(self.seed * 1_000_003 + self._tick)
             draws = rng.random(self.n_ranks)
-            kills.extend(int(r) for r in np.nonzero(draws < p)[0])
+            for r in np.nonzero(draws < p)[0]:
+                kills.extend(self._widen_burst(int(r)))
         return sorted(set(kills))
 
     def kills_at_checkpoint(self, ckpt_index: int) -> list[int]:

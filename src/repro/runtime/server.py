@@ -184,5 +184,8 @@ class Server:
         else:
             self.cluster.stabilize("spare")
             meta = self.engine.restore()
-            log.info("sessions rolled back to pos %s", meta.get("pos"))
+            log.info(
+                "sessions rolled back to pos %s (codec=%s/t%d)",
+                meta.get("pos"), self.engine.codec.name, self.engine.codec.tolerance(),
+            )
         self.n_recoveries += 1

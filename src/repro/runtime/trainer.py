@@ -307,8 +307,10 @@ class Trainer:
         # the loop continues from the checkpointed step.
         self.n_recoveries += 1
         log.info(
-            "recovered to step %s (policy=%s, load_factor=%.2f)",
-            meta.get("step"), report.policy, report.load_factor,
+            "recovered to step %s (policy=%s, codec=%s/t%d, load_factor=%.2f)",
+            meta.get("step"), report.policy,
+            self.engine.codec.name, self.engine.codec.tolerance(),
+            report.load_factor,
         )
 
     def _shrink_engine(self, report) -> dict[str, Any]:
