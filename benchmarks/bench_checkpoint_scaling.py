@@ -1,10 +1,18 @@
-"""Paper Fig. 4/5: weak scaling of checkpoint-creation duration.
+"""Paper Fig. 4/5: weak scaling of checkpoint-creation duration, plus the
+sync-vs-async pipeline comparison (DESIGN.md §9).
 
 Fixed per-rank payload, growing rank count — the paper's claim is that the
 duration stays (nearly) constant because the exchange volume per rank depends
 on the redundancy, not on the rank count. Measured here on the host-tier
 engine (virtual ranks, one process); the TPU-tier bound comes from the
 dry-run roofline (see §Roofline checkpoint rows).
+
+The async rows measure the **blocked time** of the pipelined path: phase A
+capture + whatever of phase B the overlap window didn't hide (the window is
+the simulated train step; the benchmark waits for the background drain the
+way a real step would run concurrently). ``RESULTS`` carries the
+machine-readable numbers run.py folds into BENCH_results.json:
+GB/s creation throughput, modeled PCIe bytes, speedup, overlap efficiency.
 """
 
 from __future__ import annotations
@@ -14,6 +22,9 @@ import time
 import numpy as np
 
 from repro.core.checkpoint import CheckpointEngine, EngineConfig
+
+#: populated by main(); run.py serializes it into BENCH_results.json
+RESULTS: dict = {}
 
 
 class _Payload:
@@ -33,8 +44,31 @@ class _Payload:
             self.data[origin] = np.asarray(payload["blocks"])
 
 
+def _blocked_checkpoint(eng: CheckpointEngine, meta, async_mode: bool) -> float:
+    """Wall time the caller is blocked for one checkpoint. Async: capture +
+    finalize join, with the overlap window (the next train step) simulated by
+    waiting for the background drain before finalizing — the best the overlap
+    can do, which is exactly what the pipeline buys on a real step."""
+    if not async_mode:
+        t0 = time.perf_counter()
+        ok = eng.checkpoint(meta)
+        assert ok
+        return time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ok = eng.checkpoint_async(meta)
+    blocked = time.perf_counter() - t0
+    assert ok
+    while not eng.drain_done():            # the overlapped "train step"
+        time.sleep(1e-4)
+    t1 = time.perf_counter()
+    done = eng.finalize_async()
+    blocked += time.perf_counter() - t1
+    assert done
+    return blocked
+
+
 def run(bytes_per_rank: int = 1 << 20, ranks=(2, 4, 8, 16, 32, 64), scheme: str = "pairwise",
-        parity_group: int = 0, repeats: int = 3):
+        parity_group: int = 0, repeats: int = 3, async_mode: bool = False):
     rows = []
     for n in ranks:
         eng = CheckpointEngine(
@@ -44,28 +78,77 @@ def run(bytes_per_rank: int = 1 << 20, ranks=(2, 4, 8, 16, 32, 64), scheme: str 
         eng.checkpoint({"step": 0})  # warm
         times = []
         for _ in range(repeats):
-            t0 = time.perf_counter()
-            assert eng.checkpoint({"step": 1})
-            times.append(time.perf_counter() - t0)
+            times.append(_blocked_checkpoint(eng, {"step": 1}, async_mode))
         # normalize: host-tier sim does all ranks' work serially in one
         # process; per-rank time is the scalable quantity (paper's y-axis).
         per_rank_us = min(times) / n * 1e6
-        rows.append((n, per_rank_us, eng.stats.last_bytes_per_rank))
+        rows.append((n, per_rank_us, eng.stats.last_bytes_per_rank, min(times), eng))
     return rows
 
 
-def main() -> list[str]:
+def _pcie_model(eng: CheckpointEngine) -> int:
+    """Modeled device->host bytes for one checkpoint across all ranks: every
+    own/exchange byte staged once, plus (striped codecs) the m/g parity
+    stripes — mirrors SnapshotProgram.pcie_bytes for the host tier."""
+    staged = eng.stats.last_bytes_staged
+    return staged + eng.stats.last_bytes_exchanged
+
+
+def main(smoke: bool = False) -> list[str]:
     lines = []
+    weak_ranks = (2, 4, 8) if smoke else (2, 4, 8, 16, 32, 64)
+    par_ranks = (4, 8) if smoke else (4, 8, 16, 32, 64)
+    per_rank = 1 << 19 if smoke else 1 << 20
     for tag, kw in [
-        ("ckpt_weakscale_pairwise", {}),
-        ("ckpt_weakscale_parity4", {"parity_group": 4, "ranks": (4, 8, 16, 32, 64)}),
+        ("ckpt_weakscale_pairwise", {"ranks": weak_ranks}),
+        ("ckpt_weakscale_parity4", {"parity_group": 4, "ranks": par_ranks}),
     ]:
-        rows = run(**kw)
+        rows = run(bytes_per_rank=per_rank, **kw)
         base = rows[0][1]
-        for n, us, nbytes in rows:
+        for n, us, nbytes, _, _ in rows:
             lines.append(f"{tag}_n{n},{us:.1f},scale_vs_min={us / base:.2f};bytes_per_rank={nbytes}")
+
+    # -- sync vs async pipeline at the largest parity config -----------------
+    n = par_ranks[-1]
+    big = per_rank if smoke else 4 << 20
+    sync_rows = run(bytes_per_rank=big, ranks=(n,), parity_group=4, async_mode=False)
+    async_rows = run(bytes_per_rank=big, ranks=(n,), parity_group=4, async_mode=True)
+    t_sync, eng_s = sync_rows[0][3], sync_rows[0][4]
+    t_async, eng_a = async_rows[0][3], async_rows[0][4]
+    total_bytes = eng_s.stats.last_bytes_staged
+    gbps_sync = total_bytes / t_sync / 1e9
+    gbps_async = total_bytes / t_async / 1e9
+    speedup = t_sync / t_async
+    # overlap efficiency: fraction of the sync critical path the pipeline hid
+    overlap_eff = max(0.0, 1.0 - t_async / t_sync)
+    for _, _, _, _, eng in (*sync_rows, *async_rows):
+        eng.close()  # release the pipeline worker thread (stats stay readable)
+    lines.append(f"ckpt_create_sync_n{n},{t_sync * 1e6:.0f},GBps={gbps_sync:.2f}")
+    lines.append(
+        f"ckpt_create_async_n{n},{t_async * 1e6:.0f},"
+        f"GBps={gbps_async:.2f};speedup={speedup:.2f};overlap_eff={overlap_eff:.2f}"
+    )
+    RESULTS.clear()
+    RESULTS.update(
+        {
+            "n_ranks": n,
+            "bytes_per_rank": big,
+            "create_gbps_sync": round(gbps_sync, 3),
+            "create_gbps_async": round(gbps_async, 3),
+            "async_speedup": round(speedup, 3),
+            "overlap_efficiency": round(overlap_eff, 3),
+            "bytes_staged": eng_a.stats.last_bytes_staged,
+            "bytes_exchanged": eng_a.stats.last_bytes_exchanged,
+            "bytes_over_pcie_modeled": _pcie_model(eng_a),
+            "blocked_s_sync": round(t_sync, 6),
+            "blocked_s_async": round(t_async, 6),
+            "pipeline_chunks": eng_a.stats.last_pipeline_chunks,
+        }
+    )
     return lines
 
 
 if __name__ == "__main__":
-    print("\n".join(main()))
+    import sys
+
+    print("\n".join(main(smoke="--smoke" in sys.argv)))

@@ -2,6 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV rows:
   * bench_checkpoint_scaling — Fig 4/5 (weak scaling of checkpoint creation)
+                               + sync-vs-async pipeline comparison (§9)
   * bench_recovery           — Fig 7   (weak scaling of recovery, zero-comm)
   * bench_elastic_recovery   — N-to-M restore time + bytes moved vs lower bound
   * bench_overhead           — Fig 6   (Daly-interval overhead vs MTBF)
@@ -10,15 +11,25 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * bench_codecs             — GB/s encode + decode per redundancy codec
   * bench_roofline_table     — §Roofline rows from the dry-run artifacts
 
-``--smoke`` runs only the smoke-capable modules (codecs, kernels) at tiny
-shapes — a fast CI perf-regression tripwire, not a measurement.
+Every run also writes ``BENCH_results.json`` next to the cwd: all CSV rows
+plus the checkpoint-pipeline section (GB/s create sync/async, modeled PCIe
+bytes, overlap efficiency) so the perf trajectory is machine-readable.
+
+``--smoke`` runs only the smoke-capable modules at tiny shapes — a fast CI
+perf-regression tripwire, not a measurement. In smoke mode the harness FAILS
+when the pipelined (async) creation path regresses more than 20% against the
+sync baseline (speedup < 0.8) — the sync-vs-async tripwire of the CI job.
 """
 
 from __future__ import annotations
 
 import inspect
+import json
 import sys
 import traceback
+
+#: async/sync speedup below this in --smoke mode fails the run (>20% regression)
+SMOKE_SPEEDUP_FLOOR = 0.8
 
 
 def main() -> None:
@@ -50,15 +61,38 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failed = 0
+    rows: list[dict] = []
     for mod in smoke_capable if smoke else full:
         try:
             lines = mod.main(smoke=True) if smoke else mod.main()
             for line in lines:
                 print(line)
+                parts = line.split(",", 2)
+                if len(parts) == 3:
+                    rows.append(
+                        {"name": parts[0], "us_per_call": parts[1], "derived": parts[2]}
+                    )
         except Exception as e:  # pragma: no cover
             failed += 1
             print(f"{mod.__name__},NaN,FAILED:{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
+
+    pipeline = dict(getattr(bench_checkpoint_scaling, "RESULTS", {}) or {})
+    out = {"smoke": smoke, "rows": rows, "checkpoint_pipeline": pipeline}
+    with open("BENCH_results.json", "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote BENCH_results.json ({len(rows)} rows)", file=sys.stderr)
+
+    if smoke and pipeline:
+        speedup = pipeline.get("async_speedup", 0.0)
+        if speedup < SMOKE_SPEEDUP_FLOOR:
+            print(
+                f"# async pipeline regression: speedup {speedup:.2f} < "
+                f"{SMOKE_SPEEDUP_FLOOR} (sync {pipeline.get('blocked_s_sync')}s "
+                f"vs async {pipeline.get('blocked_s_async')}s)",
+                file=sys.stderr,
+            )
+            failed += 1
     if failed:
         raise SystemExit(1)
 

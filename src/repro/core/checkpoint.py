@@ -13,6 +13,22 @@ per-rank host stores:
   communication, lost shards are rebuilt by the codec (adopted whole copies,
   XOR reconstruction, or Reed-Solomon multi-erasure decode).
 
+Creation is a **zero-copy, chunked pipeline** (DESIGN.md §9):
+
+  * Phase A (``checkpoint_async``) captures every entity's shards straight
+    into per-rank host-store **arenas** (``HostStore.lease`` +
+    ``pack_bytes(out=...)``) — one memcpy per leaf, zero steady-state
+    allocation, read-only buffers untouched.
+  * Phase B (``finalize_async`` / a background worker) drains a three-stage
+    software pipeline over (parity-group, entity) units: unit *g* ENCODEs
+    (codec ``encode_into`` over arena views) while unit *g−1*'s stripes
+    TRANSFER into their holder stores and unit *g−2* runs its VERIFY
+    checksum — the encode/DMA/handshake overlap that makes creation cost
+    independent of the validation pass.
+  * The pointer swap at the end of ``finalize_async`` is the **single commit
+    point**: every stage before it writes only writable-bank arenas, so a
+    fault anywhere in the pipeline aborts back to the previous checkpoint.
+
 All redundancy math and placement lives behind the ``RedundancyCodec``
 interface (core/codec.py, DESIGN.md §8) — the engine encodes/decodes through
 ``self.codec`` and has no scheme-specific branches.
@@ -78,6 +94,10 @@ class EngineConfig:
     # otherwise the full-copy scheme — so existing configs are bit-identical.
     codec: str = ""
     rs_parity: int = 2             # m parity blobs per group for codec="rs"
+    # Background workers draining the phase-B pipeline of an explicit
+    # ``checkpoint_async`` (0 = drain synchronously inside finalize_async;
+    # the blocking ``checkpoint`` path never spawns a thread either way).
+    async_workers: int = 1
 
 
 @dataclass
@@ -92,10 +112,29 @@ class CheckpointStats:
     zero_comm_restores: int = 0    # shards restored from local memory
     adopted_restores: int = 0      # shards adopted from partner copies
     reconstructed_restores: int = 0  # shards rebuilt from parity
+    # Pipeline accounting (DESIGN.md §9):
+    last_capture_s: float = 0.0      # phase A: arena-staged snapshot capture
+    last_finalize_wait_s: float = 0.0  # time finalize_async blocked on phase B
+    last_blocked_s: float = 0.0      # capture + finalize wait = critical path
+    last_bytes_staged: int = 0       # own + exchange bytes staged (host DMA)
+    last_pipeline_chunks: int = 0    # (group, entity) units drained
 
 
 class FaultDuringCheckpoint(RuntimeError):
     """Raised into the engine by the failure injector mid-checkpoint."""
+
+
+@dataclass
+class _PendingCheckpoint:
+    """An un-committed snapshot between phase A (capture) and the swap."""
+
+    packed: dict[str, list[tuple[Any, Manifest]]]   # exchange/partner buffers
+    manifests: dict[tuple[int, str], Any]
+    alive0: set[int]
+    t0: float
+    future: Any = None          # background drain future (None = sync drain)
+    bytes_exchanged: int = 0
+    verified: set = field(default_factory=set)      # (rank, entity) chunk-verified
 
 
 class CheckpointEngine:
@@ -118,7 +157,9 @@ class CheckpointEngine:
         # fault_hook(phase) lets the failure injector strike at precise points
         # inside the checkpoint procedure (tests for Algorithm 2's guarantee).
         self._fault_hook = fault_hook or (lambda phase: None)
-        self._pending: Any = None  # un-finalized async snapshot
+        self._pending: _PendingCheckpoint | None = None  # un-finalized async snapshot
+        self._pool: Any = None               # lazy ThreadPoolExecutor (async drain)
+        self._enc_scratch: dict[Any, np.ndarray] = {}  # transient blob accumulators
         self.stats = CheckpointStats()
         self.last_elastic_report: Any = None  # ElasticReport of the last N-to-M restore
         if cfg.parity_group:
@@ -155,96 +196,291 @@ class CheckpointEngine:
     # ------------------------------------------------------------------ #
     def checkpoint(self, meta: dict[str, Any] | None = None) -> bool:
         """Create + distribute + handshake + swap. Returns True on success;
-        False if a fault struck before the swap (read-only buffers intact)."""
-        if self.checkpoint_async(meta):
+        False if a fault struck before the swap (read-only buffers intact).
+        Fully synchronous and deterministic (no background worker)."""
+        if self.checkpoint_async(meta, background=False):
             return self.finalize_async() is True
         return False
 
-    def checkpoint_async(self, meta: dict[str, Any] | None = None) -> bool:
+    def checkpoint_async(
+        self, meta: dict[str, Any] | None = None, background: bool | None = None
+    ) -> bool:
         """Phase A (synchronous): capture a consistent snapshot of every
-        entity into the writable buffers. The expensive partner exchange +
-        handshake + swap are deferred to ``finalize_async`` so they overlap
-        with subsequent train steps (compute/comm overlap; on TPU this is the
-        device→host DMA followed by background ICI/DCN traffic). Algorithm 2's
-        guarantee is preserved: nothing touches the read-only buffers until
-        the deferred handshake succeeds."""
+        entity straight into the writable-bank arenas. The expensive encode +
+        stripe transfer + verify pipeline is deferred — to a background
+        worker when ``background`` (default: ``cfg.async_workers > 0``), else
+        to ``finalize_async`` — so it overlaps with subsequent train steps
+        (compute/comm overlap; on TPU this is the device→host DMA followed by
+        background ICI/DCN traffic). Algorithm 2's guarantee is preserved:
+        nothing touches the read-only buffers until the deferred handshake
+        succeeds and the buffers swap."""
+        if self._pending is not None:
+            # Two captures without a finalize: the first snapshot was never
+            # committed — drain + drop it before its arenas are re-leased.
+            self.discard_pending()
         t0 = time.perf_counter()
         alive0 = self._alive_fn()
         try:
             self._fault_hook("before_create")
-            # -- create: every entity serializes its per-rank shards ---------
-            packed: dict[str, list[tuple[Any, Manifest]]] = {}
-            packed_partner: dict[str, list[tuple[Any, Manifest]]] = {}
-            coords_tables: dict[str, Any] = {}
-            for name, ent in self._entities.items():
-                shards = ent.snapshot_shards(self.n_ranks)
-                packed[name] = [pack_bytes(s) for s in shards]
-                if hasattr(ent, "shard_coords"):
-                    # Global-coordinate manifest: each shard records its slice
-                    # of the logical entity, the layer elastic N-to-M restore
-                    # repartitions on. The full table is tiny and replicated
-                    # with every store's meta (like the parity manifests).
-                    table = ent.shard_coords(self.n_ranks)
-                    for r, (_, man) in enumerate(packed[name]):
-                        man.coords = table[r]
-                    coords_tables[name] = table
-                if hasattr(ent, "partner_payload"):
-                    # Exchange only the uniquely-owned subset (replicated
-                    # leaves exist on every rank already — paper §5.2.1).
-                    packed_partner[name] = [
-                        pack_bytes(ent.partner_payload(s, self.n_ranks))
-                        for s in shards
-                    ]
-                else:
-                    packed_partner[name] = packed[name]
-
-            for r in alive0:
-                payload = StorePayload(meta=dict(meta or {}))
-                if coords_tables:
-                    payload.meta["coords"] = dict(coords_tables)
-                for name, shards in packed.items():
-                    flat, man = shards[r]
-                    payload.own[name] = (flat, man)
-                    if self.codec.striped and packed_partner[name] is not packed[name]:
-                        payload.own_exch[name] = packed_partner[name][r]
-                    if self.cfg.validate:
-                        payload.meta.setdefault("checksums", {})[name] = np_checksum(flat)
-                self.stores[r].buffer.write(payload)
-
+            packed_partner, manifests = self._capture(alive0, meta)
             self._fault_hook("after_create")
         except FaultDuringCheckpoint as e:
             log.warning("checkpoint aborted during create: %s", e)
             for s in self.stores.values():
                 s.buffer.discard_writable()
             self.stats.aborted += 1
-            self._pending = None
             return False
 
-        self._pending = (packed_partner, alive0, t0)
+        self.stats.last_capture_s = time.perf_counter() - t0
+        pending = _PendingCheckpoint(packed_partner, manifests, alive0, t0)
+        self._pending = pending
+        if background is None:
+            background = self.cfg.async_workers > 0
+        if background:
+            pending.future = self._executor().submit(self._drain, pending)
         return True
 
+    def _capture(
+        self, alive0: set[int], meta: dict[str, Any] | None
+    ) -> tuple[dict[str, list[tuple[Any, Manifest]]], dict[tuple[int, str], Any]]:
+        """Serialize every entity's per-rank shards directly into host-store
+        arenas (one memcpy per leaf, zero steady-state allocation) and stage
+        the writable payloads. Returns the exchange buffers the pipeline
+        encodes plus the replicated manifest table."""
+        packed: dict[str, list[tuple[Any, Manifest]]] = {}
+        packed_partner: dict[str, list[tuple[Any, Manifest]]] = {}
+        coords_tables: dict[str, Any] = {}
+        bytes_staged = 0
+        def _lease_for(r: int, key: tuple):
+            """HostStore.lease bound for pack_bytes's callback form (sizing
+            happens inside pack_bytes's single traversal); None for ranks
+            with no live store — those pack into fresh buffers."""
+            store = self.stores.get(r)
+            if r not in alive0 or store is None or not store.alive:
+                return None
+            return lambda nbytes: store.lease(key, nbytes)
+
+        for name, ent in self._entities.items():
+            shards = ent.snapshot_shards(self.n_ranks)
+            rows: list[tuple[Any, Manifest]] = []
+            for r, shard in enumerate(shards):
+                rows.append(pack_bytes(shard, lease=_lease_for(r, ("own", name))))
+                bytes_staged += rows[-1][0].nbytes
+            packed[name] = rows
+            if hasattr(ent, "shard_coords"):
+                # Global-coordinate manifest: each shard records its slice
+                # of the logical entity, the layer elastic N-to-M restore
+                # repartitions on. The full table is tiny and replicated
+                # with every store's meta (like the parity manifests).
+                table = ent.shard_coords(self.n_ranks)
+                for r, (_, man) in enumerate(packed[name]):
+                    man.coords = table[r]
+                coords_tables[name] = table
+            if hasattr(ent, "partner_payload"):
+                # Exchange only the uniquely-owned subset (replicated
+                # leaves exist on every rank already — paper §5.2.1).
+                sub_rows: list[tuple[Any, Manifest]] = []
+                for r, shard in enumerate(shards):
+                    subset = ent.partner_payload(shard, self.n_ranks)
+                    sub_rows.append(
+                        pack_bytes(subset, lease=_lease_for(r, ("exch", name)))
+                    )
+                    bytes_staged += sub_rows[-1][0].nbytes
+                packed_partner[name] = sub_rows
+            else:
+                packed_partner[name] = packed[name]
+
+        # Manifests are tiny: replicate all of them with every store's meta so
+        # any survivor can unpack any origin's rebuilt bytes. (Compression in
+        # the encode stage swaps in the tagged compressed manifest per origin
+        # — the dict is shared, mutated only before the commit point.)
+        manifests = {
+            (r, name): rows[r][1]
+            for name, rows in packed_partner.items()
+            for r in range(self.n_ranks)
+        }
+
+        for r in alive0:
+            payload = StorePayload(meta=dict(meta or {}))
+            if coords_tables:
+                payload.meta["coords"] = dict(coords_tables)
+            payload.meta["manifests"] = manifests
+            for name, rows in packed.items():
+                flat, man = rows[r]
+                payload.own[name] = (flat, man)
+                if self.codec.striped and packed_partner[name] is not packed[name]:
+                    payload.own_exch[name] = packed_partner[name][r]
+                if self.cfg.validate:
+                    payload.meta.setdefault("checksums", {})[name] = np_checksum(flat)
+            self.stores[r].buffer.write(payload)
+        self.stats.last_bytes_staged = bytes_staged
+        return packed_partner, manifests
+
+    # ------------------------------------------------------------------ #
+    # phase B: the chunked encode/transfer/verify pipeline
+    # ------------------------------------------------------------------ #
+    def _executor(self):
+        if self._pool is None:
+            from concurrent.futures import ThreadPoolExecutor
+
+            self._pool = ThreadPoolExecutor(
+                max_workers=max(1, self.cfg.async_workers),
+                thread_name_prefix="ckpt-pipeline",
+            )
+        return self._pool
+
+    def _pipeline_units(self, packed) -> list[tuple]:
+        """One work unit per (parity group, entity): the granularity at which
+        encode, stripe transfer, and verification are pipelined."""
+        codec = self.codec
+        groups = self._groups()
+        units = []
+        for gi, grp in enumerate(groups):
+            placements = codec.placement(groups, gi, self.n_ranks)
+            if not placements:
+                continue
+            for name in packed:
+                if name in self._replicated:
+                    continue  # equal on all ranks: no redundancy needed
+                units.append((gi, grp, placements, name))
+        return units
+
+    def _drain(self, pending: _PendingCheckpoint) -> tuple[int, set]:
+        """Run the three-stage software pipeline to completion: unit *i*
+        ENCODEs while unit *i−1*'s stripes TRANSFER to their host stores and
+        unit *i−2* VERIFYs its members' staged checksums. Nothing here ever
+        touches a read-only buffer; a fault at any chunk raises
+        ``FaultDuringCheckpoint`` and the whole snapshot aborts."""
+        units = self._pipeline_units(pending.packed)
+        n = len(units)
+        total = 0
+        verified: set = set()
+        encoded: dict[int, list[np.ndarray]] = {}
+        for i in range(n + 2):
+            if i < n:
+                encoded[i] = self._encode_unit(units[i], pending.manifests, pending.packed)
+            if 0 <= i - 1 < n:
+                total += self._transfer_unit(units[i - 1], encoded.pop(i - 1))
+            if 0 <= i - 2 < n:
+                self._verify_unit(units[i - 2], verified)
+            self._fault_hook("pipeline_chunk")
+        self.stats.last_pipeline_chunks = n
+        return total, verified
+
+    def _encode_unit(self, unit, manifests, packed) -> list[np.ndarray]:
+        """ENCODE stage: codec-encode one group's shards of one entity into
+        redundancy blobs, accumulated in reusable scratch arenas (transient —
+        the transfer stage copies stripes out before scratch is re-leased)."""
+        gi, grp, placements, name = unit
+        codec = self.codec
+        bufs = []
+        for m in grp.members:
+            flat, man = packed[name][m]
+            if self.cfg.compress and codec.compressible:
+                flat, man = self._compress(flat, man)
+                manifests[(m, name)] = man
+            bufs.append(flat)
+        scratch_key = (gi, name)
+
+        def lease(b: int, nbytes: int) -> np.ndarray:
+            buf = self._enc_scratch.get((scratch_key, b))
+            if buf is None or buf.nbytes < nbytes:
+                buf = np.empty(nbytes, np.uint8)
+                self._enc_scratch[(scratch_key, b)] = buf
+            return buf[:nbytes]
+
+        return codec.encode_into(bufs, len(placements), lease)
+
+    def _transfer_unit(self, unit, blobs: list[np.ndarray]) -> int:
+        """TRANSFER stage: stripe the blobs onto their holder stores. Striped
+        codecs copy each stripe into a holder-owned arena (the simulated
+        network hop; blobs live in transient scratch). Full-copy codecs store
+        by reference — whole copies stay memcpy-free, and the referenced flat
+        is the origin's arena view from the same staging bank, so it commits
+        and retires together with the rest of the snapshot."""
+        gi, grp, placements, name = unit
+        total = 0
+        by_ref = not self.codec.striped
+        for b, (blob, holders) in enumerate(zip(blobs, placements)):
+            blob = np.asarray(blob).reshape(-1)
+            if by_ref:
+                stripes = [blob] * len(holders)
+            else:
+                # Stripe over however many members the *target* group has
+                # (ragged last groups appear at elastic world sizes); bounds
+                # shared with split/join_stripes so writer and decoder agree.
+                stripes = [
+                    blob[lo:hi]
+                    for lo, hi in parity_mod.stripe_bounds(blob.nbytes, len(holders))
+                ]
+            for j, member in enumerate(holders):
+                st = self.stores[member]
+                # Capture the payload reference ONCE: a concurrent kill from
+                # the main thread (wipe() swaps st.buffer out under the
+                # background drain) must degrade to writes into an orphaned
+                # payload — the handshake aborts the snapshot later — never
+                # to a None dereference.
+                payload = st.buffer.writable if st.alive else None
+                if payload is None:
+                    continue
+                piece = stripes[j]
+                if not by_ref:
+                    dst = st.lease(("parity", gi, name, b, j), piece.nbytes)
+                    np.copyto(dst, piece)
+                    piece = dst
+                payload.parity.setdefault(gi, {})[(name, b, j)] = piece
+                total += piece.nbytes
+        return total
+
+    def _verify_unit(self, unit, verified: set) -> None:
+        """VERIFY stage: recompute each member's staged checksum for this
+        entity (detects corruption during staging/DMA chunk-by-chunk, instead
+        of one monolithic validation pass after all transfers)."""
+        gi, grp, placements, name = unit
+        if not self.cfg.validate:
+            return
+        for m in grp.members:
+            st = self.stores.get(m)
+            # Single capture of the payload reference (see _transfer_unit:
+            # concurrent wipe() must not turn into a None dereference).
+            payload = st.buffer.writable if st is not None and st.alive else None
+            if payload is None:
+                continue  # dead rank: the handshake aborts the snapshot
+            sums = payload.meta.get("checksums", {})
+            if name in sums and name in payload.own:
+                if np_checksum(payload.own[name][0]) != sums[name]:
+                    raise FaultDuringCheckpoint(
+                        f"checksum mismatch rank {m} entity {name}"
+                    )
+                verified.add((m, name))
+
     def finalize_async(self) -> bool | None:
-        """Phase B: distribute + handshake + swap of the pending snapshot.
-        Returns True on success, False on abort, None if nothing pending."""
+        """Drain the pipeline (or join the background worker), handshake, and
+        **commit via the pointer swap** — the single commit point. Returns
+        True on success, False on abort, None if nothing pending."""
         if self._pending is None:
             return None
-        packed_partner, alive0, t0 = self._pending
+        pending = self._pending
         self._pending = None
-        bytes_exchanged = 0
+        t_wait0 = time.perf_counter()
         try:
-            # -- distribute redundancy (codec encode + placement) ------------
-            bytes_exchanged += self._distribute(alive0, packed_partner)
+            if pending.future is not None:
+                pending.bytes_exchanged, pending.verified = pending.future.result()
+            else:
+                pending.bytes_exchanged, pending.verified = self._drain(pending)
+            self.stats.last_finalize_wait_s = time.perf_counter() - t_wait0
 
             self._fault_hook("after_distribute")
 
             # -- handshake ----------------------------------------------------
             alive1 = self._alive_fn()
-            if alive1 != alive0 or len(alive1) < self.n_ranks:
+            if alive1 != pending.alive0 or len(alive1) < self.n_ranks:
                 raise FaultDuringCheckpoint(
-                    f"rank set changed during checkpoint: {sorted(alive0 - alive1)} died"
+                    f"rank set changed during checkpoint: "
+                    f"{sorted(pending.alive0 - alive1)} died"
                 )
             if self.cfg.validate:
-                self._validate(alive1)
+                self._validate(alive1, skip=pending.verified)
 
         except FaultDuringCheckpoint as e:
             # Read-only buffers were never touched; discard in-flight writes.
@@ -255,82 +491,58 @@ class CheckpointEngine:
             return False
 
         # -- swap: pointer swap, no communication — cannot be interrupted ----
-        for r in alive0:
+        for r in pending.alive0:
             self.stores[r].buffer.swap()
         self.stats.created += 1
-        self.stats.last_create_s = time.perf_counter() - t0
-        self.stats.last_bytes_exchanged = bytes_exchanged
-        self.stats.last_bytes_per_rank = bytes_exchanged // max(len(alive0), 1)
+        self.stats.last_create_s = time.perf_counter() - pending.t0
+        self.stats.last_blocked_s = (
+            self.stats.last_capture_s + self.stats.last_finalize_wait_s
+        )
+        self.stats.last_bytes_exchanged = pending.bytes_exchanged
+        self.stats.last_bytes_per_rank = pending.bytes_exchanged // max(
+            len(pending.alive0), 1
+        )
         return True
 
     def discard_pending(self) -> None:
         """Drop an un-finalized async snapshot (e.g. before a restore) — it
-        counts as an aborted checkpoint (captured but never committed)."""
+        counts as an aborted checkpoint (captured but never committed). Joins
+        a still-running background drain first so no worker writes into
+        buffers after they are discarded."""
         if self._pending is not None:
-            self._pending = None
+            pending, self._pending = self._pending, None
+            if pending.future is not None:
+                try:
+                    pending.future.result()
+                except FaultDuringCheckpoint:
+                    pass
             for s in self.stores.values():
                 s.buffer.discard_writable()
             self.stats.aborted += 1
 
+    def drain_done(self) -> bool:
+        """True when there is nothing left to wait on before finalize_async
+        can run without blocking on a worker: no pending snapshot, a pending
+        whose background drain already finished, or a synchronous-drain
+        pending (finalize does the work itself). Public poll point for
+        callers sizing their overlap window (benchmarks, servers deciding
+        when to finalize early)."""
+        pending = self._pending
+        if pending is None or pending.future is None:
+            return True
+        return pending.future.done()
+
+    def close(self) -> None:
+        """Release background resources: joins + drops any pending snapshot
+        and shuts the pipeline worker pool down. The engine stays usable for
+        synchronous checkpoints afterward (the pool re-creates lazily)."""
+        self.discard_pending()
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
     def _groups(self) -> list[dist.ParityGroup]:
         return dist.parity_groups(self.n_ranks, self.codec.group_size(self.n_ranks))
-
-    def _distribute(self, alive: set[int], packed) -> int:
-        """Codec-driven redundancy distribution (Algorithm 1 generalized):
-        per group, ``encode`` the members' packed shards into blobs and store
-        each blob's stripes on the ``placement`` holders. Full-copy codecs
-        are the degenerate case — singleton groups, whole-copy stripes."""
-        codec = self.codec
-        groups = self._groups()
-        total = 0
-        # Manifests are tiny: replicate all of them with every store's meta so
-        # any survivor can unpack any origin's rebuilt bytes. (Compression
-        # below swaps in the tagged compressed manifest per origin.)
-        manifests = {
-            (r, name): shards[r][1]
-            for name, shards in packed.items()
-            for r in range(self.n_ranks)
-        }
-        for gi, grp in enumerate(groups):
-            placements = codec.placement(groups, gi, self.n_ranks)
-            if not placements:
-                continue
-            for name, shards in packed.items():
-                if name in self._replicated:
-                    continue  # equal on all ranks: no redundancy needed
-                bufs = []
-                for m in grp.members:
-                    flat, man = shards[m]
-                    if self.cfg.compress and codec.compressible:
-                        flat, man = self._compress(flat, man)
-                        manifests[(m, name)] = man
-                    bufs.append(flat)
-                blobs = codec.encode(bufs, len(placements))
-                # Stripe over however many members the *target* group has
-                # (ragged last groups appear at elastic world sizes). A
-                # single-holder blob is stored by reference — whole copies
-                # must stay memcpy-free, and the stores never mutate buffers
-                # in place (wipe() drops the dict), so aliasing is safe.
-                for b, (blob, holders) in enumerate(zip(blobs, placements)):
-                    blob = np.asarray(blob).reshape(-1)
-                    stripes = (
-                        [blob]
-                        if len(holders) == 1
-                        else parity_mod.split_stripes(blob, len(holders))
-                    )
-                    for j, member in enumerate(holders):
-                        st = self.stores[member]
-                        if not st.alive:
-                            continue
-                        st.buffer.writable.parity.setdefault(gi, {})[(name, b, j)] = stripes[j]
-                        total += stripes[j].nbytes
-        for r in alive:
-            # ``alive`` is the create-time set; a rank killed mid-checkpoint
-            # has a wiped store (the handshake aborts the snapshot later).
-            st = self.stores[r]
-            if st.alive and st.buffer.writable is not None:
-                st.buffer.writable.meta["manifests"] = manifests
-        return total
 
     def _compress(self, flat, man):
         # Compress per-leaf floats through the manifest (int8 blockwise); raw
@@ -349,11 +561,17 @@ class CheckpointEngine:
         packed = unpack_bytes(flat, cman)
         return decompress_tree(packed)
 
-    def _validate(self, alive: set[int]) -> None:
+    def _validate(self, alive: set[int], skip: set | None = None) -> None:
+        """Handshake-time checksum validation over whatever the pipeline's
+        chunked VERIFY stage did not already cover (replicated entities, and
+        every entity when the codec places no redundancy)."""
+        skip = skip or set()
         for r in alive:
             payload = self.stores[r].buffer.writable
             sums = payload.meta.get("checksums", {})
             for name, (flat, _) in payload.own.items():
+                if (r, name) in skip:
+                    continue
                 if name in sums and np_checksum(flat) != sums[name]:
                     raise FaultDuringCheckpoint(f"checksum mismatch rank {r} entity {name}")
 

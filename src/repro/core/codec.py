@@ -93,6 +93,17 @@ class RedundancyCodec:
     def encode(self, bufs: list[np.ndarray], n_out: int) -> list[np.ndarray]:
         raise NotImplementedError
 
+    def encode_into(
+        self, bufs: list[np.ndarray], n_out: int, lease: Callable[[int, int], np.ndarray]
+    ) -> list[np.ndarray]:
+        """Arena-aware encode: ``lease(b, nbytes)`` hands back a reusable
+        uint8 accumulator for blob ``b`` (the engine's zero-copy staging
+        path). The default ignores the lease and falls back to ``encode`` so
+        user-registered codecs keep working unchanged; the built-in striped
+        codecs override it to encode in place with zero steady-state
+        allocation."""
+        return self.encode(bufs, n_out)
+
     def placement(
         self, groups: list[dist.ParityGroup], gi: int, n_ranks: int
     ) -> list[tuple[int, ...]]:
@@ -225,6 +236,14 @@ class XorCodec(GroupCodecBase):
         assert n_out == 1
         return [parity_mod.encode_parity(bufs)]
 
+    def encode_into(self, bufs, n_out, lease):
+        if type(self).encode is not XorCodec.encode:
+            # Subclass with a custom encode: honor it (allocating path).
+            return self.encode(bufs, n_out)
+        assert n_out == 1
+        out = lease(0, parity_mod.parity_nbytes(bufs))
+        return [parity_mod.encode_parity(bufs, out=out)]
+
     def decode(self, present, blobs, missing):
         if len(missing) > 1:
             raise CodecDecodeError(f"{len(missing)} losses in one group; XOR tolerates 1")
@@ -256,6 +275,15 @@ class RSCodec(GroupCodecBase):
     def encode(self, bufs, n_out):
         assert n_out == self.m
         return gf256.rs_encode(bufs, self.m, self.coef)
+
+    def encode_into(self, bufs, n_out, lease):
+        if type(self).encode is not RSCodec.encode:
+            # Subclass with a custom encode: honor it (allocating path).
+            return self.encode(bufs, n_out)
+        assert n_out == self.m
+        n = gf256.padded_len(bufs)
+        out = [lease(b, n) for b in range(self.m)]
+        return gf256.rs_encode(bufs, self.m, self.coef, out=out)
 
     def decode(self, present, blobs, missing):
         if len(missing) > self.m:

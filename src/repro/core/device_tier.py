@@ -8,6 +8,26 @@ lowering the dry-run compiles per architecture; its collective bytes are the
 paper's Fig-4/5 quantity (checkpoint-creation cost), reported as a roofline
 row in EXPERIMENTS.md.
 
+**Fused one-program creation (DESIGN.md §9).** All exchanged leaves are
+concatenated into per-``(failure-axis, dtype)`` flat uint32 buffers *inside a
+single ``shard_map``* — one program dispatch regardless of how many leaves
+the state has (the previous per-leaf loop emitted one ``shard_map``/
+``ppermute`` program per leaf, multiplying dispatch overhead), and the
+handshake checksum folds into the same program. On top of the fused buffers
+the active redundancy codec's parity is computed **on device, before the
+host DMA**:
+
+  * ``codec="copy"``  — the fused buffer ppermutes to the scheme partner
+                        (Algorithm 1); the whole partner copy crosses PCIe.
+  * ``codec="xor"/"rs"`` — a ring of ``g-1`` ppermutes collects the parity
+                        group's buffers, the Pallas XOR / GF(2^8) kernel
+                        (kernels/xor_parity.py, kernels/rs_encode.py) encodes
+                        the m parity blobs on device, blob *b* routes to
+                        neighbor group ``gi+1+b`` (mirroring the host codec's
+                        placement), and each holder keeps only its 1/g
+                        stripe — so only **own shard + m/g parity stripes**
+                        cross PCIe instead of whole partner copies.
+
 Only *uniquely-owned* leaves are exchanged: a leaf whose PartitionSpec uses
 the redundancy axis has exactly one owner per shard (ZeRO-1 optimizer state,
 FSDP params); replicated leaves are already redundant and only enter the own
@@ -15,15 +35,16 @@ copy + checksum. This is the waLBerla property ("data is not stored
 redundantly in any way") driving what needs protection.
 
 Modes (hillclimb levers, see EXPERIMENTS §Perf):
-  * ``compress``   — int8-quantize exchanged leaves before the permute (4x
-                     less ICI traffic for bf16 / 2x... f32 4x; lossy).
-  * ``validate``   — fold a Fletcher checksum of the exchanged bytes into the
-                     program (the handshake's integrity input).
+  * ``compress``   — int8-quantize the fused buffers before the permute (4x
+                     less ICI traffic for f32 state; lossy; full-copy codec
+                     only, matching the host engine's restriction).
+  * ``validate``   — fold a Fletcher checksum of the fused exchanged buffers
+                     into the program (the handshake's integrity input).
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import partial
 from typing import Any
 
@@ -64,6 +85,44 @@ def _pad_shape(shape: tuple[int, ...], pspec: P, mesh: Mesh) -> tuple[int, ...]:
     return tuple(out)
 
 
+def _local_shape(padded: tuple[int, ...], pspec: P, mesh: Mesh) -> tuple[int, ...]:
+    """Per-device shard shape of a padded leaf under its PartitionSpec."""
+    out = []
+    for size, entry in zip(padded, _full_rank(pspec, len(padded))):
+        k = 1
+        for a in _axes_of(entry):
+            k *= mesh.shape[a]
+        out.append(size // k)
+    return tuple(out)
+
+
+def _leaf_words(local: tuple[int, ...], itemsize: int) -> int:
+    """uint32 words the local shard occupies in the fused buffer (ceil —
+    as_u32 zero-pads sub-word tails)."""
+    nbytes = int(np.prod(local, dtype=np.int64)) * itemsize
+    return -(-nbytes // 4)
+
+
+@dataclass(frozen=True)
+class FusedBucket:
+    """Layout of one per-(axis, dtype) fused exchange buffer.
+
+    All exchanged leaves sharing a failure axis and dtype concatenate (as
+    uint32 words, per shard) into one flat buffer; ``word_offsets[i]`` is
+    leaf ``leaf_idx[i]``'s start inside the *local* buffer of ``words``
+    words. ``axes`` is the union of mesh axes the member leaves vary on (in
+    mesh order) — the buffer's output sharding and checksum-psum axes.
+    """
+
+    tag: str
+    axis: str
+    dtype: str
+    axes: tuple[str, ...]
+    leaf_idx: tuple[int, ...] = field(default=())
+    word_offsets: tuple[int, ...] = field(default=())
+    words: int = 0
+
+
 @dataclass(frozen=True)
 class SnapshotProgram:
     """Jit-able snapshot/restore closures + sharding metadata."""
@@ -73,8 +132,41 @@ class SnapshotProgram:
     in_shardings: Any
     out_shardings: Any
     exchanged_names: tuple[str, ...]
-    exchanged_bytes: int      # global bytes traversing the permute (uncompressed)
+    exchanged_bytes: int      # global bytes traversing the collectives
     own_bytes: int            # global snapshot bytes (own copies)
+    buckets: tuple[FusedBucket, ...] = ()
+    pcie_bytes: int = 0       # global device->host bytes per checkpoint
+    codec: str = "copy"
+    parity_group: int = 0
+
+
+def _to_u32_local(x: jax.Array) -> jax.Array:
+    """Flatten a local shard to packed uint32 words (pad tail with zeros) —
+    the same packing the Pallas wrappers use, so fused-buffer parity stays
+    byte-compatible with the host/kernel oracles."""
+    from repro.kernels import ops as kops
+
+    return kops.as_u32(x)
+
+
+def _from_u32_local(
+    words: jax.Array, dtype: np.dtype, local: tuple[int, ...]
+) -> jax.Array:
+    """Inverse of ``_to_u32_local`` (= kernels.ops.as_u32): unpack the words'
+    bytes back into a local shard."""
+    n = int(np.prod(local, dtype=np.int64))
+    dtype = np.dtype(dtype)
+    if dtype.itemsize == 4:
+        flat = jax.lax.bitcast_convert_type(words, dtype)
+        return flat[:n].reshape(local)
+    u8 = jax.lax.bitcast_convert_type(words, jnp.uint8).reshape(-1)
+    if dtype.itemsize == 1:
+        flat = u8[:n] if dtype == np.uint8 else jax.lax.bitcast_convert_type(u8[:n], dtype)
+    else:
+        flat = jax.lax.bitcast_convert_type(
+            u8[: n * dtype.itemsize].reshape(n, dtype.itemsize), dtype
+        )
+    return flat.reshape(local)
 
 
 def build_snapshot_program(
@@ -87,8 +179,17 @@ def build_snapshot_program(
     include_own_copy: bool = True,
     compress: bool = False,
     validate: bool = True,
+    codec: str = "copy",       # "copy" | "xor" | "rs": on-device redundancy
+    parity_group: int = 0,     # group size g (k) for the striped codecs
+    rs_parity: int = 2,        # m parity blobs per group for codec="rs"
+    emit_full_blobs: bool = False,  # test hook: whole blobs, no routing/striping
 ) -> SnapshotProgram:
     fail_axes = (redundancy_axis,) if redundancy_axis != "data" else ("data", "pod")
+    striped = codec in ("xor", "rs")
+    if striped:
+        assert parity_group >= 1, "striped codecs need parity_group (the group size)"
+        assert not compress, "compress applies to the full-copy codec only"
+    n_parity = {"copy": 0, "xor": 1, "rs": rs_parity}[codec]
 
     leaves_sds, treedef = jax.tree.flatten(state_sds)
     leaves_ps = treedef.flatten_up_to(state_pspecs)
@@ -100,7 +201,7 @@ def build_snapshot_program(
 
     def _leaf_axis(ps: P, ndim: int) -> str:
         """The failure axis this leaf is actually sharded on (ppermute over an
-        axis the value doesn't vary on is vacuous and fails the VMA check):
+        axis the value doesn't vary on is vacuous and fails the rep check):
         prefer the requested redundancy axis, else any other failure axis."""
         cands = [redundancy_axis] + [a for a in fail_axes if a != redundancy_axis]
         for a in cands:
@@ -108,75 +209,220 @@ def build_snapshot_program(
                 return a
         return redundancy_axis
 
-    def _leaf_pairs(axis: str) -> list[tuple[int, int]]:
-        return dist.perm_pairs(mesh.shape[axis], scheme)
-    exchanged_bytes = sum(
-        int(np.prod(_pad_shape(leaves_sds[i].shape, leaves_ps[i], mesh), dtype=np.int64))
-        * leaves_sds[i].dtype.itemsize
-        for i in exchanged_idx
-    )
+    mesh_axes = tuple(mesh.shape.keys())
+
+    # -- bucket the exchanged leaves by (failure axis, dtype) ----------------
+    padded_shapes = {i: _pad_shape(leaves_sds[i].shape, leaves_ps[i], mesh)
+                     for i in exchanged_idx}
+    local_shapes = {i: _local_shape(padded_shapes[i], leaves_ps[i], mesh)
+                    for i in exchanged_idx}
+    by_key: dict[tuple[str, str], list[int]] = {}
+    for i in exchanged_idx:
+        axis = _leaf_axis(leaves_ps[i], len(leaves_sds[i].shape))
+        key = (axis, leaves_sds[i].dtype.name)
+        by_key.setdefault(key, []).append(i)
+
+    buckets: list[FusedBucket] = []
+    for (axis, dtype), idxs in sorted(by_key.items()):
+        offsets, off = [], 0
+        axes_set: set[str] = set()
+        for i in idxs:
+            offsets.append(off)
+            off += _leaf_words(local_shapes[i], leaves_sds[i].dtype.itemsize)
+            for e in _full_rank(leaves_ps[i], len(leaves_sds[i].shape)):
+                axes_set.update(_axes_of(e))
+        g = parity_group if striped else 1
+        off += (-off) % max(g, 1)  # stripe-divisible fused length
+        buckets.append(
+            FusedBucket(
+                tag=f"{axis}:{dtype}",
+                axis=axis,
+                dtype=dtype,
+                axes=tuple(a for a in mesh_axes if a in axes_set),
+                leaf_idx=tuple(idxs),
+                word_offsets=tuple(offsets),
+                words=off,
+            )
+        )
+
+    def _bucket_global_bytes(b: FusedBucket) -> int:
+        k = 1
+        for a in b.axes:
+            k *= mesh.shape[a]
+        return b.words * 4 * k
+
+    # -- byte accounting ------------------------------------------------------
     own_bytes = sum(
         int(np.prod(sd.shape, dtype=np.int64)) * sd.dtype.itemsize for sd in leaves_sds
     )
+    fused_bytes = sum(_bucket_global_bytes(b) for b in buckets)
+    if striped:
+        # ring collection (g-1 hops) + blob routing (m hops), all fused-width
+        exchanged_bytes = (parity_group - 1 + n_parity) * fused_bytes
+        pcie_payload = n_parity * fused_bytes // max(parity_group, 1)
+    else:
+        exchanged_bytes = fused_bytes
+        pcie_payload = fused_bytes if not compress else fused_bytes // 4
+    pcie_bytes = (own_bytes if include_own_copy else 0) + pcie_payload
 
-    def _exchange_leaf(x: jax.Array, ps: P) -> jax.Array:
-        full = _full_rank(ps, x.ndim)
-        axis = _leaf_axis(ps, x.ndim)
-        target = _pad_shape(x.shape, ps, mesh)
-        if target != x.shape:
-            x = jnp.pad(x, [(0, t - s) for s, t in zip(x.shape, target)])
-        fn = shard_map(
-            partial(jax.lax.ppermute, axis_name=axis, perm=_leaf_pairs(axis)),
-            mesh=mesh,
-            in_specs=P(*full),
-            out_specs=P(*full),
-        )
-        return fn(x)
+    # -- static collective schedules -----------------------------------------
+    def _copy_pairs(axis: str) -> list[tuple[int, int]]:
+        return dist.perm_pairs(mesh.shape[axis], scheme)
 
-    all_axes = tuple(mesh.shape.keys())
+    def _ring_pairs(axis: str, g: int) -> list[tuple[int, int]]:
+        """One within-group ring hop: position p receives p+1's buffer, so
+        after t hops position p holds member (p+t) mod k of its group."""
+        size = mesh.shape[axis]
+        groups = dist.parity_groups(size, g)
+        pairs = []
+        for grp in groups:
+            k = len(grp.members)
+            for q, m in enumerate(grp.members):
+                pairs.append((grp.members[(q + 1) % k], m))
+        return pairs
 
-    def _exchange_leaf_compressed(x: jax.Array, ps: P) -> dict[str, jax.Array]:
-        """Quantize per-shard inside shard_map, permute int8 + scales (4x less
-        ICI traffic for f32 state). Output is fully sharded flat buffers."""
+    def _route_pairs(axis: str, g: int, b: int) -> list[tuple[int, int]]:
+        """Send group gi's blob b to neighbor group gi+1+b (wrapping, skipping
+        gi) — the device mirror of GroupCodecBase.placement. Ragged positions
+        with no counterpart in the holder group drop out of the permutation
+        (their stripe share is unhosted; the stripe path asserts g | size)."""
+        size = mesh.shape[axis]
+        groups = dist.parity_groups(size, g)
+        ng = len(groups)
+        pairs = []
+        for gi, grp in enumerate(groups):
+            others = [(gi + 1 + t) % ng for t in range(ng)]
+            others = [h for h in others if h != gi] or [gi]
+            holder = groups[others[b % len(others)]]
+            for q, m in enumerate(grp.members):
+                if q < len(holder.members):
+                    pairs.append((m, holder.members[q]))
+        return pairs
+
+    # -- the ONE fused program ------------------------------------------------
+    def _fused_local(*local_leaves):
+        """Per-device body: build every bucket's fused buffer, exchange /
+        encode parity, and fold the handshake checksum — one program for the
+        whole state instead of one per leaf."""
+        from repro.kernels import ops as kops
         from repro.kernels import ref as kref
 
-        full = _full_rank(ps, x.ndim)
-        axis = _leaf_axis(ps, x.ndim)
-        pairs = _leaf_pairs(axis)
-        target = _pad_shape(x.shape, ps, mesh)
-        if target != x.shape:
-            x = jnp.pad(x, [(0, t - s) for s, t in zip(x.shape, target)])
+        by_leaf = dict(zip([i for b in buckets for i in b.leaf_idx], local_leaves))
+        out: dict[str, Any] = {}
+        checksum_acc = jnp.zeros((2,), jnp.uint32) if validate else None
+        for bi, bucket in enumerate(buckets):
+            parts = [_to_u32_local(by_leaf[i]) for i in bucket.leaf_idx]
+            buf = jnp.concatenate(parts) if parts else jnp.zeros(0, jnp.uint32)
+            if buf.shape[0] < bucket.words:
+                buf = jnp.pad(buf, (0, bucket.words - buf.shape[0]))
+            axis = bucket.axis
 
-        def local(lx):
-            flat = lx.reshape(-1).astype(jnp.float32)
-            pad = (-flat.shape[0]) % 256
-            if pad:
-                flat = jnp.pad(flat, (0, pad))
-            q, s = kref.quantize_blockwise(flat, 256)
-            q = jax.lax.ppermute(q, axis, pairs)
-            s = jax.lax.ppermute(s, axis, pairs)
-            return q, s
+            if validate:
+                c = kref.checksum(buf)
+                c = jax.lax.psum(c, bucket.axes) if bucket.axes else c
+                checksum_acc = checksum_acc * jnp.uint32(1000003) + c * jnp.uint32(bi + 1)
 
-        fn = shard_map(
-            local, mesh=mesh, in_specs=P(*full), out_specs=(P(all_axes), P(all_axes))
+            if compress:
+                flatf = jnp.concatenate(
+                    [by_leaf[i].reshape(-1).astype(jnp.float32) for i in bucket.leaf_idx]
+                )
+                pad = (-flatf.shape[0]) % 256
+                if pad:
+                    flatf = jnp.pad(flatf, (0, pad))
+                q, s = kref.quantize_blockwise(flatf, 256)
+                q = jax.lax.ppermute(q, axis, _copy_pairs(axis))
+                s = jax.lax.ppermute(s, axis, _copy_pairs(axis))
+                out.setdefault("partner", {})[bucket.tag] = {"q": q, "scale": s}
+                continue
+
+            if not striped:
+                out.setdefault("partner", {})[bucket.tag] = jax.lax.ppermute(
+                    buf, axis, _copy_pairs(axis)
+                )
+                continue
+
+            # -- on-device codec encode (before any host DMA) ----------------
+            g = parity_group
+            size = mesh.shape[axis]
+            idx = jax.lax.axis_index(axis)
+            gi = idx // g
+            pos = idx % g
+            n_full_groups = size // g
+            k_local = jnp.where(gi < n_full_groups, g, size - n_full_groups * g)
+            # ring-collect the group's buffers: slot t = member (pos+t) mod k
+            slots = [buf]
+            cur = buf
+            ring = _ring_pairs(axis, g)
+            for _t in range(1, g):
+                cur = jax.lax.ppermute(cur, axis, ring)
+                slots.append(cur)
+            stacked = jnp.stack(slots)                      # (g, words)
+            # canonical member order + zero rows past a ragged group's size
+            order = (jnp.arange(g) - pos) % jnp.maximum(k_local, 1)
+            canonical = jnp.take(stacked, order, axis=0)
+            canonical = jnp.where(
+                (jnp.arange(g) < k_local)[:, None], canonical, jnp.uint32(0)
+            )
+            # Pallas encode: XOR chain or GF(2^8) Cauchy matmul
+            if codec == "xor":
+                blobs = kops.xor_reduce(canonical)[None, :]  # (1, words)
+            else:
+                from repro.core import gf256
+
+                coefs = tuple(
+                    tuple(int(c) for c in row)
+                    for row in gf256.cauchy_matrix(rs_parity, g)
+                )
+                blobs = kops.gf256_matmul(canonical, coefs)  # (m, words)
+            if emit_full_blobs:
+                out.setdefault("parity_full", {})[bucket.tag] = blobs
+                continue
+            # route blob b to its holder group, keep this rank's 1/g stripe
+            sw = bucket.words // g
+            stripes = []
+            for b in range(n_parity):
+                routed = jax.lax.ppermute(blobs[b], axis, _route_pairs(axis, g, b))
+                stripes.append(jax.lax.dynamic_slice(routed, (pos * sw,), (sw,)))
+            out.setdefault("parity", {})[bucket.tag] = jnp.stack(stripes)
+        if validate:
+            out["checksum"] = checksum_acc
+        return out
+
+    def _fused_specs() -> tuple[Any, Any]:
+        in_specs = tuple(
+            P(*_full_rank(leaves_ps[i], len(leaves_sds[i].shape)))
+            for b in buckets
+            for i in b.leaf_idx
         )
-        q, s = fn(x)
-        return {"q": q, "scale": s}
+        out_specs: dict[str, Any] = {}
+        for bucket in buckets:
+            sharded = P(bucket.axes) if bucket.axes else P(None)
+            if compress:
+                out_specs.setdefault("partner", {})[bucket.tag] = {
+                    "q": sharded, "scale": sharded,
+                }
+            elif not striped:
+                out_specs.setdefault("partner", {})[bucket.tag] = sharded
+            elif emit_full_blobs:
+                out_specs.setdefault("parity_full", {})[bucket.tag] = (
+                    P(None, bucket.axes) if bucket.axes else P(None, None)
+                )
+            else:
+                out_specs.setdefault("parity", {})[bucket.tag] = (
+                    P(None, bucket.axes) if bucket.axes else P(None, None)
+                )
+        if validate:
+            out_specs["checksum"] = P()
+        return in_specs, out_specs
 
-    def _unexchange_leaf(y: jax.Array, ps: P, orig_shape: tuple[int, ...]) -> jax.Array:
-        full = _full_rank(ps, y.ndim)
-        axis = _leaf_axis(ps, len(orig_shape))
-        fn = shard_map(
-            partial(jax.lax.ppermute, axis_name=axis,
-                    perm=dist.inverse_perm(_leaf_pairs(axis))),
-            mesh=mesh,
-            in_specs=P(*full),
-            out_specs=P(*full),
-        )
-        y = fn(y)
-        if y.shape != orig_shape:
-            y = y[tuple(slice(0, s) for s in orig_shape)]
-        return y
+    if striped and not emit_full_blobs:
+        for bucket in buckets:
+            assert mesh.shape[bucket.axis] % parity_group == 0, (
+                f"on-device stripe placement needs parity_group "
+                f"({parity_group}) to divide axis {bucket.axis!r} "
+                f"({mesh.shape[bucket.axis]}); use emit_full_blobs for "
+                f"ragged worlds"
+            )
 
     def snapshot_fn(state):
         leaves = treedef.flatten_up_to(state)
@@ -185,72 +431,89 @@ def build_snapshot_program(
             # Explicit copies: the snapshot must survive mutation of the live
             # state (XLA cannot alias these outputs to the inputs).
             payload["own"] = treedef.unflatten([jnp.copy(x) for x in leaves])
-        partner = {}
-        for i in exchanged_idx:
-            x, ps = leaves[i], leaves_ps[i]
-            if compress:
-                partner[str(i)] = _exchange_leaf_compressed(x, ps)
-            else:
-                partner[str(i)] = _exchange_leaf(x, ps)
-        payload["partner"] = partner
-        if validate:
-            payload["checksum"] = _tree_checksum_sharded(
-                [leaves[i] for i in exchanged_idx],
-                [leaves_ps[i] for i in exchanged_idx],
+        if buckets:
+            in_specs, out_specs = _fused_specs()
+            # Pallas calls carry no replication rule in older jax releases, so
+            # the striped (on-device-encode) program opts out of the check;
+            # its outputs are fully varying anyway.
+            fn = shard_map(
+                _fused_local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_rep=not striped,
             )
+            args = []
+            for b in buckets:
+                for i in b.leaf_idx:
+                    x = leaves[i]
+                    target = padded_shapes[i]
+                    if target != tuple(x.shape):
+                        x = jnp.pad(x, [(0, t - s) for s, t in zip(x.shape, target)])
+                    args.append(x)
+            payload.update(fn(*args))
+        elif validate:
+            payload["checksum"] = jnp.zeros((2,), jnp.uint32)
         return payload
 
-    def _tree_checksum_sharded(xs: list[jax.Array], pss: list[P]) -> jax.Array:
-        """Deterministic handshake checksum with NO gathers: per-shard Fletcher
-        partials (local indices) psum'd across the mesh. A global flatten here
-        would all-gather the entire state (measured 225 GB/device — §Perf
-        iter 6); shard-local indexing is equally valid as an integrity input
-        because the sharding itself is deterministic."""
-        from repro.kernels import ref as kref
-
-        def one(x: jax.Array, ps: P) -> jax.Array:
-            full = _full_rank(ps, x.ndim)
-            # psum only over axes the leaf actually varies on (VMA-correct and
-            # avoids multiplying replicated partials by the axis size).
-            used: list[str] = []
-            for e in full:
-                used.extend(_axes_of(e))
-            target = _pad_shape(x.shape, ps, mesh)
-            if target != x.shape:
-                x = jnp.pad(x, [(0, t - s) for s, t in zip(x.shape, target)])
-
-            def local(lx):
-                flat = lx.reshape(-1)
-                if flat.dtype.itemsize == 2:
-                    if flat.shape[0] % 2:
-                        flat = jnp.pad(flat, (0, 1))
-                    u = jax.lax.bitcast_convert_type(flat.reshape(-1, 2), jnp.uint32)
-                    u = u.reshape(-1)
-                elif flat.dtype.itemsize == 4:
-                    u = jax.lax.bitcast_convert_type(flat, jnp.uint32)
-                else:
-                    u = flat.astype(jnp.uint32)
-                c = kref.checksum(u)
-                return jax.lax.psum(c, tuple(used)) if used else c
-
-            fn = shard_map(local, mesh=mesh, in_specs=P(*full), out_specs=P())
-            return fn(x)
-
-        acc = jnp.zeros((2,), jnp.uint32)
-        for j, (x, ps) in enumerate(zip(xs, pss)):
-            acc = acc * jnp.uint32(1000003) + one(x, ps) * jnp.uint32(j + 1)
-        return acc
+    # -- restore: one inverse program (full-copy codec only) ------------------
+    def _restore_local(*partner_bufs):
+        outs = []
+        for bucket, buf in zip(buckets, partner_bufs):
+            buf = jax.lax.ppermute(
+                buf, bucket.axis,
+                dist.inverse_perm(_copy_pairs(bucket.axis)),
+            )
+            for i, off in zip(bucket.leaf_idx, bucket.word_offsets):
+                words = _leaf_words(local_shapes[i], leaves_sds[i].dtype.itemsize)
+                leaf = _from_u32_local(
+                    buf[off : off + words],
+                    np.dtype(leaves_sds[i].dtype),
+                    local_shapes[i],
+                )
+                # Re-replicate over axes the leaf doesn't vary on (the fused
+                # buffer varies on the bucket union): numerically the copies
+                # are identical; all_gather[0] makes it explicit. The rep
+                # checker cannot prove this — hence check_rep=False below.
+                leaf_axes: set[str] = set()
+                for e in _full_rank(leaves_ps[i], len(leaves_sds[i].shape)):
+                    leaf_axes.update(_axes_of(e))
+                for a in bucket.axes:
+                    if a not in leaf_axes:
+                        leaf = jax.lax.all_gather(leaf, a)[0]
+                outs.append(leaf)
+        return tuple(outs)
 
     def restore_fn(payload):
         """Re-align partner copies to their origin coordinates (used by spare
-        substitution; survivor restore is local and needs no program)."""
-        partner = payload["partner"]
-        out = {}
-        for i in exchanged_idx:
-            y = partner[str(i)]
-            assert not isinstance(y, dict), "compressed restore is host-side"
-            out[str(i)] = _unexchange_leaf(y, leaves_ps[i], leaves_sds[i].shape)
-        return out
+        substitution; survivor restore is local and needs no program). Striped
+        and compressed payloads reconstruct host-side through the codec."""
+        partner = payload.get("partner")
+        assert partner is not None and not compress and not striped, (
+            "only full-copy uncompressed payloads restore on device; parity "
+            "reconstruction is host-side (codec.decode)"
+        )
+        in_specs = tuple(
+            P(b.axes) if b.axes else P(None) for b in buckets
+        )
+        out_specs = tuple(
+            P(*_full_rank(leaves_ps[i], len(leaves_sds[i].shape)))
+            for b in buckets
+            for i in b.leaf_idx
+        )
+        fn = shard_map(
+            _restore_local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False,
+        )
+        outs = fn(*[partner[b.tag] for b in buckets])
+        result = {}
+        pos = 0
+        for b in buckets:
+            for i in b.leaf_idx:
+                y = outs[pos]
+                pos += 1
+                orig = leaves_sds[i].shape
+                if tuple(y.shape) != tuple(orig):
+                    y = y[tuple(slice(0, s) for s in orig)]
+                result[str(i)] = y
+        return result
 
     in_shardings = treedef.unflatten(
         [NamedSharding(mesh, ps) for ps in leaves_ps]
@@ -264,4 +527,8 @@ def build_snapshot_program(
         exchanged_names=tuple(str(i) for i in exchanged_idx),
         exchanged_bytes=exchanged_bytes,
         own_bytes=own_bytes,
+        buckets=tuple(buckets),
+        pcie_bytes=pcie_bytes,
+        codec=codec,
+        parity_group=parity_group,
     )

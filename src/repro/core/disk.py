@@ -33,7 +33,6 @@ def save_to_disk(engine: CheckpointEngine, path: str) -> int:
         blob = {
             "own": {k: (np.asarray(v[0]), v[1]) for k, v in payload.own.items()},
             "own_exch": payload.own_exch,
-            "recv": payload.recv,
             "parity": payload.parity,
             "meta": payload.meta,
         }
@@ -52,37 +51,46 @@ def load_from_disk(engine: CheckpointEngine, path: str) -> None:
     """Rehydrate the engine's read-only buffers from a disk checkpoint
     (whole-system restart: every in-memory snapshot was lost). Pre-codec
     checkpoints are migrated into the codec stripe layout so failed-rank
-    recovery keeps working across the format change."""
+    recovery keeps working across the format change — in-memory
+    ``StorePayload`` no longer has the legacy ``recv`` slot, so old pickles
+    that still carry one are translated at load time (the only place the
+    legacy format can enter the system)."""
     from repro.core.hoststore import StorePayload
 
     with open(os.path.join(path, "index.pkl"), "rb") as f:
         index = pickle.load(f)
     assert index["n_ranks"] == engine.n_ranks, (index["n_ranks"], engine.n_ranks)
+    legacy_recv: dict[int, dict[int, dict[str, Any]]] = {}
     for r in index["ranks"]:
         with open(os.path.join(path, f"rank{r:05d}.pkl"), "rb") as f:
             blob = pickle.load(f)
         payload = StorePayload(
             own=blob["own"],
             own_exch=blob.get("own_exch", {}),
-            recv=blob["recv"],
             parity=blob["parity"],
             meta=blob["meta"],
         )
+        if blob.get("recv"):
+            legacy_recv[r] = blob["recv"]
         store = engine.stores[r]
         store.revive(r)
         store.buffer.write(payload)
         store.buffer.swap()
-    _migrate_legacy_layout(engine)
+    _migrate_legacy_layout(engine, legacy_recv)
 
 
-def _migrate_legacy_layout(engine: CheckpointEngine) -> None:
-    """Translate pre-codec store layouts in place after a disk load:
+def _migrate_legacy_layout(
+    engine: CheckpointEngine, legacy_recv: dict[int, dict[int, dict[str, Any]]]
+) -> None:
+    """Translate pre-codec disk layouts in place after a load:
 
     * parity stripes keyed ``(entity, stripe)`` -> ``(entity, blob=0, stripe)``
       (XOR had exactly one blob per group);
-    * ``recv`` partner copies -> whole-blob stripes at the codec's placement
-      for the holder that physically held them, with their manifests
-      replicated into meta so codec decode can unpack the bytes.
+    * legacy ``recv`` partner copies (``holder_rank -> origin -> entity ->
+      (flat, manifest)`` out of the pickles) -> whole-blob ``parity`` stripes
+      at the codec's placement for the holder that physically held them, with
+      their manifests replicated into meta so codec decode can unpack the
+      bytes.
     """
     from repro.core import distribution as dist
 
@@ -101,11 +109,10 @@ def _migrate_legacy_layout(engine: CheckpointEngine) -> None:
             for key in [k for k in stripes if len(k) == 2]:
                 name, j = key
                 stripes[(name, 0, j)] = stripes.pop(key)
-        for origin, entry in list(payload.recv.items()):
+        for origin, entry in legacy_recv.get(store.rank, {}).items():
             for b, holders in enumerate(placements.get(origin, [])):
                 if store.rank not in holders:
                     continue
                 for name, (flat, man) in entry.items():
                     payload.parity.setdefault(origin, {})[(name, b, 0)] = flat
                     payload.meta.setdefault("manifests", {})[(origin, name)] = man
-            del payload.recv[origin]

@@ -130,23 +130,42 @@ def solve_gf(A: np.ndarray, rhs: list[np.ndarray]) -> list[np.ndarray]:
 # Reed-Solomon encode / decode over byte buffers
 # ---------------------------------------------------------------------------
 
-def _padded_len(bufs: list[np.ndarray]) -> int:
+def padded_len(bufs: list[np.ndarray]) -> int:
+    """Blob length ``rs_encode`` produces: the 4-aligned max buffer size
+    (uint32 stripe views, matching XOR parity)."""
     n = max(b.nbytes for b in bufs)
-    return n + (-n) % 4  # 4-aligned like XOR parity (uint32 stripe views)
+    return n + (-n) % 4
 
 
-def rs_encode(bufs: list[np.ndarray], m: int, coef: np.ndarray | None = None) -> list[np.ndarray]:
+_padded_len = padded_len  # internal alias
+
+
+def rs_encode(
+    bufs: list[np.ndarray],
+    m: int,
+    coef: np.ndarray | None = None,
+    out: list[np.ndarray] | None = None,
+) -> list[np.ndarray]:
     """k data buffers (ragged lengths ok) -> m parity blobs of the padded size.
 
     blob_j = ⊕_i C[j][i] · data_i, accumulated over each buffer's prefix —
     the implicit zero padding contributes nothing, so no buffer is copied.
+
+    ``out`` (optional) supplies m reusable uint8 accumulators of the padded
+    length (``_padded_len``) — arena-leased by the engine so steady-state
+    encodes allocate nothing; they are zeroed here before accumulation.
     """
     k = len(bufs)
     C = cauchy_matrix(m, k) if coef is None else coef[:, :k]
     n = _padded_len(bufs)
     blobs = []
     for j in range(m):
-        acc = np.zeros(n, np.uint8)
+        if out is None:
+            acc = np.zeros(n, np.uint8)
+        else:
+            acc = out[j]
+            assert acc.dtype == np.uint8 and acc.nbytes == n, (acc.nbytes, n)
+            acc[:] = 0
         for i, b in enumerate(bufs):
             gf_addmul_into(acc, int(C[j, i]), b.reshape(-1))
         blobs.append(acc)

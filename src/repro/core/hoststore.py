@@ -1,27 +1,38 @@
-"""Per-rank host-DRAM snapshot store (diskless, double-buffered).
+"""Per-rank host-DRAM snapshot store (diskless, double-buffered, arena-backed).
 
 One ``HostStore`` models the main memory of one failure-domain rank (a TPU
 host / data-axis coordinate). Its double buffer holds:
 
   * ``own``    — this rank's serialized snapshot shards, per entity
-  * ``recv``   — legacy partner-copy slot. Dead storage since the codec
-                 layer (copies now live in ``parity`` as whole-blob
-                 stripes): pre-codec disk pickles still *load* through it,
-                 but recovery does not read it — an old-format checkpoint
-                 restores survivors' own shards only
   * ``parity`` — redundancy stripes hosted for other groups, keyed
                  ``group -> (entity, blob, stripe)`` (copies, XOR parity,
                  RS blobs — whatever the active codec emits)
   * ``meta``   — step / checksums / manifests / provenance
 
+Serialized payloads live in **arenas**: per-(bank, key) uint8 buffers leased
+through :meth:`HostStore.lease` and reused across checkpoints, so the
+steady-state hot path allocates nothing — ``pack_bytes`` writes each leaf
+straight into the inactive bank and the codec encodes over arena views.
+Two banks alternate with the double buffer's generation parity: the
+read-only checkpoint (generation ``g``) owns bank ``g % 2`` and the next
+write stages into the other bank, so an in-flight (or aborted and retried)
+checkpoint can never scribble over the committed one — the bank flip is
+what extends Algorithm 2's pointer-swap guarantee to buffer reuse.
+
 Killing the rank wipes the store — in-memory checkpoints die with their host,
 which is exactly the failure model the paper's redundancy exists to survive.
+
+(The pre-codec ``recv`` partner-copy slot is gone: recovery never read it
+since the codec layer landed. Old disk pickles that still carry it are
+migrated into ``parity`` stripes at load time — see ``core/disk.py``.)
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Any
+
+import numpy as np
 
 from repro.core.doublebuffer import DoubleBuffer
 
@@ -30,7 +41,6 @@ from repro.core.doublebuffer import DoubleBuffer
 class StorePayload:
     own: dict[str, Any] = field(default_factory=dict)       # entity -> (flat, manifest)
     own_exch: dict[str, Any] = field(default_factory=dict)  # entity -> exchange subset (striped codecs)
-    recv: dict[int, dict[str, Any]] = field(default_factory=dict)   # legacy copy slot
     parity: dict[int, Any] = field(default_factory=dict)    # group -> (entity, blob, stripe) -> bytes
     meta: dict[str, Any] = field(default_factory=dict)
 
@@ -54,7 +64,7 @@ class StorePayload:
         return {
             "own": acc(self.own),
             "exchange": acc(self.own_exch),
-            "redundancy": acc(self.recv) + acc(self.parity),
+            "redundancy": acc(self.parity),
         }
 
 
@@ -63,10 +73,35 @@ class HostStore:
         self.rank = rank
         self.buffer = DoubleBuffer(f"host{rank}")
         self.alive = True
+        # (bank, key) -> reusable uint8 arena; see module docstring.
+        self._arenas: dict[tuple[int, Any], np.ndarray] = {}
+
+    # ------------------------------------------------------------------ #
+    # arena leasing (zero-copy staging)
+    # ------------------------------------------------------------------ #
+    @property
+    def staging_bank(self) -> int:
+        """Bank index for the NEXT checkpoint's payload. The committed
+        checkpoint (generation g) owns bank ``g % 2``; staging uses the other
+        one. An aborted attempt doesn't advance the generation, so a retry
+        reuses the same (non-committed) bank."""
+        return (self.buffer.generation + 1) % 2
+
+    def lease(self, key: Any, nbytes: int) -> np.ndarray:
+        """A reusable uint8 arena view of exactly ``nbytes`` for the upcoming
+        checkpoint. Grown (never shrunk) when the payload grows; steady-state
+        checkpoints allocate nothing."""
+        k = (self.staging_bank, key)
+        buf = self._arenas.get(k)
+        if buf is None or buf.nbytes < nbytes:
+            buf = np.empty(nbytes, np.uint8)
+            self._arenas[k] = buf
+        return buf[:nbytes]
 
     def wipe(self) -> None:
         """Host failure: all in-memory snapshot data on this rank is gone."""
         self.buffer = DoubleBuffer(f"host{self.rank}")
+        self._arenas = {}
         self.alive = False
 
     def revive(self, rank: int | None = None) -> None:
@@ -74,6 +109,7 @@ class HostStore:
         if rank is not None:
             self.rank = rank
         self.buffer = DoubleBuffer(f"host{self.rank}")
+        self._arenas = {}
         self.alive = True
 
     @property

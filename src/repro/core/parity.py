@@ -16,7 +16,13 @@ from __future__ import annotations
 import numpy as np
 
 
-def encode_parity(buffers: list[np.ndarray]) -> np.ndarray:
+def parity_nbytes(buffers: list[np.ndarray]) -> int:
+    """Blob length ``encode_parity`` produces: the 4-aligned max buffer size."""
+    n = max(b.nbytes for b in buffers)
+    return n + (-n) % 4
+
+
+def encode_parity(buffers: list[np.ndarray], out: np.ndarray | None = None) -> np.ndarray:
     """XOR of byte buffers, implicitly zero-padded to the 4-aligned max.
 
     Zero padding is an XOR no-op, so nothing is materialized: each buffer
@@ -24,10 +30,18 @@ def encode_parity(buffers: list[np.ndarray]) -> np.ndarray:
     the 4-aligned prefix plus at most 3 ragged tail bytes. (The previous
     version zero-copied every shorter buffer up to the max length, a full
     extra alloc+memcpy per group member on ragged groups.)
+
+    ``out`` (optional) is a reusable uint8 accumulator of ``parity_nbytes``
+    bytes — the engine leases it from an arena so steady-state encodes
+    allocate nothing; it is zeroed here before accumulation.
     """
-    n = max(b.nbytes for b in buffers)
-    n += (-n) % 4
-    acc = np.zeros(n, np.uint8)
+    n = parity_nbytes(buffers)
+    if out is None:
+        acc = np.zeros(n, np.uint8)
+    else:
+        assert out.dtype == np.uint8 and out.nbytes == n, (out.nbytes, n)
+        acc = out
+        acc[:] = 0
     acc32 = acc.view(np.uint32)
     for b in buffers:
         b = b.reshape(-1)
@@ -44,10 +58,17 @@ def encode_parity(buffers: list[np.ndarray]) -> np.ndarray:
     return acc
 
 
+def stripe_bounds(nbytes: int, g: int) -> list[tuple[int, int]]:
+    """Byte bounds of a blob's g stripes: ceil-width chunks, last one short.
+    The single source of the on-wire stripe convention — split_stripes,
+    join_stripes and the engine's transfer stage all derive from it."""
+    w = -(-nbytes // g)
+    return [(i * w, min((i + 1) * w, nbytes)) for i in range(g)]
+
+
 def split_stripes(parity: np.ndarray, g: int) -> list[np.ndarray]:
     """Split a parity buffer into g stripes (last one may be shorter)."""
-    stripe = -(-parity.nbytes // g)
-    return [parity[i * stripe : (i + 1) * stripe].copy() for i in range(g)]
+    return [parity[a:b].copy() for a, b in stripe_bounds(parity.nbytes, g)]
 
 
 def join_stripes(stripes: list[np.ndarray]) -> np.ndarray:

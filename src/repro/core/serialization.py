@@ -91,25 +91,53 @@ class Manifest:
     coords: list[LeafSlice] | None = None
 
 
-def pack_bytes(tree: Any) -> tuple[np.ndarray, Manifest]:
+def tree_packed_nbytes(tree: Any) -> int:
+    """Exact byte length ``pack_bytes`` will produce for this tree — used to
+    size host-store arenas before staging a snapshot into them."""
+    return sum(np.asarray(leaf).nbytes for _, leaf in flatten_with_names(tree))
+
+
+def pack_bytes(
+    tree: Any,
+    out: np.ndarray | None = None,
+    lease: Any = None,
+) -> tuple[np.ndarray, Manifest]:
+    """Serialize a pytree into one flat uint8 buffer + manifest.
+
+    With ``out`` (a preallocated uint8 arena of at least ``tree_packed_nbytes``
+    bytes) every leaf is copied exactly once, straight into its slice of the
+    arena — no intermediate per-leaf buffers and no concatenate allocation.
+    ``lease`` is the callback form: ``lease(total_nbytes)`` returns the arena
+    once the size is known, so callers avoid a second tree traversal just to
+    size it (the engine passes ``HostStore.lease`` through here). The
+    returned flat buffer is a view of the arena; callers own its lifetime
+    (the engine's double-buffered banks guarantee the view never aliases a
+    committed checkpoint). With neither, a fresh buffer is allocated.
+    """
     named = flatten_with_names(tree)
     _, treedef = jax.tree.flatten(tree)
     names, shapes, dtypes, offsets = [], [], [], []
-    bufs = []
+    total = sum(np.asarray(leaf).nbytes for _, leaf in named)
+    if out is None and lease is not None:
+        out = lease(total)
+    if out is None:
+        out = np.empty(total, np.uint8)
+    else:
+        assert out.dtype == np.uint8 and out.nbytes >= total, (out.dtype, out.nbytes, total)
     off = 0
     for n, leaf in named:
         a = np.asarray(leaf)
-        shape = tuple(a.shape)  # before ascontiguousarray (it promotes 0-d to 1-d)
-        a = np.ascontiguousarray(a)
         names.append(n)
-        shapes.append(shape)
+        shapes.append(tuple(a.shape))
         dtypes.append(a.dtype.name)
         offsets.append(off)
-        raw = a.view(np.uint8).reshape(-1)
-        bufs.append(raw)
-        off += raw.nbytes
-    flat = np.concatenate(bufs) if bufs else np.zeros(0, np.uint8)
-    return flat, Manifest(names, shapes, dtypes, offsets, off, treedef)
+        dst = out[off : off + a.nbytes]
+        # One memcpy per leaf (the staging DMA): reinterpret the arena slice
+        # in the leaf's dtype and copy — handles non-contiguous leaves too.
+        np.copyto(dst.view(a.dtype).reshape(a.shape if a.shape else (1,)),
+                  a.reshape(a.shape if a.shape else (1,)))
+        off += a.nbytes
+    return out[:total], Manifest(names, shapes, dtypes, offsets, total, treedef)
 
 
 def unpack_bytes(flat: np.ndarray, manifest: Manifest) -> Any:

@@ -164,9 +164,13 @@ def run_cell(
 
 def run_snapshot_cell(
     arch: str, mesh_kind: str, compress: bool = False, hlo_out: str | None = None,
+    codec: str = "copy", parity_group: int = 0, rs_parity: int = 2,
 ) -> dict[str, Any]:
     """Lower + compile the checkpoint engine's device-tier snapshot program
-    for this arch's train state (the paper's checkpoint-creation hot path)."""
+    for this arch's train state (the paper's checkpoint-creation hot path).
+    ``codec="xor"/"rs"`` lowers the fused on-device-encode program instead —
+    its recorded ``pcie_bytes_global`` is the D2H roofline input (stripes
+    instead of whole partner copies)."""
     import jax
 
     from repro.configs import get_config
@@ -183,14 +187,21 @@ def run_snapshot_cell(
 
     prog = build_snapshot_program(
         mesh, state_sds, pspecs, redundancy_axis="data", compress=compress,
+        codec=codec, parity_group=parity_group, rs_parity=rs_parity,
     )
+    tag = "snapshot_step" + ("_compressed" if compress else "")
+    if codec != "copy":
+        tag += f"_{codec}{parity_group}"
     rec: dict[str, Any] = {
         "arch": arch,
-        "shape": "snapshot_step" + ("_compressed" if compress else ""),
+        "shape": tag,
         "mesh": mesh_kind,
         "kind": "snapshot",
         "exchanged_bytes_global": prog.exchanged_bytes,
         "own_bytes_global": prog.own_bytes,
+        "pcie_bytes_global": prog.pcie_bytes,
+        "snapshot_codec": codec,
+        "fused_buckets": len(prog.buckets),
     }
     t0 = time.time()
     jitted = jax.jit(prog.snapshot_fn, in_shardings=(prog.in_shardings,))
@@ -227,11 +238,18 @@ def main() -> None:
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--snapshot", action="store_true", help="lower the checkpoint snapshot_step too")
     ap.add_argument("--snapshot-compress", action="store_true")
+    ap.add_argument("--snapshot-codec", default="copy", choices=["copy", "xor", "rs"],
+                    help="on-device redundancy encode for the snapshot program")
+    ap.add_argument("--snapshot-parity-group", type=int, default=0,
+                    help="group size g for --snapshot-codec xor/rs (default 4 "
+                         "when a striped codec is selected)")
     ap.add_argument("--fast", action="store_true", help="lower only (no compile)")
     ap.add_argument("--skip-existing", action="store_true",
                     help="skip cells whose JSON already exists (resume)")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
+    if args.snapshot_codec != "copy" and args.snapshot_parity_group < 1:
+        args.snapshot_parity_group = 4  # striped codecs need a group size
 
     archs = list_archs() if args.all or args.arch is None else [args.arch]
     shapes = list(SHAPES) if args.all or args.shape is None else [args.shape]
@@ -272,6 +290,8 @@ def main() -> None:
                     rec = run_snapshot_cell(
                         arch, mesh_kind, compress=args.snapshot_compress,
                         hlo_out=os.path.join(args.out, tag + ".hlo.gz"),
+                        codec=args.snapshot_codec,
+                        parity_group=args.snapshot_parity_group,
                     )
                 except Exception as e:
                     failures += 1

@@ -38,6 +38,9 @@ def main() -> None:
                     help="erasure group size k for xor/rs codecs")
     ap.add_argument("--rs-parity", type=int, default=2,
                     help="m parity blobs per group for --codec rs")
+    ap.add_argument("--checkpoint-mode", choices=["sync", "async"], default="sync",
+                    help="async overlaps the session-checkpoint pipeline with "
+                         "the next decode steps (DESIGN.md §9)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -60,6 +63,7 @@ def main() -> None:
         max_seq=args.prompt_len + args.gen + 2,
         checkpoint_every_tokens=args.ckpt_every,
         n_virtual_hosts=args.hosts,
+        checkpoint_mode=args.checkpoint_mode,
         engine=EngineConfig(
             codec=args.codec, parity_group=args.parity_group, rs_parity=args.rs_parity
         ),

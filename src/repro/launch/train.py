@@ -48,6 +48,12 @@ def main() -> None:
     ap.add_argument("--rs-parity", type=int, default=2,
                     help="m parity blobs per group for --codec rs")
     ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--checkpoint-mode", choices=["sync", "async"], default="sync",
+                    help="async overlaps the encode/transfer/verify pipeline "
+                         "with the next train steps (DESIGN.md §9)")
+    ap.add_argument("--async-workers", type=int, default=1,
+                    help="background pipeline workers for --checkpoint-mode async "
+                         "(0 drains at the next step boundary instead)")
     ap.add_argument("--out", default=None, help="write history JSON here")
     args = ap.parse_args()
 
@@ -74,12 +80,14 @@ def main() -> None:
         recovery_policy=args.policy,
         mtbf_individual_s=args.mtbf,
         checkpoint_period=args.period,
+        checkpoint_mode=args.checkpoint_mode,
         engine=EngineConfig(
             scheme=args.scheme,
             parity_group=args.parity_group,
             codec=args.codec,
             rs_parity=args.rs_parity,
             compress=args.compress,
+            async_workers=args.async_workers,
         ),
     )
     trainer = Trainer(model, tcfg, injector=injector)

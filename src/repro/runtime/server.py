@@ -45,6 +45,10 @@ class ServerConfig:
     # pool runs dry). "elastic": N-to-M shrink onto the survivors — serving
     # capacity degrades instead of the job dying.
     recovery_policy: str = "spare"
+    # "async" captures session snapshots at the decode boundary and overlaps
+    # the encode/transfer/verify pipeline with the next decode steps,
+    # committing at the following boundary (DESIGN.md §9).
+    checkpoint_mode: str = "sync"     # sync | async
     engine: EngineConfig = field(default_factory=EngineConfig)
 
 
@@ -52,6 +56,7 @@ class Server:
     def __init__(self, model: Model, scfg: ServerConfig, params: Any | None = None,
                  injector: FailureInjector | None = None) -> None:
         assert not model.cfg.is_encoder, "serving loop decodes; encoder archs export prefill only"
+        assert scfg.checkpoint_mode in ("sync", "async"), scfg.checkpoint_mode
         self.model = model
         self.scfg = scfg
         self.params = params if params is not None else model.init(jax.random.PRNGKey(0))
@@ -86,6 +91,8 @@ class Server:
         self.n_recoveries = 0
 
     def _build_engine(self, n_ranks: int) -> None:
+        if getattr(self, "engine", None) is not None:
+            self.engine.close()  # join + release the old pipeline worker
         self.engine = CheckpointEngine(n_ranks, self.scfg.engine)
         self.cluster.attach_engine(self.engine)
         self.engine.register(
@@ -122,6 +129,13 @@ class Server:
         while produced < n_tokens:
             try:
                 self.cluster.barrier("decode")
+                # Commit an overlapped checkpoint from the previous decode
+                # boundary (its pipeline ran behind the last steps).
+                pending = self.engine.finalize_async()
+                if pending is False:
+                    raise ProcessFaultException(
+                        sorted(self.cluster.failed), "checkpoint"
+                    )
                 for r in self.injector.kills_at_step(ticks):
                     self.cluster.kill(r)
                 ticks += 1
@@ -136,13 +150,24 @@ class Server:
                 produced = self._produced()
 
                 if produced % self.scfg.checkpoint_every_tokens == 0:
-                    ok = self.engine.checkpoint({"pos": pos + 1})
+                    if self.scfg.checkpoint_mode == "async":
+                        # Capture now; the pipeline overlaps the next decodes.
+                        ok = self.engine.checkpoint_async({"pos": pos + 1})
+                    else:
+                        ok = self.engine.checkpoint({"pos": pos + 1})
                     if not ok:
                         raise ProcessFaultException(sorted(self.cluster.failed), "checkpoint")
             except ProcessFaultException as e:
                 log.warning("serving fault: %s", e)
                 self.recover()
                 produced = self._produced()
+        # Commit a still-in-flight overlapped checkpoint before handing the
+        # tokens back, so the final session state is protected.
+        if self.engine.finalize_async() is False:
+            log.warning(
+                "final session checkpoint aborted (rank died during the "
+                "trailing pipeline); sessions re-protect on the next decode"
+            )
         return np.asarray(self.sessions["tokens"])
 
     def _produced(self) -> int:

@@ -68,9 +68,13 @@ class TrainerConfig:
     # in-memory checkpoints, the read-only buffers are persisted.
     disk_path: str | None = None
     disk_every: int = 8
-    # Overlapped checkpointing: capture the snapshot synchronously at the
-    # step boundary (consistency preserved), defer the partner exchange +
-    # handshake + swap to the next step (compute/comm overlap).
+    # Overlapped checkpointing: "sync" blocks the step loop for the full
+    # create+distribute+handshake; "async" captures the snapshot at the step
+    # boundary (consistency preserved) and runs the encode/transfer/verify
+    # pipeline behind the next step (compute/comm overlap, background worker
+    # per EngineConfig.async_workers), committing at the following boundary.
+    checkpoint_mode: str = "sync"     # sync | async
+    # Deprecated alias for checkpoint_mode="async" (kept for old configs).
     async_checkpoint: bool = False
 
 
@@ -82,6 +86,7 @@ class Trainer:
         mesh: Mesh | None = None,
         injector: FailureInjector | None = None,
     ) -> None:
+        assert tcfg.checkpoint_mode in ("sync", "async"), tcfg.checkpoint_mode
         self.model = model
         self.cfg = model.cfg
         self.tcfg = tcfg
@@ -230,7 +235,7 @@ class Trainer:
 
                     self.engine._fault_hook = hook
                     ckpt_count += 1
-                    if self.tcfg.async_checkpoint:
+                    if self.tcfg.checkpoint_mode == "async" or self.tcfg.async_checkpoint:
                         # Capture now; exchange overlaps the next step.
                         with self.timers("checkpoint"):
                             created = self.engine.checkpoint_async(
@@ -364,6 +369,7 @@ class Trainer:
         """Rebuild the engine for a new world size; entities carry over and
         re-shard themselves at the next checkpoint."""
         old = self.engine
+        old.close()  # join + release the old engine's pipeline worker
         new_engine = CheckpointEngine(n_new, self.tcfg.engine)
         for name, ent in old._entities.items():
             new_engine._entities[name] = ent

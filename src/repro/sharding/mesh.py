@@ -21,16 +21,38 @@ def abstract_mesh(*axes: tuple[str, int]) -> AbstractMesh:
         return AbstractMesh(sizes, names)
 
 
-def shard_map(f, *, mesh, in_specs, out_specs):
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep: bool = True):
     """Version-portable ``shard_map``: top-level ``jax.shard_map`` when the
-    release exports it, ``jax.experimental.shard_map`` otherwise."""
+    release exports it, ``jax.experimental.shard_map`` otherwise (the
+    experimental module is only imported on releases that need it).
+
+    ``check_rep=False`` disables the replication/VMA check (needed e.g. for
+    the device-tier restore program, which re-replicates leaves out of a
+    fused buffer via all_gather — numerically replicated but not statically
+    provable). The flag is spelled ``check_rep`` on older releases and
+    ``check_vma`` on newer ones; both are attempted."""
     import jax
 
     if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
-    from jax.experimental.shard_map import shard_map as _shard_map
+        fn = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as fn  # type: ignore[no-redef]
 
-    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    if check_rep:
+        return fn(f, **kwargs)
+    for flag in ("check_rep", "check_vma"):
+        try:
+            return fn(f, **kwargs, **{flag: False})
+        except TypeError:
+            continue  # this release spells the kwarg differently
+    # Never degrade silently: callers pass check_rep=False because their
+    # program cannot pass the check (Pallas bodies, all_gather
+    # re-replication) — a clear error here beats an opaque trace-time one.
+    raise TypeError(
+        "this jax release's shard_map accepts neither check_rep nor "
+        "check_vma; cannot disable the replication check"
+    )
 
 
 def mesh_axis_size(mesh: Mesh, axes: tuple[str, ...] | str | None) -> int:

@@ -1,11 +1,11 @@
-"""Device-tier snapshot program: collective-permute exchange semantics on a
-virtual 8-device mesh (subprocess, so the 1-device test env is untouched)."""
+"""Device-tier fused snapshot program: one-program exchange semantics,
+on-device codec parity vs the host oracle, and PCIe accounting on a virtual
+8-device mesh (subprocess, so the 1-device test env is untouched)."""
 
 import os
 import subprocess
 import sys
 import textwrap
-
 
 def _run(code: str) -> str:
     out = subprocess.run(
@@ -31,22 +31,63 @@ def test_exchange_roll_semantics_and_restore():
         ps = {"w": P("data", "model"), "rep": P()}
         prog = build_snapshot_program(mesh, sds, ps)
         assert len(prog.exchanged_names) == 1
-        name = prog.exchanged_names[0]
+        assert len(prog.buckets) == 1 and prog.buckets[0].tag == "data:float32"
         w = jnp.arange(48, dtype=jnp.float32).reshape(8, 6)
         state = {"w": jax.device_put(w, NamedSharding(mesh, P("data", "model"))),
                  "rep": jnp.ones((5,), jnp.float32)}
         payload = jax.jit(prog.snapshot_fn)(state)
-        pw = np.asarray(payload["partner"][name])
-        assert np.array_equal(pw, np.roll(np.asarray(w), 4, axis=0))
+        # partner fused buffer carries each device's shard rolled to its
+        # pairwise partner (N/2 shift along the data axis)
+        pw = np.asarray(payload["partner"]["data:float32"]).view(np.float32).reshape(4, 2, 6)
+        own = np.ascontiguousarray(np.asarray(w).reshape(4, 2, 2, 3).swapaxes(1, 2)).reshape(4, 2, 6)
+        assert np.array_equal(pw, np.roll(own, 2, axis=0))
         # own copy present and intact
         assert np.array_equal(np.asarray(payload["own"]["w"]), np.asarray(w))
         rest = jax.jit(prog.restore_fn)(payload)
-        assert np.array_equal(np.asarray(rest[name]), np.asarray(w))
+        assert np.array_equal(np.asarray(rest[prog.exchanged_names[0]]), np.asarray(w))
         # checksum present
         assert payload["checksum"].shape == (2,)
         # compiled HLO carries collective-permutes
         txt = jax.jit(prog.snapshot_fn).lower(state).compile().as_text()
         assert "collective-permute" in txt
+        print("OK")
+        """
+    )
+    assert "OK" in _run(code)
+
+
+def test_fused_single_program_many_leaves():
+    """The fused path emits ONE collective-permute for any number of
+    exchanged leaves, and validate=True folds the checksum into the same
+    program — dispatch no longer scales with the leaf count (the pre-fused
+    path lowered one permute per leaf and one psum-program per leaf)."""
+    code = textwrap.dedent(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.core.device_tier import build_snapshot_program
+        from repro.utils.hlo import analyze_hlo_collectives
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        L = 6
+        sds = {f"w{i}": jax.ShapeDtypeStruct((8, 4 + 2 * i), jnp.float32) for i in range(L)}
+        ps = {f"w{i}": (P("data", "model") if i % 2 else P("data", None)) for i in range(L)}
+        prog = build_snapshot_program(mesh, sds, ps, include_own_copy=False)
+        assert len(prog.exchanged_names) == L
+        assert len(prog.buckets) == 1   # one (axis, dtype) bucket -> one program
+        state = {f"w{i}": jax.device_put(
+                    jnp.arange(8 * (4 + 2 * i), dtype=jnp.float32).reshape(8, 4 + 2 * i),
+                    NamedSharding(mesh, ps[f"w{i}"]))
+                 for i in range(L)}
+        txt = jax.jit(prog.snapshot_fn).lower(state).compile().as_text()
+        coll = analyze_hlo_collectives(txt)
+        assert coll.count_by_kind.get("collective-permute", 0) == 1, coll.count_by_kind
+        # restore returns every leaf bit-identically
+        payload = jax.jit(prog.snapshot_fn)(state)
+        rest = jax.jit(prog.restore_fn)(payload)
+        names = sorted(sds)  # dict flatten order
+        for name in prog.exchanged_names:
+            orig = np.asarray(state[names[int(name)]])
+            assert np.array_equal(np.asarray(rest[name]), orig), name
         print("OK")
         """
     )
@@ -92,6 +133,151 @@ def test_compressed_exchange_shrinks_traffic():
         b2 = s2.bytes_by_kind.get("collective-permute", 0)
         print("full", b1, "compressed", b2)
         assert b2 < b1 / 3   # int8 + scales vs f32
+        print("OK")
+        """
+    )
+    assert "OK" in _run(code)
+
+
+_PARITY_ORACLE = textwrap.dedent(
+    """
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.core.device_tier import build_snapshot_program
+    from repro.core.codec import XorCodec, RSCodec
+    from repro.core import distribution as dist
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    sds = {"w": jax.ShapeDtypeStruct((8, 4), jnp.float32),
+           "v": jax.ShapeDtypeStruct((8,), jnp.bfloat16),
+           "b": jax.ShapeDtypeStruct((16,), jnp.int8)}
+    ps = {"w": P("data", "model"), "v": P("data"), "b": P("data")}
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((8,)), jnp.bfloat16)
+    b = jnp.asarray(rng.integers(-100, 100, (16,)), jnp.int8)
+    state = {"w": jax.device_put(w, NamedSharding(mesh, P("data", "model"))),
+             "v": jax.device_put(v, NamedSharding(mesh, P("data"))),
+             "b": jax.device_put(b, NamedSharding(mesh, P("data")))}
+
+    def member_buf(tag, d, m):
+        if tag == "data:float32":
+            raw = np.ascontiguousarray(np.asarray(w)[2*d:2*d+2, 2*m:2*m+2]).tobytes()
+        elif tag == "data:bfloat16":
+            raw = np.ascontiguousarray(np.asarray(v)[2*d:2*d+2]).tobytes()
+        else:
+            raw = np.ascontiguousarray(np.asarray(b)[4*d:4*d+4]).tobytes()
+        a = np.frombuffer(raw, np.uint8)
+        return np.pad(a, (0, (-a.nbytes) % 4))
+
+    def check(codec_name, g, mpar):
+        prog = build_snapshot_program(
+            mesh, sds, ps, validate=False, include_own_copy=False,
+            codec=codec_name, parity_group=g, rs_parity=mpar, emit_full_blobs=True)
+        assert len(prog.buckets) == 3  # one per dtype, all in ONE program
+        payload = jax.jit(prog.snapshot_fn)(state)
+        host = XorCodec(g) if codec_name == "xor" else RSCodec(g, mpar)
+        groups = dist.parity_groups(4, g)
+        shapes = {"data:float32": (4, 2), "data:bfloat16": (4,), "data:int8": (4,)}
+        for bucket in prog.buckets:
+            pf = np.asarray(payload["parity_full"][bucket.tag])
+            per = pf.reshape((mpar,) + shapes[bucket.tag] + (bucket.words,))
+            for gi, grp in enumerate(groups):
+                mcoords = [0, 1] if len(shapes[bucket.tag]) == 2 else [None]
+                for m in mcoords:
+                    bufs = [member_buf(bucket.tag, d, m or 0) for d in grp.members]
+                    blobs = host.encode(bufs, mpar)
+                    for d in grp.members:
+                        for j in range(mpar):
+                            dev = per[j, d, m] if m is not None else per[j, d]
+                            got = dev.view(np.uint8)[: blobs[j].nbytes]
+                            assert np.array_equal(got, blobs[j]), (bucket.tag, gi, d, j)
+    """
+)
+
+
+def test_unaligned_local_shard_words():
+    """A leaf whose per-device shard is not 4-byte aligned (int8 (4,2) over
+    data=4 -> 2-byte shards) still lays out, exchanges, and restores
+    correctly — regression for ceil word sizing in the fused layout."""
+    code = textwrap.dedent(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.core.device_tier import build_snapshot_program
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        sds = {"a": jax.ShapeDtypeStruct((4, 2), jnp.int8),
+               "b": jax.ShapeDtypeStruct((8, 3), jnp.int8)}
+        ps = {"a": P("data", None), "b": P("data", None)}
+        prog = build_snapshot_program(mesh, sds, ps, validate=False, include_own_copy=False)
+        bkt = prog.buckets[0]
+        assert bkt.word_offsets == (0, 1) and bkt.words == 3, (bkt.word_offsets, bkt.words)
+        a = jnp.arange(8, dtype=jnp.int8).reshape(4, 2)
+        b = jnp.arange(24, dtype=jnp.int8).reshape(8, 3)
+        state = {"a": jax.device_put(a, NamedSharding(mesh, P("data", None))),
+                 "b": jax.device_put(b, NamedSharding(mesh, P("data", None)))}
+        payload = jax.jit(prog.snapshot_fn)(state)
+        rest = jax.jit(prog.restore_fn)(payload)
+        names = sorted(sds)
+        for name in prog.exchanged_names:
+            assert np.array_equal(np.asarray(rest[name]), np.asarray(state[names[int(name)]])), name
+        print("OK")
+        """
+    )
+    assert "OK" in _run(code)
+
+
+def test_device_xor_parity_matches_host_oracle():
+    """On-device XOR encode (Pallas kernel inside the fused program) is
+    bit-identical to host-side codec.encode across f32/bf16/int8 buckets."""
+    assert "OK" in _run(_PARITY_ORACLE + 'check("xor", 2, 1)\nprint("OK")\n')
+
+
+def test_device_rs_parity_matches_host_oracle_ragged():
+    """On-device GF(2^8) RS encode matches the host oracle, including a
+    ragged last group (axis 4, g=3 -> groups {0,1,2},{3})."""
+    assert "OK" in _run(_PARITY_ORACLE + 'check("rs", 3, 2)\nprint("OK")\n')
+
+
+def test_device_stripes_and_pcie_accounting():
+    """The production stripe path: blob b routes to neighbor group gi+1+b and
+    each holder keeps its 1/g stripe — only own + m/g parity bytes cross
+    PCIe, and the program metadata accounts for it."""
+    code = textwrap.dedent(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.core.device_tier import build_snapshot_program
+        from repro.core.codec import XorCodec
+        from repro.core import distribution as dist
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        sds = {"w": jax.ShapeDtypeStruct((8, 4), jnp.float32)}
+        ps = {"w": P("data", "model")}
+        rng = np.random.default_rng(1)
+        w = jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)
+        state = {"w": jax.device_put(w, NamedSharding(mesh, P("data", "model")))}
+        g = 2
+        prog = build_snapshot_program(mesh, sds, ps, validate=False,
+                                      include_own_copy=False, codec="xor", parity_group=g)
+        full = build_snapshot_program(mesh, sds, ps, validate=False, include_own_copy=False)
+        # PCIe: m/g of the fused bytes vs the whole partner copy
+        assert prog.pcie_bytes * g == full.pcie_bytes * 1
+        payload = jax.jit(prog.snapshot_fn)(state)
+        bucket = prog.buckets[0]
+        per = np.asarray(payload["parity"][bucket.tag]).reshape(1, 4, 2, bucket.words // g)
+        def member_buf(d, m):
+            raw = np.ascontiguousarray(np.asarray(w)[2*d:2*d+2, 2*m:2*m+2]).tobytes()
+            return np.frombuffer(raw, np.uint8)
+        groups = dist.parity_groups(4, g)
+        codec = XorCodec(g)
+        sw = bucket.words // g * 4
+        for gi, grp in enumerate(groups):
+            src = groups[(gi - 1) % len(groups)]   # holder gi hosts gi-1's blob
+            for m in range(2):
+                blob = codec.encode([member_buf(d, m) for d in src.members], 1)[0]
+                for pos, d in enumerate(grp.members):
+                    got = per[0, d, m].view(np.uint8)
+                    assert np.array_equal(got, blob[pos*sw:(pos+1)*sw]), (gi, d, m)
         print("OK")
         """
     )

@@ -186,31 +186,43 @@ def test_parity_memory_saving():
     assert b_par < b_full / 2  # 1/g stripe vs full copy
 
 
-def _to_legacy_layout(eng):
-    """Rewrite a checkpoint's stores into the pre-codec on-disk layout:
-    whole copies under ``recv`` and XOR stripes keyed ``(entity, stripe)``."""
-    for store in eng.stores.values():
-        payload = store.buffer.read_only
+def _to_legacy_pickles(path, eng):
+    """Rewrite a saved disk checkpoint into the pre-codec pickle layout:
+    whole copies under a ``recv`` key and XOR stripes keyed ``(entity,
+    stripe)`` — the format old jobs left on disk. (The in-memory StorePayload
+    no longer has a recv slot; only disk loads can encounter it.)"""
+    import os
+    import pickle
+
+    for r in eng.stores:
+        fname = os.path.join(path, f"rank{r:05d}.pkl")
+        with open(fname, "rb") as f:
+            blob = pickle.load(f)
         # Legacy parity mode replicated manifests in meta; legacy copy mode
         # carried them inline with each recv entry and stored none in meta.
         manifests = (
-            payload.meta.get("manifests", {})
+            blob["meta"].get("manifests", {})
             if eng.codec.striped
-            else payload.meta.pop("manifests", {})
+            else blob["meta"].pop("manifests", {})
         )
-        for origin, stripes in list(payload.parity.items()):
+        recv = {}
+        for origin, stripes in list(blob["parity"].items()):
             for key in list(stripes):
                 name, b, j = key
                 if eng.codec.striped:
                     assert b == 0
                     stripes[(name, j)] = stripes.pop(key)
                 else:
-                    payload.recv.setdefault(origin, {})[name] = (
+                    recv.setdefault(origin, {})[name] = (
                         stripes.pop(key),
                         manifests[(origin, name)],
                     )
             if not stripes:
-                del payload.parity[origin]
+                del blob["parity"][origin]
+        blob["recv"] = recv
+        blob.pop("own_exch", None)  # pre-codec pickles had no exchange subset
+        with open(fname, "wb") as f:
+            pickle.dump(blob, f)
 
 
 @pytest.mark.parametrize("mode", ["pairwise", "parity4"])
@@ -225,8 +237,8 @@ def test_disk_legacy_format_recovers_failed_rank(tmp_path, mode):
     eng.register("state", vec)
     assert eng.checkpoint({"step": 4})
     orig = [d.copy() for d in vec.data]
-    _to_legacy_layout(eng)
     save_to_disk(eng, str(tmp_path / "legacy"))
+    _to_legacy_pickles(str(tmp_path / "legacy"), eng)
 
     eng2 = CheckpointEngine(n, MODES[mode])
     vec2 = ShardedVec(n)

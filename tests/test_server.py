@@ -19,10 +19,10 @@ def setup():
     return cfg, model, params, prompts
 
 
-def _serve(model, params, prompts, injector=None):
+def _serve(model, params, prompts, injector=None, **cfg_kw):
     s = Server(
         model,
-        ServerConfig(batch=4, max_seq=40, checkpoint_every_tokens=6),
+        ServerConfig(batch=4, max_seq=40, checkpoint_every_tokens=6, **cfg_kw),
         params=params,
         injector=injector,
     )
@@ -44,6 +44,20 @@ def test_sessions_survive_failure_burst(setup):
     _, ref = _serve(model, params, prompts)
     inj = FailureInjector(4, schedule={10: [1], 11: [2]})
     s, out = _serve(model, params, prompts, injector=inj)
+    assert np.array_equal(ref, out)
+
+
+def test_async_checkpoint_mode_identical(setup):
+    """checkpoint_mode="async" (session-snapshot pipeline overlapping the
+    next decode steps) generates the same tokens, with and without faults."""
+    cfg, model, params, prompts = setup
+    _, ref = _serve(model, params, prompts)
+    s, out = _serve(model, params, prompts, checkpoint_mode="async")
+    assert np.array_equal(ref, out)
+    assert s.engine.stats.created >= 1
+    inj = FailureInjector(4, schedule={9: [2]})
+    s, out = _serve(model, params, prompts, injector=inj, checkpoint_mode="async")
+    assert s.n_recoveries == 1
     assert np.array_equal(ref, out)
 
 
