@@ -94,6 +94,52 @@ def _pcie_model(eng: CheckpointEngine) -> int:
     return staged + eng.stats.last_bytes_exchanged
 
 
+def run_staging(mbytes: int = 8, repeats: int = 3) -> tuple[float, float, int]:
+    """Double-buffered device staging (DESIGN.md §9 follow-up): drive the
+    snapshot's per-chunk programs through ``staged_snapshot_fetch`` and
+    compare overlapped D2H (dispatch encode of chunk g+1, then start chunk
+    g's async host copy) against the sequential fetch-then-dispatch
+    baseline. On a real accelerator the win approaches hiding the full DMA
+    behind the encode; on this CPU container it mainly validates the
+    mechanism and its bit-identical payloads. Returns (t_seq, t_dbuf,
+    payload_bytes)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.device_tier import build_snapshot_program, staged_snapshot_fetch
+
+    mesh = jax.make_mesh((1,), ("data",))
+    n = mbytes << 20
+    sds = {
+        "f32": jax.ShapeDtypeStruct((n // 8,), jnp.float32),
+        "bf16": jax.ShapeDtypeStruct((n // 4,), jnp.bfloat16),
+        "i8": jax.ShapeDtypeStruct((n // 4,), jnp.int8),
+    }
+    ps = {k: jax.sharding.PartitionSpec("data") for k in sds}
+    prog = build_snapshot_program(
+        mesh, sds, ps, validate=False, codec="xor", parity_group=1,
+    )
+    rng = np.random.default_rng(0)
+    state = {
+        "f32": jnp.asarray(rng.standard_normal(n // 8), jnp.float32),
+        "bf16": jnp.asarray(rng.standard_normal(n // 4), jnp.bfloat16),
+        "i8": jnp.asarray(rng.integers(-100, 100, n // 4), jnp.int8),
+    }
+    times = {True: float("inf"), False: float("inf")}
+    payloads = {}
+    for db in (True, False):
+        payloads[db] = staged_snapshot_fetch(prog, state, double_buffer=db)  # warm
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            staged_snapshot_fetch(prog, state, double_buffer=db)
+            times[db] = min(times[db], time.perf_counter() - t0)
+    # overlap must never change bytes
+    for tag in payloads[True]["parity"]:
+        assert np.array_equal(payloads[True]["parity"][tag], payloads[False]["parity"][tag])
+    total = sum(np.asarray(v).nbytes for v in jax.tree.leaves(payloads[True]))
+    return times[False], times[True], total
+
+
 def main(smoke: bool = False) -> list[str]:
     lines = []
     weak_ranks = (2, 4, 8) if smoke else (2, 4, 8, 16, 32, 64)
@@ -128,6 +174,17 @@ def main(smoke: bool = False) -> list[str]:
         f"ckpt_create_async_n{n},{t_async * 1e6:.0f},"
         f"GBps={gbps_async:.2f};speedup={speedup:.2f};overlap_eff={overlap_eff:.2f}"
     )
+
+    # -- double-buffered device staging (D2H overlap) -------------------------
+    t_seq, t_dbuf, staged_bytes = run_staging(mbytes=2 if smoke else 8)
+    stage_win = t_seq / max(t_dbuf, 1e-9)
+    lines.append(
+        f"ckpt_stage_d2h_seq,{t_seq * 1e6:.0f},GBps={staged_bytes / t_seq / 1e9:.2f}"
+    )
+    lines.append(
+        f"ckpt_stage_d2h_dbuf,{t_dbuf * 1e6:.0f},"
+        f"GBps={staged_bytes / t_dbuf / 1e9:.2f};overlap_win={stage_win:.2f}"
+    )
     RESULTS.clear()
     RESULTS.update(
         {
@@ -143,6 +200,8 @@ def main(smoke: bool = False) -> list[str]:
             "blocked_s_sync": round(t_sync, 6),
             "blocked_s_async": round(t_async, 6),
             "pipeline_chunks": eng_a.stats.last_pipeline_chunks,
+            "staging_overlap_win": round(stage_win, 3),
+            "staging_bytes_fetched": staged_bytes,
         }
     )
     return lines

@@ -77,6 +77,28 @@ def main(smoke: bool = False) -> list[str]:
         t = _time(lambda: codec.decode(present, blob_map, missing))
         lines.append(_line(f"codec_{name}_decode_t{len(missing)}_{tag}", t, total))
 
+        # decode_into: the restore pipeline's precomputed-matrix path
+        # (per-coefficient product tables, arena outputs — DESIGN.md §10)
+        arenas: dict[int, np.ndarray] = {}
+
+        def lease(i, nb):
+            buf = arenas.get(i)
+            if buf is None or buf.nbytes < nb:
+                buf = np.empty(nb, np.uint8)
+                arenas[i] = buf
+            return buf[:nb]
+
+        def chunked():
+            rebuilt, chunk = codec.decode_into(present, blob_map, missing, lease)
+            chunk(0, max(b.nbytes for b in blob_map.values()))
+            return rebuilt
+
+        out2 = chunked()
+        for i in missing:  # bit-identical to the legacy solve
+            assert np.array_equal(out2[i][:nbytes], bufs[i]), (name, i)
+        t = _time(chunked)
+        lines.append(_line(f"codec_{name}_decode_into_t{len(missing)}_{tag}", t, total))
+
     # Pallas GF(2^8) kernel (interpret mode on CPU; roofline as derived)
     import jax.numpy as jnp
 

@@ -1,9 +1,25 @@
-"""Paper Fig. 7: weak scaling of recovery duration.
+"""Paper Fig. 7 + the restore-pipeline comparison (DESIGN.md §10).
 
-The paper's key property: recovery involves NO inter-process communication —
-survivors deserialize their own snapshot locally, and the adopted blocks are
-already resident on the partner. We measure restore time per rank vs rank
-count (flat = scales), and verify the zero-comm counters."""
+Two measurements:
+
+* **Weak scaling of recovery** (the paper's figure): restore time per rank vs
+  rank count under the full-copy codec. The paper's key property — recovery
+  involves NO inter-process communication for survivors — shows as a flat
+  curve, verified by the zero-comm counters.
+
+* **Time-to-recover, sync vs pipelined** (this PR's headline): the same
+  failure recovered through the serial per-origin ``codec.decode`` baseline
+  (``restore_mode="sync"``) and through the chunked TRANSFER/DECODE/VERIFY
+  restore pipeline (``restore_mode="pipelined"``, failure groups and chunks
+  in parallel across ``async_workers``). Measured for a single failure and
+  for an m=2 same-group burst under rs(m=2) at n=64 × 4 MiB/rank — the
+  recovery mirror of bench_checkpoint_scaling's sync-vs-async creation rows.
+  Every restore is asserted bit-identical to the pre-failure state.
+
+``RESULTS`` carries the machine-readable numbers run.py folds into
+BENCH_results.json; in ``--smoke`` mode run.py fails the build when the
+pipelined path regresses more than 20% against the sync baseline.
+"""
 
 from __future__ import annotations
 
@@ -13,6 +29,9 @@ import numpy as np
 
 from benchmarks.bench_checkpoint_scaling import _Payload
 from repro.core.checkpoint import CheckpointEngine, EngineConfig
+
+#: populated by main(); run.py serializes it into BENCH_results.json
+RESULTS: dict = {}
 
 
 def run(bytes_per_rank: int = 1 << 20, ranks=(2, 4, 8, 16, 32, 64)):
@@ -29,18 +48,103 @@ def run(bytes_per_rank: int = 1 << 20, ranks=(2, 4, 8, 16, 32, 64)):
         # zero-comm property: all surviving shards restored locally
         assert eng.stats.zero_comm_restores == n - 1
         assert eng.stats.adopted_restores == 1
+        eng.close()
         rows.append((n, dt / n * 1e6))
     return rows
 
 
-def main() -> list[str]:
-    rows = run()
+def _time_restore(
+    mode: str, kills: tuple[int, ...], n: int, bytes_per_rank: int,
+    workers: int, repeats: int = 3,
+) -> tuple[float, CheckpointEngine]:
+    """Best-of-repeats time-to-recover for one failure pattern; every repeat
+    asserts the restored payload is bit-identical to the pre-failure state.
+    The engine is built (and the checkpoint committed) once — restore does
+    not consume the checkpoint, so repeats measure the steady-state recovery
+    path (arena reuse for pipelined, fresh allocations for sync) instead of
+    first-touch page faults."""
+    eng = CheckpointEngine(
+        n,
+        EngineConfig(
+            codec="rs", parity_group=4, rs_parity=2,
+            restore_mode=mode, async_workers=workers,
+        ),
+    )
+    pay = _Payload(n, bytes_per_rank)
+    eng.register("domain", pay)
+    assert eng.checkpoint({"step": 0})
+    orig = [d.copy() for d in pay.data]
+    for r in kills:
+        eng.stores[r].wipe()
+    best = float("inf")
+    for _ in range(repeats):
+        for d in pay.data:
+            d += 1.0  # drift the live state so the restore provably rewinds
+        t0 = time.perf_counter()
+        eng.restore()
+        best = min(best, time.perf_counter() - t0)
+        for r in range(n):
+            assert np.array_equal(pay.data[r], orig[r]), (mode, kills, r)
+    return best, eng
+
+
+def run_modes(n: int = 64, bytes_per_rank: int = 4 << 20, workers: int = 4):
+    """Sync-vs-pipelined time-to-recover under rs(m=2): a single failure and
+    an m-burst (two members of one parity group). Returns CSV lines and
+    fills RESULTS."""
+    total = n * bytes_per_rank
+    grp = n // 4 // 2 * 4  # a mid-world group's first member
+    patterns = {"single": (grp,), "burst2": (grp, grp + 1)}
+    lines = []
+    res: dict = {"n_ranks": n, "bytes_per_rank": bytes_per_rank,
+                 "async_workers": workers, "bit_identical": True}
+    for tag, kills in patterns.items():
+        t_sync, eng_s = _time_restore("sync", kills, n, bytes_per_rank, workers)
+        t_pipe, eng_p = _time_restore("pipelined", kills, n, bytes_per_rank, workers)
+        speedup = t_sync / t_pipe
+        decode_s = eng_p.stats.last_restore_decode_s
+        rebuilt = eng_p.stats.last_restore_bytes_rebuilt
+        lines.append(
+            f"recovery_ttr_rs2_{tag}_sync_n{n},{t_sync * 1e6:.0f},"
+            f"GBps={total / t_sync / 1e9:.2f}"
+        )
+        lines.append(
+            f"recovery_ttr_rs2_{tag}_pipelined_n{n},{t_pipe * 1e6:.0f},"
+            f"GBps={total / t_pipe / 1e9:.2f};speedup={speedup:.2f};"
+            f"decode_GBps={rebuilt / max(decode_s, 1e-9) / 1e9:.2f};"
+            f"chunks={eng_p.stats.last_restore_chunks}"
+        )
+        res[f"ttr_s_sync_{tag}"] = round(t_sync, 6)
+        res[f"ttr_s_pipelined_{tag}"] = round(t_pipe, 6)
+        res[f"recovery_speedup_{tag}"] = round(speedup, 3)
+        res[f"bytes_rebuilt_{tag}"] = rebuilt
+        res[f"restore_chunks_{tag}"] = eng_p.stats.last_restore_chunks
+        res[f"decode_gbps_{tag}"] = round(rebuilt / max(decode_s, 1e-9) / 1e9, 3)
+        eng_s.close()
+        eng_p.close()
+    RESULTS.clear()
+    RESULTS.update(res)
+    return lines
+
+
+def main(smoke: bool = False) -> list[str]:
+    weak_ranks = (2, 4, 8) if smoke else (2, 4, 8, 16, 32, 64)
+    per_rank = 1 << 18 if smoke else 1 << 20
+    rows = run(bytes_per_rank=per_rank, ranks=weak_ranks)
     base = rows[0][1]
-    return [
+    lines = [
         f"recovery_weakscale_n{n},{us:.1f},scale_vs_min={us / base:.2f}"
         for n, us in rows
     ]
+    # sync-vs-pipelined time-to-recover (acceptance row: rs(m=2) burst)
+    if smoke:
+        lines += run_modes(n=16, bytes_per_rank=1 << 18, workers=4)
+    else:
+        lines += run_modes(n=64, bytes_per_rank=4 << 20, workers=4)
+    return lines
 
 
 if __name__ == "__main__":
-    print("\n".join(main()))
+    import sys
+
+    print("\n".join(main(smoke="--smoke" in sys.argv)))

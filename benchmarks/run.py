@@ -13,12 +13,16 @@ Prints ``name,us_per_call,derived`` CSV rows:
 
 Every run also writes ``BENCH_results.json`` next to the cwd: all CSV rows
 plus the checkpoint-pipeline section (GB/s create sync/async, modeled PCIe
-bytes, overlap efficiency) so the perf trajectory is machine-readable.
+bytes, overlap efficiency) and the recovery-pipeline section (time-to-recover
+sync vs pipelined, reconstruction bandwidth) so the perf trajectory is
+machine-readable.
 
 ``--smoke`` runs only the smoke-capable modules at tiny shapes — a fast CI
 perf-regression tripwire, not a measurement. In smoke mode the harness FAILS
 when the pipelined (async) creation path regresses more than 20% against the
-sync baseline (speedup < 0.8) — the sync-vs-async tripwire of the CI job.
+sync baseline (speedup < 0.8), and likewise when the pipelined RECOVERY path
+regresses more than 20% against the serial host-decode baseline — the
+create- and restore-side tripwires of the CI job.
 """
 
 from __future__ import annotations
@@ -30,6 +34,8 @@ import traceback
 
 #: async/sync speedup below this in --smoke mode fails the run (>20% regression)
 SMOKE_SPEEDUP_FLOOR = 0.8
+#: pipelined/sync recovery speedup below this in --smoke mode fails the run
+SMOKE_RECOVERY_FLOOR = 0.8
 
 
 def main() -> None:
@@ -78,7 +84,13 @@ def main() -> None:
             traceback.print_exc(file=sys.stderr)
 
     pipeline = dict(getattr(bench_checkpoint_scaling, "RESULTS", {}) or {})
-    out = {"smoke": smoke, "rows": rows, "checkpoint_pipeline": pipeline}
+    recovery = dict(getattr(bench_recovery, "RESULTS", {}) or {})
+    out = {
+        "smoke": smoke,
+        "rows": rows,
+        "checkpoint_pipeline": pipeline,
+        "recovery_pipeline": recovery,
+    }
     with open("BENCH_results.json", "w") as f:
         json.dump(out, f, indent=2)
     print(f"# wrote BENCH_results.json ({len(rows)} rows)", file=sys.stderr)
@@ -93,6 +105,18 @@ def main() -> None:
                 file=sys.stderr,
             )
             failed += 1
+    if smoke and recovery:
+        for tag in ("single", "burst2"):
+            speedup = recovery.get(f"recovery_speedup_{tag}", 0.0)
+            if speedup < SMOKE_RECOVERY_FLOOR:
+                print(
+                    f"# recovery pipeline regression ({tag}): speedup "
+                    f"{speedup:.2f} < {SMOKE_RECOVERY_FLOOR} (sync "
+                    f"{recovery.get(f'ttr_s_sync_{tag}')}s vs pipelined "
+                    f"{recovery.get(f'ttr_s_pipelined_{tag}')}s)",
+                    file=sys.stderr,
+                )
+                failed += 1
     if failed:
         raise SystemExit(1)
 

@@ -13,6 +13,17 @@ per-rank host stores:
   communication, lost shards are rebuilt by the codec (adopted whole copies,
   XOR reconstruction, or Reed-Solomon multi-erasure decode).
 
+Recovery is the **mirror image** of creation (DESIGN.md §10): under the
+default ``restore_mode="pipelined"`` each failure group's reconstruction
+drains a chunked TRANSFER i ‖ DECODE i−1 ‖ VERIFY i−2 pipeline — stripe
+segments copy into arena-leased blob buffers, the codec's precomputed-matrix
+``decode_into`` rebuilds byte ranges in place, and Fletcher partials of the
+rebuilt bytes are checked against capture-time checksums replicated with the
+manifests. Independent groups (and chunks) reconstruct in parallel across
+``async_workers``; entities are mutated only after every shard is recovered.
+``restore_mode="sync"`` keeps the serial per-origin ``codec.decode`` path —
+bit-identical, and the benchmark baseline.
+
 Creation is a **zero-copy, chunked pipeline** (DESIGN.md §9):
 
   * Phase A (``checkpoint_async``) captures every entity's shards straight
@@ -97,7 +108,17 @@ class EngineConfig:
     # Background workers draining the phase-B pipeline of an explicit
     # ``checkpoint_async`` (0 = drain synchronously inside finalize_async;
     # the blocking ``checkpoint`` path never spawns a thread either way).
+    # With > 1, (group, entity) units shard across the workers — both the
+    # create drain and the restore pipeline's parallel group reconstruction.
     async_workers: int = 1
+    # Restore path (DESIGN.md §10): "pipelined" drains the chunked
+    # TRANSFER/DECODE/VERIFY recovery pipeline (codec.decode_into over
+    # arena-leased buffers, failure groups in parallel across async_workers);
+    # "sync" keeps the serial per-origin codec.decode path (the A/B baseline
+    # — both produce bit-identical restores).
+    restore_mode: str = "pipelined"
+    # Byte granularity of the restore pipeline's chunks (4-aligned).
+    restore_chunk_bytes: int = 1 << 20
 
 
 @dataclass
@@ -118,10 +139,40 @@ class CheckpointStats:
     last_blocked_s: float = 0.0      # capture + finalize wait = critical path
     last_bytes_staged: int = 0       # own + exchange bytes staged (host DMA)
     last_pipeline_chunks: int = 0    # (group, entity) units drained
+    # Restore pipeline accounting (DESIGN.md §10):
+    last_restore_decode_s: float = 0.0   # wall time of the recovery drain
+    last_restore_bytes_rebuilt: int = 0  # padded bytes reconstructed by codecs
+    last_restore_chunks: int = 0         # TRANSFER/DECODE/VERIFY chunks drained
 
 
 class FaultDuringCheckpoint(RuntimeError):
     """Raised into the engine by the failure injector mid-checkpoint."""
+
+
+@dataclass
+class _RestoreUnit:
+    """One failure group's reconstruction of one entity — the unit of the
+    restore pipeline (DESIGN.md §10). Prepared up front (references to the
+    surviving stripes/shards captured, arenas leased, the erasure-solve
+    coefficients precomputed inside ``codec.decode_into``), then drained in
+    4-aligned byte chunks: TRANSFER copies stripe segments into the blob
+    arenas, DECODE applies the codec's chunk function, VERIFY accumulates
+    the rebuilt Fletcher sums against the replicated capture-time checksums.
+    Chunks of one unit touch disjoint byte ranges, so independent chunks —
+    and independent units — reconstruct in parallel across workers."""
+
+    gi: int
+    grp: Any
+    name: str
+    missing_idx: list[int]
+    stripe_srcs: dict[int, list[np.ndarray]]   # blob -> stripes to join (multi-stripe only)
+    blobs: dict[int, np.ndarray]               # blob -> arena (or adopted single stripe)
+    rebuilt: dict[int, np.ndarray]             # missing idx -> leased output buffer
+    decode_chunk: Any                          # codec chunk fn (lo, hi) -> None
+    bounds: list[tuple[int, int]]              # 4-aligned chunk byte ranges
+    manifests: dict[int, Any]                  # missing idx -> origin manifest
+    ref_sums: dict[int, Any]                   # missing idx -> capture checksum | None
+    sums: dict[int, list]                      # missing idx -> per-chunk partials
 
 
 @dataclass
@@ -135,6 +186,11 @@ class _PendingCheckpoint:
     future: Any = None          # background drain future (None = sync drain)
     bytes_exchanged: int = 0
     verified: set = field(default_factory=set)      # (rank, entity) chunk-verified
+    # Replicated with every store's meta (shared reference, like the
+    # manifests) and FILLED BY THE DRAIN's encode stage — capture-time
+    # exchange checksums for the restore pipeline's VERIFY, computed off
+    # the blocking capture window. Keys are (rank, entity).
+    exch_sums: dict = field(default_factory=dict)
 
 
 class CheckpointEngine:
@@ -222,7 +278,7 @@ class CheckpointEngine:
         alive0 = self._alive_fn()
         try:
             self._fault_hook("before_create")
-            packed_partner, manifests = self._capture(alive0, meta)
+            packed_partner, manifests, exch_sums = self._capture(alive0, meta)
             self._fault_hook("after_create")
         except FaultDuringCheckpoint as e:
             log.warning("checkpoint aborted during create: %s", e)
@@ -232,7 +288,9 @@ class CheckpointEngine:
             return False
 
         self.stats.last_capture_s = time.perf_counter() - t0
-        pending = _PendingCheckpoint(packed_partner, manifests, alive0, t0)
+        pending = _PendingCheckpoint(
+            packed_partner, manifests, alive0, t0, exch_sums=exch_sums
+        )
         self._pending = pending
         if background is None:
             background = self.cfg.async_workers > 0
@@ -242,7 +300,7 @@ class CheckpointEngine:
 
     def _capture(
         self, alive0: set[int], meta: dict[str, Any] | None
-    ) -> tuple[dict[str, list[tuple[Any, Manifest]]], dict[tuple[int, str], Any]]:
+    ) -> tuple[dict[str, list[tuple[Any, Manifest]]], dict[tuple[int, str], Any], dict]:
         """Serialize every entity's per-rank shards directly into host-store
         arenas (one memcpy per leaf, zero steady-state allocation) and stage
         the writable payloads. Returns the exchange buffers the pipeline
@@ -300,6 +358,15 @@ class CheckpointEngine:
             for r in range(self.n_ranks)
         }
 
+        # Checksums of every origin's EXCHANGE payload, replicated like the
+        # manifests: the restore pipeline's VERIFY stage recomputes them over
+        # codec-rebuilt bytes, so a corrupt reconstruction is caught before
+        # it reaches an entity. The shared dict is attached EMPTY here and
+        # filled by the drain's encode stage (off the blocking capture
+        # window — phase A stays one-memcpy-per-leaf); it is complete before
+        # the commit because the swap always follows the drain.
+        exch_sums: dict[tuple[int, str], Any] = {}
+
         for r in alive0:
             payload = StorePayload(meta=dict(meta or {}))
             if coords_tables:
@@ -312,9 +379,11 @@ class CheckpointEngine:
                     payload.own_exch[name] = packed_partner[name][r]
                 if self.cfg.validate:
                     payload.meta.setdefault("checksums", {})[name] = np_checksum(flat)
+            if self.cfg.validate:
+                payload.meta["exch_checksums"] = exch_sums
             self.stores[r].buffer.write(payload)
         self.stats.last_bytes_staged = bytes_staged
-        return packed_partner, manifests
+        return packed_partner, manifests, exch_sums
 
     # ------------------------------------------------------------------ #
     # phase B: the chunked encode/transfer/verify pipeline
@@ -350,35 +419,85 @@ class CheckpointEngine:
         ENCODEs while unit *i−1*'s stripes TRANSFER to their host stores and
         unit *i−2* VERIFYs its members' staged checksums. Nothing here ever
         touches a read-only buffer; a fault at any chunk raises
-        ``FaultDuringCheckpoint`` and the whole snapshot aborts."""
+        ``FaultDuringCheckpoint`` and the whole snapshot aborts.
+
+        With ``async_workers > 1`` the (group, entity) units shard across the
+        worker pool — each worker drains its own three-stage sub-pipeline;
+        units touching the same holder store synchronize through the store's
+        lock (arena growth + payload-dict writes), while the byte copies land
+        in disjoint arenas and run lock-free. This thread keeps one shard for
+        itself, so the pool (sized ``async_workers``) never deadlocks when
+        the drain itself runs as a background submission."""
         units = self._pipeline_units(pending.packed)
+        n = len(units)
+        n_shards = max(1, min(self.cfg.async_workers, n))
+        if n_shards == 1:
+            total, verified = self._drain_shard(units, pending)
+        else:
+            shards = [units[w::n_shards] for w in range(n_shards)]
+            futures = [
+                self._executor().submit(self._drain_shard, shard, pending)
+                for shard in shards[1:]
+            ]
+            # Join EVERY sibling shard before propagating any failure: an
+            # abandoned worker would keep writing into staging arenas after
+            # finalize_async discards them (and races the next lease).
+            err: BaseException | None = None
+            total, verified = 0, set()
+            try:
+                total, verified = self._drain_shard(shards[0], pending)
+            except BaseException as e:
+                err = e
+            for f in futures:
+                try:
+                    sub_total, sub_verified = f.result()
+                    total += sub_total
+                    verified |= sub_verified
+                except BaseException as e:
+                    err = err or e
+            if err is not None:
+                raise err
+        self.stats.last_pipeline_chunks = n
+        return total, verified
+
+    def _drain_shard(
+        self, units: list[tuple], pending: _PendingCheckpoint
+    ) -> tuple[int, set]:
+        """One worker's share of the drain, in pipeline order."""
         n = len(units)
         total = 0
         verified: set = set()
         encoded: dict[int, list[np.ndarray]] = {}
         for i in range(n + 2):
             if i < n:
-                encoded[i] = self._encode_unit(units[i], pending.manifests, pending.packed)
+                encoded[i] = self._encode_unit(units[i], pending)
             if 0 <= i - 1 < n:
                 total += self._transfer_unit(units[i - 1], encoded.pop(i - 1))
             if 0 <= i - 2 < n:
                 self._verify_unit(units[i - 2], verified)
             self._fault_hook("pipeline_chunk")
-        self.stats.last_pipeline_chunks = n
         return total, verified
 
-    def _encode_unit(self, unit, manifests, packed) -> list[np.ndarray]:
+    def _encode_unit(self, unit, pending: _PendingCheckpoint) -> list[np.ndarray]:
         """ENCODE stage: codec-encode one group's shards of one entity into
         redundancy blobs, accumulated in reusable scratch arenas (transient —
-        the transfer stage copies stripes out before scratch is re-leased)."""
+        the transfer stage copies stripes out before scratch is re-leased).
+        Also records each member's exchange checksum into the replicated
+        ``exch_sums`` table (the restore VERIFY reference) — every (rank,
+        entity) belongs to exactly one unit, so multi-worker shards never
+        write the same key."""
         gi, grp, placements, name = unit
         codec = self.codec
         bufs = []
         for m in grp.members:
-            flat, man = packed[name][m]
+            flat, man = pending.packed[name][m]
             if self.cfg.compress and codec.compressible:
                 flat, man = self._compress(flat, man)
-                manifests[(m, name)] = man
+                pending.manifests[(m, name)] = man
+            elif self.cfg.validate:
+                # Compressed blobs skip restore-verify (their manifest is
+                # tagged); everything else gets a capture-state reference.
+                pending.exch_sums[(m, name)] = np_checksum(flat)
             bufs.append(flat)
         scratch_key = (gi, name)
 
@@ -428,7 +547,12 @@ class CheckpointEngine:
                     dst = st.lease(("parity", gi, name, b, j), piece.nbytes)
                     np.copyto(dst, piece)
                     piece = dst
-                payload.parity.setdefault(gi, {})[(name, b, j)] = piece
+                # Holder stores are shared across units: when the drain runs
+                # on several workers, the payload-dict write synchronizes on
+                # the store lock (the memcpy above stays lock-free — every
+                # unit's stripes land in distinct arenas).
+                with st.lock:
+                    payload.parity.setdefault(gi, {})[(name, b, j)] = piece
                 total += piece.nbytes
         return total
 
@@ -593,20 +717,40 @@ class CheckpointEngine:
 
     def restore(self) -> dict[str, Any]:
         """Recover every entity from the last valid checkpoint. Returns the
-        checkpoint meta. Survivor shards restore with zero communication."""
+        checkpoint meta. Survivor shards restore with zero communication.
+
+        Under ``cfg.restore_mode="pipelined"`` (the default) recovery drains
+        the chunked TRANSFER/DECODE/VERIFY pipeline of DESIGN.md §10 —
+        bit-identical to the serial ``"sync"`` path. Entities are only
+        mutated after EVERY shard has been recovered, so a failure anywhere
+        in recovery leaves both the entities and the committed checkpoint
+        untouched (the restore can be retried against the survivors)."""
         self.discard_pending()
         t0 = time.perf_counter()
         alive = self._alive_fn()
         failed = set(range(self.n_ranks)) - alive
 
+        recovered = self._recover_all(alive, failed)
         for name, ent in self._entities.items():
-            shards = self._recover_entity_shards(name, ent, alive, failed)
-            ent.restore_shards(shards)
+            ent.restore_shards(recovered[name])
 
         meta = self.checkpoint_step()
         self.stats.restored += 1
         self.stats.last_restore_s = time.perf_counter() - t0
         return meta
+
+    def _recover_all(
+        self, alive: set[int], failed: set[int]
+    ) -> dict[str, dict[int, Any]]:
+        """Recover every entity's every shard (no entity mutation): the
+        restore-mode dispatch point shared by ``restore`` and
+        ``restore_elastic``."""
+        if self.cfg.restore_mode == "sync":
+            return {
+                name: self._recover_entity_shards(name, ent, alive, failed)
+                for name, ent in self._entities.items()
+            }
+        return self._recover_all_pipelined(alive, failed)
 
     def _recover_entity_shards(
         self, name: str, ent: DistributedEntity, alive: set[int], failed: set[int]
@@ -633,6 +777,306 @@ class CheckpointEngine:
             for origin, subset in partials.items():
                 shards[origin] = ent.merge_payload(subset, ref, self.n_ranks)
         return shards
+
+    # ------------------------------------------------------------------ #
+    # The pipelined recovery path (DESIGN.md §10) — restore as the mirror
+    # image of the create pipeline: plan, then drain chunked
+    # TRANSFER i ‖ DECODE i−1 ‖ VERIFY i−2 per (group, entity) unit, with
+    # independent units (and independent chunks of one unit) reconstructed
+    # in parallel across the async worker pool.
+    # ------------------------------------------------------------------ #
+    def _recover_all_pipelined(
+        self, alive: set[int], failed: set[int]
+    ) -> dict[str, dict[int, Any]]:
+        t0 = time.perf_counter()
+        codec = self.codec
+        groups = self._groups()
+        shards: dict[str, dict[int, Any]] = {n: {} for n in self._entities}
+        partials: dict[str, dict[int, Any]] = {n: {} for n in self._entities}
+
+        # -- plan: survivor unpacks are local jobs, every failed origin's
+        # (group, entity) becomes one reconstruction unit ------------------
+        local_jobs: list[tuple[str, int, Any, Any]] = []  # (name, origin, flat, man)
+        units: list[_RestoreUnit] = []
+        seen_units: set[tuple[int, str]] = set()
+        ref_table = self._restore_ref_sums()  # one scan for the whole restore
+        for name in self._entities:
+            if name in self._replicated:
+                donor = next(
+                    (r for r in sorted(alive) if self.stores[r].buffer.valid), None
+                )
+                if donor is None:
+                    raise dist.DataLostError(
+                        f"replicated entity {name!r} lost everywhere"
+                    )
+                flat, man = self.stores[donor].buffer.read_only.own[name]
+                local_jobs.append((name, -1, flat, man))  # -1: fan out to all
+                self.stats.zero_comm_restores += self.n_ranks
+                continue
+            for origin in range(self.n_ranks):
+                if origin in alive and self.stores[origin].buffer.valid:
+                    flat, man = self.stores[origin].buffer.read_only.own[name]
+                    local_jobs.append((name, origin, flat, man))
+                    self.stats.zero_comm_restores += 1
+                else:
+                    gi = dist.group_of(origin, codec.group_size(self.n_ranks))
+                    if (gi, name) not in seen_units:
+                        seen_units.add((gi, name))
+                        units.append(
+                            self._prep_restore_unit(gi, groups, name, alive, ref_table)
+                        )
+
+        # -- drain: chunk tasks + survivor unpacks across the worker pool --
+        chunk_tasks = [(u, ci) for u in units for ci in range(len(u.bounds))]
+        results: dict[tuple[str, int], Any] = {}
+        workers = max(1, min(self.cfg.async_workers, len(chunk_tasks) + len(local_jobs)))
+        if workers > 1:
+            futures = [
+                self._executor().submit(self._restore_chunk_task, u, ci)
+                for u, ci in chunk_tasks
+            ]
+            futures += [
+                self._executor().submit(unpack_bytes, flat, man)
+                for _, _, flat, man in local_jobs
+            ]
+            # Join EVERY future before propagating a failure (same rule as
+            # the create drain): an abandoned chunk task would keep writing
+            # into restore arenas that a retrying restore re-leases.
+            err: BaseException | None = None
+            for f, task in zip(futures, chunk_tasks + local_jobs):
+                try:
+                    out = f.result()
+                    if len(task) == 4:  # a local unpack job
+                        results[(task[0], task[1])] = out
+                except BaseException as e:
+                    err = err or e
+            if err is not None:
+                raise err
+        else:
+            # Serial drain: the literal three-stage pipeline per unit, then
+            # the local unpacks — same bytes, deterministic chunk order (the
+            # form the mid-restore fault-injection tests kill at).
+            for u in units:
+                nc = len(u.bounds)
+                for i in range(nc + 2):
+                    if i < nc:
+                        self._restore_transfer_chunk(u, *u.bounds[i])
+                    if 0 <= i - 1 < nc:
+                        u.decode_chunk(*u.bounds[i - 1])
+                    if 0 <= i - 2 < nc:
+                        self._restore_verify_chunk(u, i - 2)
+                    self._fault_hook("restore_chunk")
+            for name, origin, flat, man in local_jobs:
+                results[(name, origin)] = unpack_bytes(flat, man)
+
+        # -- finalize: checksum verdicts, unpack rebuilt shards, merge -----
+        for name, origin, _, _ in local_jobs:
+            payload = results[(name, origin)]
+            if origin < 0:
+                shards[name] = {r: payload for r in range(self.n_ranks)}
+            else:
+                shards[name][origin] = payload
+        for u in units:
+            self._finalize_restore_unit(u, shards, partials)
+
+        for name, ent in self._entities.items():
+            if name in self._replicated:
+                continue
+            if not shards[name]:
+                raise dist.DataLostError(f"no shard of entity {name!r} recoverable")
+            if partials[name]:
+                ref = shards[name][min(shards[name])]
+                for origin, subset in partials[name].items():
+                    shards[name][origin] = ent.merge_payload(subset, ref, self.n_ranks)
+
+        self.stats.last_restore_decode_s = time.perf_counter() - t0
+        self.stats.last_restore_chunks = len(chunk_tasks)
+        self.stats.last_restore_bytes_rebuilt = sum(
+            buf.nbytes for u in units for buf in u.rebuilt.values()
+        )
+        return shards
+
+    def _prep_restore_unit(
+        self, gi: int, groups: list, name: str, alive: set[int], ref_table: dict
+    ) -> _RestoreUnit:
+        """Capture everything one unit's chunks need — references to the
+        surviving shards/stripes (so a rank dying mid-restore cannot pull
+        bytes out from under the drain), arena-leased blob + output buffers
+        on the recovering host, and the codec's precomputed chunk decoder."""
+        codec = self.codec
+        grp = groups[gi]
+
+        def _has_data(m: int) -> bool:
+            st = self.stores.get(m)
+            return st is not None and st.alive and st.buffer.valid
+
+        missing_idx = [i for i, m in enumerate(grp.members) if not _has_data(m)]
+        if len(missing_idx) > codec.tolerance():
+            raise dist.DataLostError(
+                f"group {gi} lost {len(missing_idx)} members; "
+                f"codec {codec.name!r} tolerates {codec.tolerance()}"
+            )
+        first_missing = grp.members[missing_idx[0]]
+
+        stripe_srcs: dict[int, list[np.ndarray]] = {}
+        for b, holders in enumerate(codec.placement(groups, gi, self.n_ranks)):
+            stripes: list[np.ndarray] | None = []
+            for j, member in enumerate(holders):
+                stripe = (
+                    self.stores[member].buffer.read_only.parity.get(gi, {}).get((name, b, j))
+                    if _has_data(member)
+                    else None
+                )
+                if stripe is None:
+                    stripes = None  # any lost stripe kills the whole blob
+                    break
+                stripes.append(stripe)
+            if stripes is not None:
+                stripe_srcs[b] = stripes
+        present: dict[int, np.ndarray] = {}
+        for i, m in enumerate(grp.members):
+            if i in missing_idx:
+                continue
+            ro = self.stores[m].buffer.read_only
+            present[i] = ro.own_exch.get(name, ro.own[name])[0]
+
+        # Blob + output buffers live in the recovering host's staging-bank
+        # arenas (never the read-only bank — the same generation-parity
+        # guarantee as the create path); single-stripe blobs adopt the
+        # holder's bytes by reference, exactly like the sync path.
+        host = codec.rebuilder(groups, gi, first_missing, alive)
+        store = self.stores.get(host) if host is not None else None
+        if store is None or not store.alive:
+            cand = [r for r in alive if self.stores[r].alive]
+            if not cand:
+                raise dist.DataLostError(
+                    f"no surviving rank can rebuild rank {first_missing}"
+                )
+            store = self.stores[min(cand)]
+        blobs: dict[int, np.ndarray] = {}
+        for b, stripes in stripe_srcs.items():
+            if len(stripes) == 1:
+                blobs[b] = stripes[0].reshape(-1)
+            else:
+                nb = sum(s.nbytes for s in stripes)
+                blobs[b] = store.lease(("restore", gi, name, "blob", b), nb)
+        multi = {b: s for b, s in stripe_srcs.items() if len(s) > 1}
+        if multi and not codec.decode_chunked():
+            # Codec without a chunked decode: it decodes EAGERLY inside
+            # decode_into, so its blob bytes must be materialized up front
+            # (the chunked TRANSFER stage then has nothing left to copy).
+            for b, stripes in multi.items():
+                np.copyto(blobs[b], parity_mod.join_stripes(
+                    [s.reshape(-1) for s in stripes]
+                ))
+            multi = {}
+        try:
+            rebuilt, decode_chunk = codec.decode_into(
+                present, blobs, missing_idx,
+                lambda i, nb: store.lease(("restore", gi, name, "out", i), nb),
+            )
+        except codec_mod.CodecDecodeError as e:
+            raise dist.DataLostError(
+                f"rank {first_missing} (group {gi}) unrecoverable under codec "
+                f"{codec.name!r}, entity {name!r}: {e}"
+            ) from e
+
+        n = max((bb.nbytes for bb in blobs.values()), default=0)
+        step = max(4, self.cfg.restore_chunk_bytes) & ~3
+        bounds = [(lo, min(lo + step, n)) for lo in range(0, n, step)] or [(0, 0)]
+        manifests = {i: self._redundancy_manifest(grp.members[i], name) for i in missing_idx}
+        ref_sums: dict[int, Any] = {}
+        for i in missing_idx:
+            compressed = isinstance(manifests[i], tuple) and manifests[i][0] == "compressed"
+            ref_sums[i] = None if compressed else ref_table.get((grp.members[i], name))
+        return _RestoreUnit(
+            gi=gi, grp=grp, name=name, missing_idx=missing_idx,
+            stripe_srcs=multi,
+            blobs=blobs, rebuilt=rebuilt, decode_chunk=decode_chunk, bounds=bounds,
+            manifests=manifests, ref_sums=ref_sums,
+            sums={i: [None] * len(bounds) for i in missing_idx},
+        )
+
+    def _restore_ref_sums(self) -> dict:
+        """Replicated capture-time exchange checksums (empty for pre-§10
+        checkpoints, e.g. migrated disk pickles — VERIFY then skips)."""
+        for st in self.stores.values():
+            if st.alive and st.buffer.valid:
+                table = st.buffer.read_only.meta.get("exch_checksums")
+                if table:
+                    return table
+        return {}
+
+    def _restore_chunk_task(self, u: _RestoreUnit, ci: int) -> None:
+        """Parallel-drain form of one chunk: its own TRANSFER→DECODE→VERIFY
+        (chunks are range-disjoint, so any interleaving across workers is
+        race-free and byte-identical to the serial pipeline)."""
+        lo, hi = u.bounds[ci]
+        self._restore_transfer_chunk(u, lo, hi)
+        u.decode_chunk(lo, hi)
+        self._restore_verify_chunk(u, ci)
+        self._fault_hook("restore_chunk")
+
+    def _restore_transfer_chunk(self, u: _RestoreUnit, lo: int, hi: int) -> None:
+        """TRANSFER: copy the stripe segments covering [lo, hi) into the blob
+        arenas (the simulated network hop that fetches remote stripes)."""
+        for b, stripes in u.stripe_srcs.items():
+            dst = u.blobs[b]
+            off = 0
+            for s in stripes:
+                s = s.reshape(-1)
+                a, z = max(lo, off), min(hi, off + s.nbytes)
+                if a < z:
+                    np.copyto(dst[a:z], s[a - off : z - off])
+                off += s.nbytes
+
+    def _restore_verify_chunk(self, u: _RestoreUnit, ci: int) -> None:
+        """VERIFY: Fletcher partials of the rebuilt chunk. Both sums are
+        linear, so chunk partials at word offset *o* recombine exactly:
+        s1 = Σ c1,  s2 = Σ (c2 + o·c1) — the final sums equal a monolithic
+        ``np_checksum`` of the rebuilt payload."""
+        lo, hi = u.bounds[ci]
+        for i in u.missing_idx:
+            if u.ref_sums[i] is None:
+                continue
+            man = u.manifests[i]
+            end = min(hi, man.total)
+            if lo < end:
+                c1, c2 = np_checksum(u.rebuilt[i][lo:end])
+                u.sums[i][ci] = (lo // 4, c1, c2)
+
+    def _finalize_restore_unit(
+        self, u: _RestoreUnit, shards: dict, partials: dict
+    ) -> None:
+        """Checksum verdict + unpack of every rebuilt origin in the unit."""
+        has_subset = hasattr(self._entities[u.name], "partner_payload")
+        for i in u.missing_idx:
+            origin = u.grp.members[i]
+            ref = u.ref_sums[i]
+            if ref is not None:
+                s1 = s2 = 0
+                for part in u.sums[i]:
+                    if part is None:
+                        continue
+                    o, c1, c2 = part
+                    s1 = (s1 + c1) & 0xFFFFFFFF
+                    s2 = (s2 + c2 + o * c1) & 0xFFFFFFFF
+                if (s1, s2) != tuple(ref):
+                    raise IntegrityError(
+                        f"reconstructed shard failed checksum validation: "
+                        f"rank {origin} entity {u.name!r} (group {u.gi})"
+                    )
+            if self.codec.striped:
+                self.stats.reconstructed_restores += 1
+            else:
+                self.stats.adopted_restores += 1
+            man = u.manifests[i]
+            rebuilt = np.asarray(u.rebuilt[i]).reshape(-1)
+            if isinstance(man, tuple) and man[0] == "compressed":
+                payload = self._decompress(rebuilt, man)
+            else:
+                payload = unpack_bytes(rebuilt[: man.total], man)
+            (partials if has_subset else shards)[u.name][origin] = payload
 
     # ------------------------------------------------------------------ #
     # Elastic N-to-M restore (beyond-paper: Ham et al.'s N-to-M algorithm)
@@ -674,8 +1118,9 @@ class CheckpointEngine:
             residency[origin] = dense if dense is not None and dense < new_n_ranks else None
 
         report = ElasticReport(n_old=self.n_ranks, n_new=new_n_ranks)
+        recovered = self._recover_all(alive, failed)  # pipelined or sync
         for name, ent in self._entities.items():
-            shards = self._recover_entity_shards(name, ent, alive, failed)
+            shards = recovered[name]
             coords = self._stored_coords(name)
             if coords is None and hasattr(ent, "shard_coords"):
                 coords = ent.shard_coords(self.n_ranks)

@@ -66,6 +66,16 @@ class RedundancyCodec:
                           group-local index -> rebuilt padded buffer for
                           every index in ``missing``; raises CodecDecodeError
                           if the surviving set is insufficient.
+    decode_into(present, blobs, missing, lease)
+                          arena-aware chunked decode (the restore mirror of
+                          ``encode_into``): returns ``(rebuilt, chunk_fn)``
+                          where ``rebuilt[i]`` is a ``lease(i, nbytes)``-backed
+                          output buffer and ``chunk_fn(lo, hi)`` fills every
+                          rebuilt buffer's byte range — the engine drains the
+                          ranges through its TRANSFER/DECODE/VERIFY restore
+                          pipeline. The default falls back to the allocating
+                          ``decode`` (one eager "chunk"), so user codecs keep
+                          working unchanged.
     tolerance()           max len(missing) per group guaranteed decodable
                           when the blob holders are intact.
     rebuilder(groups, gi, origin, alive)
@@ -116,6 +126,35 @@ class RedundancyCodec:
         missing: list[int],
     ) -> dict[int, np.ndarray]:
         raise NotImplementedError
+
+    def decode_into(
+        self,
+        present: dict[int, np.ndarray],
+        blobs: dict[int, np.ndarray],
+        missing: list[int],
+        lease: Callable[[int, int], np.ndarray],
+    ) -> tuple[dict[int, np.ndarray], Callable[[int, int], None]]:
+        """Arena-aware chunked decode (see the interface contract above).
+        Default: eager allocating ``decode`` with a no-op chunk function."""
+        return self.decode(present, blobs, missing), (lambda lo, hi: None)
+
+    def decode_chunked(self) -> bool:
+        """True when ``decode_into`` defers its byte passes to the returned
+        chunk function (the engine streams blob TRANSFERs ahead of each
+        chunk's DECODE); False when it consumes the blob bytes eagerly at
+        call time, in which case the engine materializes every blob before
+        calling it. Must mirror the ``decode_into`` dispatch — the built-in
+        codecs share ``_decode_overridden`` between the two so the mirror
+        holds structurally."""
+        return False
+
+    def _decode_overridden(self, base: type) -> bool:
+        """True when a subclass replaced ``base``'s canonical ``decode`` —
+        the single predicate behind both ``decode_chunked`` and the
+        ``decode_into`` dispatch of the built-in codecs (they must agree,
+        so they share it): an overridden decode is honored by falling back
+        to the eager allocating path."""
+        return type(self).decode is not base.decode
 
     def rebuilder(
         self, groups: list[dist.ParityGroup], gi: int, origin: int, alive: set[int]
@@ -189,6 +228,19 @@ class CopyCodec(RedundancyCodec):
             raise CodecDecodeError("origin and every holder of its copies failed")
         return {i: blobs[min(blobs)] for i in missing}
 
+    def decode_chunked(self):
+        # Adoption never reads blob bytes at call time (it picks a surviving
+        # reference), so it is pipeline-safe unless a subclass decode says
+        # otherwise.
+        return not self._decode_overridden(CopyCodec)
+
+    def decode_into(self, present, blobs, missing, lease):
+        # Adoption stays memcpy-free: the rebuilt payload IS the surviving
+        # whole-copy blob, by reference — no arena, nothing to chunk.
+        if self._decode_overridden(CopyCodec):
+            return super().decode_into(present, blobs, missing, lease)
+        return self.decode(present, blobs, missing), (lambda lo, hi: None)
+
     def rebuilder(self, groups, gi, origin, alive):
         for holders in self.placement(groups, gi, max(g.members[-1] for g in groups) + 1):
             if holders[0] in alive:
@@ -213,12 +265,68 @@ class GroupCodecBase(RedundancyCodec):
     def group_size(self, n_ranks: int) -> int:
         return self.group
 
+    def _generator(self) -> np.ndarray:
+        """The (m, group) GF(2^8) encode generator (XOR = the all-ones row),
+        shared by ``erasure_decode_matrix`` precomputation on both tiers."""
+        raise NotImplementedError
+
+    def _matrix_decode_into(self, present, blobs, missing, lease):
+        """Chunked decode through the precomputed erasure-solve matrix
+        (gf256.erasure_decode_matrix): the e×e Gaussian elimination happens
+        ONCE on the tiny coefficient submatrix, then every byte range is a
+        plain coefficient matmul over [survivors ‖ intact blobs] — chunkable
+        for the restore pipeline, accumulating into leased arenas, and
+        bit-identical to the syndromes+solve ``decode`` (the GF solution is
+        unique)."""
+        e = len(missing)
+        if e == 0:
+            return {}, (lambda lo, hi: None)
+        k = self.group
+        coef = self._generator()
+        rows = sorted(blobs)[:e]
+        n = max(b.nbytes for b in blobs.values())
+        D = gf256.erasure_decode_matrix(k, coef, sorted(present), rows, missing)
+        # Fixed coefficients -> Jerasure-style per-coefficient product tables:
+        # each decode pass is ONE 256-entry gather + XOR instead of the
+        # log/antilog path's two gathers and an add (~5x faster per pass).
+        # (src buffer, table | None for c==1) terms per output row:
+        terms: dict[int, list[tuple[np.ndarray, np.ndarray | None]]] = {}
+        for t, i in enumerate(missing):
+            row: list[tuple[np.ndarray, np.ndarray | None]] = []
+            for s, b in present.items():
+                c = int(D[t, s])
+                if c:
+                    row.append((b.reshape(-1), None if c == 1 else gf256.mul_table(c)))
+            for j in rows:
+                c = int(D[t, k + j])
+                if c:
+                    row.append(
+                        (blobs[j].reshape(-1), None if c == 1 else gf256.mul_table(c))
+                    )
+            terms[i] = row
+        out = {i: lease(i, n) for i in missing}
+
+        def decode_chunk(lo: int, hi: int) -> None:
+            hi = min(hi, n)
+            if lo >= hi:
+                return
+            for i in missing:
+                acc = out[i][lo:hi]
+                acc[:] = 0
+                for b, table in terms[i]:
+                    if lo >= b.nbytes:
+                        continue  # ragged survivors: prefix only
+                    seg = b[lo:hi]
+                    if table is None:
+                        np.bitwise_xor(acc[: seg.shape[0]], seg, out=acc[: seg.shape[0]])
+                    else:
+                        gf256.gf_addmul_table_into(acc, table, seg)
+
+        return out, decode_chunk
+
     def placement(self, groups, gi, n_ranks):
-        n_groups = len(groups)
-        others = [(gi + 1 + t) % n_groups for t in range(n_groups)]
-        others = [g for g in others if g != gi] or [gi]
         return [
-            groups[others[b % len(others)]].members
+            groups[dist.blob_holder_group(len(groups), gi, b)].members
             for b in range(self.n_blobs(len(groups[gi].members)))
         ]
 
@@ -255,6 +363,21 @@ class XorCodec(GroupCodecBase):
             [b.reshape(-1) for b in present.values()], blobs[0]
         )
         return {missing[0]: rebuilt}
+
+    def _generator(self):
+        return np.ones((1, self.group), np.uint8)
+
+    def decode_chunked(self):
+        return not self._decode_overridden(XorCodec)
+
+    def decode_into(self, present, blobs, missing, lease):
+        if self._decode_overridden(XorCodec):
+            return super().decode_into(present, blobs, missing, lease)
+        if len(missing) > 1:
+            raise CodecDecodeError(f"{len(missing)} losses in one group; XOR tolerates 1")
+        if missing and 0 not in blobs:
+            raise CodecDecodeError("XOR parity blob lost")
+        return self._matrix_decode_into(present, blobs, missing, lease)
 
 
 class RSCodec(GroupCodecBase):
@@ -295,6 +418,26 @@ class RSCodec(GroupCodecBase):
             return gf256.rs_decode(present, blobs, missing, k, self.coef)
         except ValueError as e:
             raise CodecDecodeError(str(e)) from e
+
+    def _generator(self):
+        return self.coef
+
+    def decode_chunked(self):
+        return not self._decode_overridden(RSCodec)
+
+    def decode_into(self, present, blobs, missing, lease):
+        if self._decode_overridden(RSCodec):
+            return super().decode_into(present, blobs, missing, lease)
+        if len(missing) > self.m:
+            raise CodecDecodeError(
+                f"{len(missing)} losses in one group; rs(m={self.m}) tolerates {self.m}"
+            )
+        if missing and len(blobs) < len(missing):
+            raise CodecDecodeError(
+                f"need {len(missing)} parity blobs to rebuild {len(missing)} "
+                f"shards, only {len(blobs)} survive"
+            )
+        return self._matrix_decode_into(present, blobs, missing, lease)
 
 
 # ---------------------------------------------------------------------------

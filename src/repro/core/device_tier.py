@@ -55,6 +55,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import distribution as dist
 from repro.sharding.mesh import shard_map
+from repro.utils.logging import get_logger
+
+log = get_logger("core.device_tier")
+
+#: (axis, size, g) combos already warned about taking the full-blob fallback
+_RAGGED_WARNED: set[tuple[str, int, int]] = set()
 
 
 def _full_rank(pspec: P, ndim: int) -> tuple:
@@ -138,6 +144,9 @@ class SnapshotProgram:
     pcie_bytes: int = 0       # global device->host bytes per checkpoint
     codec: str = "copy"
     parity_group: int = 0
+    # One program per staging chunk (own copy, then one per bucket) — the
+    # double-buffered D2H path driven by ``staged_snapshot_fetch``.
+    snapshot_chunk_fns: tuple = ()
 
 
 def _to_u32_local(x: jax.Array) -> jax.Array:
@@ -182,7 +191,11 @@ def build_snapshot_program(
     codec: str = "copy",       # "copy" | "xor" | "rs": on-device redundancy
     parity_group: int = 0,     # group size g (k) for the striped codecs
     rs_parity: int = 2,        # m parity blobs per group for codec="rs"
-    emit_full_blobs: bool = False,  # test hook: whole blobs, no routing/striping
+    # Whole blobs on every group member instead of routed 1/g stripes. The
+    # stripe path needs parity_group to divide every bucket's failure axis;
+    # None (default) auto-falls back to full blobs on such ragged worlds
+    # (logged once per (axis, size, g)); False raises on them.
+    emit_full_blobs: bool | None = None,
 ) -> SnapshotProgram:
     fail_axes = (redundancy_axis,) if redundancy_axis != "data" else ("data", "pod")
     striped = codec in ("xor", "rs")
@@ -245,6 +258,39 @@ def build_snapshot_program(
             )
         )
 
+    # -- ragged worlds: stripe placement needs g | axis size ------------------
+    if striped:
+        ragged = [
+            (b.axis, mesh.shape[b.axis])
+            for b in buckets
+            if mesh.shape[b.axis] % parity_group
+        ]
+        if emit_full_blobs is None:
+            emit_full_blobs = bool(ragged)
+            for axis, size in ragged:
+                key = (axis, size, parity_group)
+                if key not in _RAGGED_WARNED:
+                    _RAGGED_WARNED.add(key)
+                    log.warning(
+                        "parity_group %d does not divide axis %r (%d): the "
+                        "snapshot program falls back to emit_full_blobs — "
+                        "every group member keeps whole parity blobs, so "
+                        "%dx more parity bytes cross PCIe than the stripe "
+                        "path would move",
+                        parity_group, axis, size, parity_group,
+                    )
+        elif not emit_full_blobs and ragged:
+            axis, size = ragged[0]
+            raise ValueError(
+                f"on-device stripe placement needs parity_group "
+                f"({parity_group}) to divide axis {axis!r} ({size}); pass "
+                f"emit_full_blobs=True (or leave it None to auto-fall back) "
+                f"to emit whole parity blobs on ragged worlds, or use the "
+                f"host-tier codec path"
+            )
+    else:
+        emit_full_blobs = bool(emit_full_blobs)
+
     def _bucket_global_bytes(b: FusedBucket) -> int:
         k = 1
         for a in b.axes:
@@ -257,9 +303,13 @@ def build_snapshot_program(
     )
     fused_bytes = sum(_bucket_global_bytes(b) for b in buckets)
     if striped:
-        # ring collection (g-1 hops) + blob routing (m hops), all fused-width
-        exchanged_bytes = (parity_group - 1 + n_parity) * fused_bytes
-        pcie_payload = n_parity * fused_bytes // max(parity_group, 1)
+        # ring collection (g-1 hops) + blob routing (m hops, stripe path
+        # only — full blobs stay where they were encoded), all fused-width
+        route_hops = 0 if emit_full_blobs else n_parity
+        exchanged_bytes = (parity_group - 1 + route_hops) * fused_bytes
+        pcie_payload = n_parity * fused_bytes
+        if not emit_full_blobs:  # holders keep 1/g stripes, not whole blobs
+            pcie_payload //= max(parity_group, 1)
     else:
         exchanged_bytes = fused_bytes
         pcie_payload = fused_bytes if not compress else fused_bytes // 4
@@ -282,120 +332,125 @@ def build_snapshot_program(
         return pairs
 
     def _route_pairs(axis: str, g: int, b: int) -> list[tuple[int, int]]:
-        """Send group gi's blob b to neighbor group gi+1+b (wrapping, skipping
-        gi) — the device mirror of GroupCodecBase.placement. Ragged positions
-        with no counterpart in the holder group drop out of the permutation
-        (their stripe share is unhosted; the stripe path asserts g | size)."""
+        """Send group gi's blob b to its holder group (the shared
+        distribution.blob_holder_group rule — the device mirror of
+        GroupCodecBase.placement). Ragged positions with no counterpart in
+        the holder group drop out of the permutation (their stripe share is
+        unhosted; the stripe path requires g | size)."""
         size = mesh.shape[axis]
         groups = dist.parity_groups(size, g)
         ng = len(groups)
         pairs = []
         for gi, grp in enumerate(groups):
-            others = [(gi + 1 + t) % ng for t in range(ng)]
-            others = [h for h in others if h != gi] or [gi]
-            holder = groups[others[b % len(others)]]
+            holder = groups[dist.blob_holder_group(ng, gi, b)]
             for q, m in enumerate(grp.members):
                 if q < len(holder.members):
                     pairs.append((m, holder.members[q]))
         return pairs
 
     # -- the ONE fused program ------------------------------------------------
-    def _fused_local(*local_leaves):
-        """Per-device body: build every bucket's fused buffer, exchange /
-        encode parity, and fold the handshake checksum — one program for the
-        whole state instead of one per leaf."""
-        from repro.kernels import ops as kops
-        from repro.kernels import ref as kref
+    def _make_fused_local(sub_buckets, with_checksum):
+        """Per-device body over a bucket subset: build each fused buffer,
+        exchange / encode parity, and fold the handshake checksum — one
+        program for the whole state (``sub_buckets=buckets``), or one per
+        bucket for the double-buffered staging chunks."""
+        def _fused_local(*local_leaves):
+            from repro.kernels import ops as kops
+            from repro.kernels import ref as kref
 
-        by_leaf = dict(zip([i for b in buckets for i in b.leaf_idx], local_leaves))
-        out: dict[str, Any] = {}
-        checksum_acc = jnp.zeros((2,), jnp.uint32) if validate else None
-        for bi, bucket in enumerate(buckets):
-            parts = [_to_u32_local(by_leaf[i]) for i in bucket.leaf_idx]
-            buf = jnp.concatenate(parts) if parts else jnp.zeros(0, jnp.uint32)
-            if buf.shape[0] < bucket.words:
-                buf = jnp.pad(buf, (0, bucket.words - buf.shape[0]))
-            axis = bucket.axis
-
-            if validate:
-                c = kref.checksum(buf)
-                c = jax.lax.psum(c, bucket.axes) if bucket.axes else c
-                checksum_acc = checksum_acc * jnp.uint32(1000003) + c * jnp.uint32(bi + 1)
-
-            if compress:
-                flatf = jnp.concatenate(
-                    [by_leaf[i].reshape(-1).astype(jnp.float32) for i in bucket.leaf_idx]
-                )
-                pad = (-flatf.shape[0]) % 256
-                if pad:
-                    flatf = jnp.pad(flatf, (0, pad))
-                q, s = kref.quantize_blockwise(flatf, 256)
-                q = jax.lax.ppermute(q, axis, _copy_pairs(axis))
-                s = jax.lax.ppermute(s, axis, _copy_pairs(axis))
-                out.setdefault("partner", {})[bucket.tag] = {"q": q, "scale": s}
-                continue
-
-            if not striped:
-                out.setdefault("partner", {})[bucket.tag] = jax.lax.ppermute(
-                    buf, axis, _copy_pairs(axis)
-                )
-                continue
-
-            # -- on-device codec encode (before any host DMA) ----------------
-            g = parity_group
-            size = mesh.shape[axis]
-            idx = jax.lax.axis_index(axis)
-            gi = idx // g
-            pos = idx % g
-            n_full_groups = size // g
-            k_local = jnp.where(gi < n_full_groups, g, size - n_full_groups * g)
-            # ring-collect the group's buffers: slot t = member (pos+t) mod k
-            slots = [buf]
-            cur = buf
-            ring = _ring_pairs(axis, g)
-            for _t in range(1, g):
-                cur = jax.lax.ppermute(cur, axis, ring)
-                slots.append(cur)
-            stacked = jnp.stack(slots)                      # (g, words)
-            # canonical member order + zero rows past a ragged group's size
-            order = (jnp.arange(g) - pos) % jnp.maximum(k_local, 1)
-            canonical = jnp.take(stacked, order, axis=0)
-            canonical = jnp.where(
-                (jnp.arange(g) < k_local)[:, None], canonical, jnp.uint32(0)
+            by_leaf = dict(
+                zip([i for b in sub_buckets for i in b.leaf_idx], local_leaves)
             )
-            # Pallas encode: XOR chain or GF(2^8) Cauchy matmul
-            if codec == "xor":
-                blobs = kops.xor_reduce(canonical)[None, :]  # (1, words)
-            else:
-                from repro.core import gf256
+            out: dict[str, Any] = {}
+            checksum_acc = jnp.zeros((2,), jnp.uint32) if with_checksum else None
+            for bi, bucket in enumerate(sub_buckets):
+                parts = [_to_u32_local(by_leaf[i]) for i in bucket.leaf_idx]
+                buf = jnp.concatenate(parts) if parts else jnp.zeros(0, jnp.uint32)
+                if buf.shape[0] < bucket.words:
+                    buf = jnp.pad(buf, (0, bucket.words - buf.shape[0]))
+                axis = bucket.axis
 
-                coefs = tuple(
-                    tuple(int(c) for c in row)
-                    for row in gf256.cauchy_matrix(rs_parity, g)
+                if with_checksum:
+                    c = kref.checksum(buf)
+                    c = jax.lax.psum(c, bucket.axes) if bucket.axes else c
+                    checksum_acc = checksum_acc * jnp.uint32(1000003) + c * jnp.uint32(bi + 1)
+
+                if compress:
+                    flatf = jnp.concatenate(
+                        [by_leaf[i].reshape(-1).astype(jnp.float32) for i in bucket.leaf_idx]
+                    )
+                    pad = (-flatf.shape[0]) % 256
+                    if pad:
+                        flatf = jnp.pad(flatf, (0, pad))
+                    q, s = kref.quantize_blockwise(flatf, 256)
+                    q = jax.lax.ppermute(q, axis, _copy_pairs(axis))
+                    s = jax.lax.ppermute(s, axis, _copy_pairs(axis))
+                    out.setdefault("partner", {})[bucket.tag] = {"q": q, "scale": s}
+                    continue
+
+                if not striped:
+                    out.setdefault("partner", {})[bucket.tag] = jax.lax.ppermute(
+                        buf, axis, _copy_pairs(axis)
+                    )
+                    continue
+
+                # -- on-device codec encode (before any host DMA) ------------
+                g = parity_group
+                size = mesh.shape[axis]
+                idx = jax.lax.axis_index(axis)
+                gi = idx // g
+                pos = idx % g
+                n_full_groups = size // g
+                k_local = jnp.where(gi < n_full_groups, g, size - n_full_groups * g)
+                # ring-collect the group's buffers: slot t = member (pos+t) mod k
+                slots = [buf]
+                cur = buf
+                ring = _ring_pairs(axis, g)
+                for _t in range(1, g):
+                    cur = jax.lax.ppermute(cur, axis, ring)
+                    slots.append(cur)
+                stacked = jnp.stack(slots)                      # (g, words)
+                # canonical member order + zero rows past a ragged group's size
+                order = (jnp.arange(g) - pos) % jnp.maximum(k_local, 1)
+                canonical = jnp.take(stacked, order, axis=0)
+                canonical = jnp.where(
+                    (jnp.arange(g) < k_local)[:, None], canonical, jnp.uint32(0)
                 )
-                blobs = kops.gf256_matmul(canonical, coefs)  # (m, words)
-            if emit_full_blobs:
-                out.setdefault("parity_full", {})[bucket.tag] = blobs
-                continue
-            # route blob b to its holder group, keep this rank's 1/g stripe
-            sw = bucket.words // g
-            stripes = []
-            for b in range(n_parity):
-                routed = jax.lax.ppermute(blobs[b], axis, _route_pairs(axis, g, b))
-                stripes.append(jax.lax.dynamic_slice(routed, (pos * sw,), (sw,)))
-            out.setdefault("parity", {})[bucket.tag] = jnp.stack(stripes)
-        if validate:
-            out["checksum"] = checksum_acc
-        return out
+                # Pallas encode: XOR chain or GF(2^8) Cauchy matmul
+                if codec == "xor":
+                    blobs = kops.xor_reduce(canonical)[None, :]  # (1, words)
+                else:
+                    from repro.core import gf256
 
-    def _fused_specs() -> tuple[Any, Any]:
+                    coefs = tuple(
+                        tuple(int(c) for c in row)
+                        for row in gf256.cauchy_matrix(rs_parity, g)
+                    )
+                    blobs = kops.gf256_matmul(canonical, coefs)  # (m, words)
+                if emit_full_blobs:
+                    out.setdefault("parity_full", {})[bucket.tag] = blobs
+                    continue
+                # route blob b to its holder group, keep this rank's 1/g stripe
+                sw = bucket.words // g
+                stripes = []
+                for b in range(n_parity):
+                    routed = jax.lax.ppermute(blobs[b], axis, _route_pairs(axis, g, b))
+                    stripes.append(jax.lax.dynamic_slice(routed, (pos * sw,), (sw,)))
+                out.setdefault("parity", {})[bucket.tag] = jnp.stack(stripes)
+            if with_checksum:
+                out["checksum"] = checksum_acc
+            return out
+
+        return _fused_local
+
+    def _fused_specs(sub_buckets, with_checksum) -> tuple[Any, Any]:
         in_specs = tuple(
             P(*_full_rank(leaves_ps[i], len(leaves_sds[i].shape)))
-            for b in buckets
+            for b in sub_buckets
             for i in b.leaf_idx
         )
         out_specs: dict[str, Any] = {}
-        for bucket in buckets:
+        for bucket in sub_buckets:
             sharded = P(bucket.axes) if bucket.axes else P(None)
             if compress:
                 out_specs.setdefault("partner", {})[bucket.tag] = {
@@ -411,18 +466,20 @@ def build_snapshot_program(
                 out_specs.setdefault("parity", {})[bucket.tag] = (
                     P(None, bucket.axes) if bucket.axes else P(None, None)
                 )
-        if validate:
+        if with_checksum:
             out_specs["checksum"] = P()
         return in_specs, out_specs
 
-    if striped and not emit_full_blobs:
-        for bucket in buckets:
-            assert mesh.shape[bucket.axis] % parity_group == 0, (
-                f"on-device stripe placement needs parity_group "
-                f"({parity_group}) to divide axis {bucket.axis!r} "
-                f"({mesh.shape[bucket.axis]}); use emit_full_blobs for "
-                f"ragged worlds"
-            )
+    def _fused_args(leaves, sub_buckets):
+        args = []
+        for b in sub_buckets:
+            for i in b.leaf_idx:
+                x = leaves[i]
+                target = padded_shapes[i]
+                if target != tuple(x.shape):
+                    x = jnp.pad(x, [(0, t - s) for s, t in zip(x.shape, target)])
+                args.append(x)
+        return args
 
     def snapshot_fn(state):
         leaves = treedef.flatten_up_to(state)
@@ -432,26 +489,47 @@ def build_snapshot_program(
             # state (XLA cannot alias these outputs to the inputs).
             payload["own"] = treedef.unflatten([jnp.copy(x) for x in leaves])
         if buckets:
-            in_specs, out_specs = _fused_specs()
+            in_specs, out_specs = _fused_specs(buckets, validate)
             # Pallas calls carry no replication rule in older jax releases, so
             # the striped (on-device-encode) program opts out of the check;
             # its outputs are fully varying anyway.
             fn = shard_map(
-                _fused_local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                _make_fused_local(buckets, validate),
+                mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                 check_rep=not striped,
             )
-            args = []
-            for b in buckets:
-                for i in b.leaf_idx:
-                    x = leaves[i]
-                    target = padded_shapes[i]
-                    if target != tuple(x.shape):
-                        x = jnp.pad(x, [(0, t - s) for s, t in zip(x.shape, target)])
-                    args.append(x)
-            payload.update(fn(*args))
+            payload.update(fn(*_fused_args(leaves, buckets)))
         elif validate:
             payload["checksum"] = jnp.zeros((2,), jnp.uint32)
         return payload
+
+    # -- per-chunk programs for double-buffered D2H staging -------------------
+    # Chunk 0 is the own-copy snapshot (pure DMA payload, no collective);
+    # chunk i+1 runs bucket i's fused exchange/encode. staged_snapshot_fetch
+    # dispatches chunk g+1 while chunk g's outputs D2H-copy in the
+    # background, so the encode of stripe g+1 hides the DMA of stripe g.
+    # The handshake checksum is not folded into the chunked programs — the
+    # staged path recomputes it host-side over the fetched bytes.
+    def _make_chunk_fn(bucket):
+        in_specs, out_specs = _fused_specs([bucket], False)
+        fused = jax.jit(  # built + jitted once: chunk calls hit the jit cache
+            shard_map(
+                _make_fused_local([bucket], False),
+                mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_rep=not striped,
+            )
+        )
+
+        def chunk_fn(state):
+            leaves = treedef.flatten_up_to(state)
+            return fused(*_fused_args(leaves, [bucket]))
+        return chunk_fn
+
+    snapshot_chunk_fns: list[Any] = []
+    if include_own_copy:
+        _own_copy = jax.jit(lambda state: {"own": jax.tree.map(jnp.copy, state)})
+        snapshot_chunk_fns.append(_own_copy)
+    snapshot_chunk_fns.extend(_make_chunk_fn(b) for b in buckets)
 
     # -- restore: one inverse program (full-copy codec only) ------------------
     def _restore_local(*partner_bufs):
@@ -531,4 +609,363 @@ def build_snapshot_program(
         pcie_bytes=pcie_bytes,
         codec=codec,
         parity_group=parity_group,
+        snapshot_chunk_fns=tuple(snapshot_chunk_fns),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Double-buffered device staging (create path)
+# ---------------------------------------------------------------------------
+
+def staged_snapshot_fetch(
+    prog: SnapshotProgram, state: Any, *, double_buffer: bool = True
+) -> dict[str, Any]:
+    """Drive the snapshot's D2H staging through the per-chunk programs:
+    dispatch chunk *g+1*'s fused encode, then start chunk *g*'s asynchronous
+    device→host copy (``copy_to_host_async``) — the DMA of stripe *g*
+    overlaps the on-device encode of stripe *g+1*, so staging wall time
+    approaches max(encode, DMA) instead of their sum. ``double_buffer=False``
+    fetches each chunk synchronously before dispatching the next — the A/B
+    baseline the staging benchmark reports the overlap win against.
+
+    Returns the host (numpy) payload, merged across chunks — byte-identical
+    to fetching ``prog.snapshot_fn``'s payload minus the folded checksum
+    (the staged path recomputes the handshake checksum host-side).
+    """
+    fetched: list[Any] = []
+    for fn in prog.snapshot_chunk_fns:
+        out = fn(state)  # async dispatch: the device starts this chunk's encode
+        if double_buffer:
+            for x in jax.tree.leaves(out):
+                x.copy_to_host_async()  # D2H queued behind the chunk's compute
+            fetched.append(out)
+        else:
+            fetched.append(jax.tree.map(np.asarray, out))  # blocking fetch
+    payload: dict[str, Any] = {}
+    for out in fetched:
+        if double_buffer:
+            out = jax.tree.map(np.asarray, out)  # already host-resident
+        for key, val in out.items():
+            if isinstance(val, dict) and isinstance(payload.get(key), dict):
+                payload[key].update(val)
+            else:
+                payload[key] = val
+    return payload
+
+
+# ---------------------------------------------------------------------------
+# Fused striped RESTORE program — the mirror image of the on-device encode
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StripedRestoreProgram:
+    """Jit-able fused reconstruction for striped codecs + metadata.
+
+    ``restore_fn(state, parity, decode_rows, survivor_mask)`` rebuilds every
+    failed coordinate's shards ON DEVICE and returns origin-aligned leaves
+    (same convention as ``SnapshotProgram.restore_fn``). ``decode_rows`` /
+    ``survivor_mask`` are runtime arrays per failure axis (host-precomputed
+    by :func:`striped_decode_rows`), so ONE compiled program serves every
+    failure combination — the erasure solve happens on the tiny coefficient
+    matrix host-side, the byte passes run through the runtime-coefficient
+    GF(2^8) Pallas kernel (kernels/rs_decode.py).
+    """
+
+    restore_fn: Any
+    buckets: tuple[FusedBucket, ...]
+    pcie_bytes: int            # uploads: survivor shards + held stripes
+    host_decode_pcie_bytes: int  # the host-decode alternative's PCIe bill
+    codec: str
+    parity_group: int
+    rs_parity: int
+    axes: tuple[str, ...]      # failure axes needing decode_rows/mask entries
+
+
+def striped_decode_rows(
+    axis_size: int,
+    parity_group: int,
+    codec: str,
+    rs_parity: int,
+    failed: set[int] | tuple[int, ...],
+) -> tuple[np.ndarray, np.ndarray]:
+    """Host precompute for the device restore program: per failure-axis
+    coordinate, ONE decode row over the ``g + m`` canonical input slots
+    ``[group data 0..g-1, blobs 0..m-1]``.
+
+    Survivors get their one-hot identity row (the program then passes their
+    own fused buffer through); each failed coordinate gets its row of
+    ``gf256.erasure_decode_matrix`` — the e×e Cauchy-submatrix inversion
+    folded with the generator, computed here by Gaussian elimination once
+    per failure group. Returns ``(rows (size, g+m) uint32, mask (size,)
+    uint32)``; raises ``ValueError`` when the failure set exceeds the
+    codec's tolerance or destroys the blobs needed to cover it (mirroring
+    ``codec_recovery_plan``).
+    """
+    from repro.core import gf256
+
+    assert codec in ("xor", "rs"), codec
+    g = parity_group
+    m = 1 if codec == "xor" else rs_parity
+    assert axis_size % g == 0, (axis_size, g)
+    coef = np.ones((1, g), np.uint8) if codec == "xor" else gf256.cauchy_matrix(m, g)
+    failed = set(failed)
+    groups = dist.parity_groups(axis_size, g)
+    ng = len(groups)
+    rows = np.zeros((axis_size, g + m), np.uint8)
+    mask = np.ones(axis_size, np.uint32)
+    for r in failed:
+        mask[r] = 0
+    for gi, grp in enumerate(groups):
+        missing = [q for q, r in enumerate(grp.members) if r in failed]
+        present = [q for q in range(len(grp.members)) if q not in missing]
+        for q in present:
+            rows[grp.members[q], q] = 1
+        if not missing:
+            continue
+        if len(missing) > m:
+            raise ValueError(
+                f"group {gi} lost {len(missing)} members; "
+                f"codec {codec!r} tolerates {m}"
+            )
+        # A blob is usable iff every holder of its stripes survives.
+        usable = [
+            b for b in range(m)
+            if all(
+                h not in failed
+                for h in groups[dist.blob_holder_group(ng, gi, b)].members
+            )
+        ]
+        if len(usable) < len(missing):
+            raise ValueError(
+                f"group {gi}: {len(missing)} losses but only {len(usable)} "
+                f"intact redundancy blobs (codec {codec!r})"
+            )
+        D = gf256.erasure_decode_matrix(
+            g, coef, present, usable[: len(missing)], missing
+        )
+        for t, q in enumerate(missing):
+            rows[grp.members[q]] = D[t]
+    return rows.astype(np.uint32), mask
+
+
+def build_striped_restore_program(
+    mesh: Mesh,
+    state_sds: Any,
+    state_pspecs: Any,
+    *,
+    redundancy_axis: str = "data",
+    codec: str = "xor",
+    parity_group: int = 1,
+    rs_parity: int = 2,
+) -> StripedRestoreProgram:
+    """The fused inverse of the striped snapshot program (DESIGN.md §10).
+
+    Survivors H2D-upload their own shards and the parity stripes they hold;
+    everything else happens on device inside ONE ``shard_map``: stripes
+    inverse-route back to their origin group, a ring pass reassembles each
+    blob, a second ring collects the group's (mask-zeroed) data buffers, and
+    every coordinate applies its runtime decode row with the GF(2^8) Pallas
+    kernels — so PCIe carries stripes instead of fully decoded partner
+    copies and the reconstruction FLOPs move off the host. Bit-identical to
+    host ``codec.decode`` (the erasure solution is unique).
+
+    Constraints match the snapshot stripe path: ``parity_group`` must divide
+    every bucket's failure axis (ragged worlds snapshot via
+    ``emit_full_blobs`` and restore host-side).
+    """
+    assert codec in ("xor", "rs"), codec
+    assert parity_group >= 1
+    n_parity = 1 if codec == "xor" else rs_parity
+    g = parity_group
+
+    # Same bucketing as the snapshot program (must agree exactly: the parity
+    # payload this program consumes is the one the snapshot emitted).
+    snap = build_snapshot_program(
+        mesh, state_sds, state_pspecs,
+        redundancy_axis=redundancy_axis, include_own_copy=False,
+        validate=False, codec=codec, parity_group=parity_group,
+        rs_parity=rs_parity, emit_full_blobs=False,
+    )
+    buckets = snap.buckets
+    leaves_sds, treedef = jax.tree.flatten(state_sds)
+    leaves_ps = treedef.flatten_up_to(state_pspecs)
+    padded_shapes = {
+        i: _pad_shape(leaves_sds[i].shape, leaves_ps[i], mesh)
+        for b in buckets for i in b.leaf_idx
+    }
+    local_shapes = {
+        i: _local_shape(padded_shapes[i], leaves_ps[i], mesh)
+        for b in buckets for i in b.leaf_idx
+    }
+    axes = tuple(sorted({b.axis for b in buckets}))
+
+    def _ring_pairs(axis: str) -> list[tuple[int, int]]:
+        size = mesh.shape[axis]
+        groups = dist.parity_groups(size, g)
+        pairs = []
+        for grp in groups:
+            k = len(grp.members)
+            for q, member in enumerate(grp.members):
+                pairs.append((grp.members[(q + 1) % k], member))
+        return pairs
+
+    def _route_pairs(axis: str, b: int) -> list[tuple[int, int]]:
+        size = mesh.shape[axis]
+        groups = dist.parity_groups(size, g)
+        pairs = []
+        for gi, grp in enumerate(groups):
+            holder = groups[dist.blob_holder_group(len(groups), gi, b)]
+            for q, member in enumerate(grp.members):
+                pairs.append((member, holder.members[q]))
+        return pairs
+
+    def _restore_local(*flat_args):
+        from repro.kernels import ops as kops
+
+        n_leaf_args = sum(len(b.leaf_idx) for b in buckets)
+        leaf_args = flat_args[:n_leaf_args]
+        parity_args = flat_args[n_leaf_args : n_leaf_args + len(buckets)]
+        tail = flat_args[n_leaf_args + len(buckets):]
+        rows_by_axis = dict(zip(axes, tail[: len(axes)]))
+        mask_by_axis = dict(zip(axes, tail[len(axes):]))
+        by_leaf = dict(
+            zip([i for b in buckets for i in b.leaf_idx], leaf_args)
+        )
+
+        outs = []
+        for bucket, parity_local in zip(buckets, parity_args):
+            axis = bucket.axis
+            rows_arr = rows_by_axis[axis]
+            mask_arr = mask_by_axis[axis]
+            idx = jax.lax.axis_index(axis)
+            gi = idx // g
+            pos = idx % g
+            sw = bucket.words // g
+
+            # -- reassemble this group's m blobs from the routed stripes ------
+            blob_rows = []
+            for b in range(n_parity):
+                # inverse route: holder member q sends stripe q back to
+                # origin-group member q
+                mine = jax.lax.ppermute(
+                    parity_local[b], axis, dist.inverse_perm(_route_pairs(axis, b))
+                )
+                slots = [mine]
+                cur = mine
+                ring = _ring_pairs(axis)
+                for _t in range(1, g):
+                    cur = jax.lax.ppermute(cur, axis, ring)
+                    slots.append(cur)
+                stacked = jnp.stack(slots)                 # (g, sw)
+                order = (jnp.arange(g) - pos) % g          # canonical stripe order
+                blob_rows.append(jnp.take(stacked, order, axis=0).reshape(-1))
+
+            # -- ring-collect the group's (mask-zeroed) data buffers ----------
+            parts = [_to_u32_local(by_leaf[i]) for i in bucket.leaf_idx]
+            buf = jnp.concatenate(parts) if parts else jnp.zeros(0, jnp.uint32)
+            if buf.shape[0] < bucket.words:
+                buf = jnp.pad(buf, (0, bucket.words - buf.shape[0]))
+            buf = buf * jax.lax.dynamic_slice(mask_arr, (idx,), (1,))[0]
+            slots = [buf]
+            cur = buf
+            ring = _ring_pairs(axis)
+            for _t in range(1, g):
+                cur = jax.lax.ppermute(cur, axis, ring)
+                slots.append(cur)
+            stacked = jnp.stack(slots)
+            order = (jnp.arange(g) - pos) % g
+            canonical = jnp.take(stacked, order, axis=0)   # (g, words)
+            group_mask = jax.lax.dynamic_slice(mask_arr, (gi * g,), (g,))
+            canonical = canonical * group_mask[:, None]
+
+            # -- apply this coordinate's decode row (runtime coefficients) ----
+            inputs = jnp.concatenate([canonical, jnp.stack(blob_rows)])  # (g+m, words)
+            my_row = jax.lax.dynamic_slice(rows_arr, (idx, 0), (1, g + n_parity))
+            rebuilt = kops.gf256_matmul_dyn(inputs, my_row)[0]           # (words,)
+
+            # -- unpack the fused buffer back into origin-aligned leaves ------
+            for i, off in zip(bucket.leaf_idx, bucket.word_offsets):
+                words = _leaf_words(local_shapes[i], leaves_sds[i].dtype.itemsize)
+                leaf = _from_u32_local(
+                    rebuilt[off : off + words],
+                    np.dtype(leaves_sds[i].dtype),
+                    local_shapes[i],
+                )
+                leaf_axes: set[str] = set()
+                for e in _full_rank(leaves_ps[i], len(leaves_sds[i].shape)):
+                    leaf_axes.update(_axes_of(e))
+                for a in bucket.axes:
+                    if a not in leaf_axes:
+                        leaf = jax.lax.all_gather(leaf, a)[0]
+                outs.append(leaf)
+        return tuple(outs)
+
+    def restore_fn(state, parity, decode_rows, survivor_mask):
+        """state: the (survivor) state pytree — failed coordinates' shards
+        may hold garbage, the mask zeroes them before reconstruction.
+        parity: the snapshot payload's ``parity`` dict (uploaded stripes).
+        decode_rows / survivor_mask: per-axis arrays from
+        ``striped_decode_rows`` (runtime inputs: no recompile per failure).
+        Returns {leaf index -> reconstructed full leaf} like
+        ``SnapshotProgram.restore_fn``."""
+        leaves = treedef.flatten_up_to(state)
+        in_specs = (
+            tuple(
+                P(*_full_rank(leaves_ps[i], len(leaves_sds[i].shape)))
+                for b in buckets for i in b.leaf_idx
+            )
+            + tuple(
+                P(None, b.axes) if b.axes else P(None, None) for b in buckets
+            )
+            + tuple(P(None) for _ in axes) * 2
+        )
+        out_specs = tuple(
+            P(*_full_rank(leaves_ps[i], len(leaves_sds[i].shape)))
+            for b in buckets for i in b.leaf_idx
+        )
+        fn = shard_map(
+            _restore_local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False,
+        )
+        args = []
+        for b in buckets:
+            for i in b.leaf_idx:
+                x = leaves[i]
+                target = padded_shapes[i]
+                if target != tuple(x.shape):
+                    x = jnp.pad(x, [(0, t - s) for s, t in zip(x.shape, target)])
+                args.append(x)
+        args += [parity[b.tag] for b in buckets]
+        args += [jnp.asarray(decode_rows[a], jnp.uint32) for a in axes]
+        args += [jnp.asarray(survivor_mask[a], jnp.uint32) for a in axes]
+        outs = fn(*args)
+        result = {}
+        pos = 0
+        for b in buckets:
+            for i in b.leaf_idx:
+                y = outs[pos]
+                pos += 1
+                orig = leaves_sds[i].shape
+                if tuple(y.shape) != tuple(orig):
+                    y = y[tuple(slice(0, s) for s in orig)]
+                result[str(i)] = y
+        return result
+
+    # PCIe bill: survivors upload own shards + every held stripe; the
+    # host-decode alternative instead downloads stripes + survivor exchange
+    # buffers, solves on host, and uploads fully decoded buffers back.
+    fused = sum(
+        b.words * 4 * int(np.prod([mesh.shape[a] for a in b.axes] or [1]))
+        for b in buckets
+    )
+    stripes_bytes = n_parity * fused // max(g, 1)
+    return StripedRestoreProgram(
+        restore_fn=restore_fn,
+        buckets=buckets,
+        pcie_bytes=fused + stripes_bytes,
+        host_decode_pcie_bytes=2 * fused + stripes_bytes,
+        codec=codec,
+        parity_group=parity_group,
+        rs_parity=rs_parity,
+        axes=axes,
     )

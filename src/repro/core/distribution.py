@@ -198,6 +198,18 @@ def group_of(rank: int, group_size: int) -> int:
     return rank // group_size
 
 
+def blob_holder_group(n_groups: int, gi: int, b: int) -> int:
+    """Holder group of group ``gi``'s redundancy blob ``b``: neighbor
+    ``gi+1+b`` (wrapping, skipping ``gi`` itself unless it is the only group
+    in the world). The SINGLE source of the blob-placement rule — the host
+    codec's ``placement``, the device tier's stripe routing (encode and
+    restore), and the decode-rows precompute all derive from it; changing
+    the policy here changes every tier together."""
+    others = [(gi + 1 + t) % n_groups for t in range(n_groups)]
+    others = [h for h in others if h != gi] or [gi]
+    return others[b % len(others)]
+
+
 def parity_recovery_plan(
     n_prev: int, failed: set[int], group_size: int
 ) -> dict[int, int]:

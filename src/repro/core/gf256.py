@@ -82,6 +82,31 @@ def gf_addmul_into(acc: np.ndarray, c: int, buf: np.ndarray) -> None:
         acc[:n] ^= EXP_TABLE[LOG32[buf[:n]] + int(LOG32[c])]
 
 
+_MUL_TABLES: dict[int, np.ndarray] = {}
+
+
+def mul_table(c: int) -> np.ndarray:
+    """The 256-entry product table of a fixed coefficient: ``T[x] = c·x``.
+
+    Jerasure-style strength reduction for hot decode loops whose coefficients
+    are known up front (the precomputed erasure decode matrix): the per-byte
+    product becomes ONE gather ``T[buf]`` instead of the log/antilog path's
+    two gathers and an int32 add — ~5x faster per pass on large buffers.
+    Tables are tiny (256 B) and cached per coefficient."""
+    t = _MUL_TABLES.get(c)
+    if t is None:
+        t = gf_mul_bytes(int(c), np.arange(256, dtype=np.uint8))
+        _MUL_TABLES[c] = t
+    return t
+
+
+def gf_addmul_table_into(acc: np.ndarray, table: np.ndarray, buf: np.ndarray) -> None:
+    """acc ^= T[buf] over the common prefix (T from :func:`mul_table`)."""
+    n = min(acc.shape[0], buf.shape[0])
+    if n:
+        np.bitwise_xor(acc[:n], table[buf[:n]], out=acc[:n])
+
+
 def cauchy_matrix(m: int, k: int) -> np.ndarray:
     """(m, k) Cauchy generator: C[j][i] = (x_j ⊕ y_i)^-1, x_j = j, y_i = m+i.
 
@@ -124,6 +149,57 @@ def solve_gf(A: np.ndarray, rhs: list[np.ndarray]) -> list[np.ndarray]:
             A[r] ^= EXP_TABLE[LOG32[A[col]] + int(LOG32[c])]
             gf_addmul_into(rhs[r], c, rhs[col])
     return rhs
+
+
+def gf_matrix_inverse(A: np.ndarray) -> np.ndarray:
+    """Inverse of an invertible (e, e) GF(2^8) matrix (a Cauchy submatrix):
+    solve A·X = I column set via the same elimination as the data path."""
+    e = A.shape[0]
+    eye = np.eye(e, dtype=np.uint8)
+    return np.stack(solve_gf(A, [eye[r] for r in range(e)]))
+
+
+def erasure_decode_matrix(
+    k: int,
+    coef: np.ndarray,
+    present_idx: list[int],
+    blob_rows: list[int],
+    missing: list[int],
+) -> np.ndarray:
+    """Fold the erasure solve into ONE GF(2^8) generator row per lost shard.
+
+    For e = len(missing) losses with e surviving parity rows ``blob_rows``,
+    the Gaussian solve ``A·x = syndromes`` (A the e×e submatrix
+    ``coef[blob_rows][:, missing]``) collapses — since the syndromes are
+    themselves linear in the inputs — into a *precomputed* decode matrix D of
+    shape ``(e, k + m)`` over the concatenated input rows
+    ``[data_0..data_{k-1}, blob_0..blob_{m-1}]``:
+
+        rebuilt[t] = ⊕_{s ∈ present} D[t, s] · data_s
+                     ⊕_{j ∈ blob_rows} D[t, k + j] · blob_j
+
+    with D[t, s] = ⊕_j W[t, j]·coef[j, s] and D[t, k+j] = W[t, j] where
+    W = A^{-1}. Columns for missing data shards and unused parity rows are
+    zero. This is what turns decode into the exact mirror of encode: one
+    coefficient matmul, chunkable over byte ranges on the host and executable
+    by the (runtime-coefficient) Pallas kernel on device — no per-buffer
+    Gaussian passes on the recovery path.
+    """
+    e = len(missing)
+    m = coef.shape[0]
+    assert len(blob_rows) == e, (blob_rows, missing)
+    D = np.zeros((e, k + m), np.uint8)
+    if e == 0:
+        return D
+    A = coef[np.ix_(blob_rows, missing)].astype(np.uint8)
+    W = gf_matrix_inverse(A)
+    for t in range(e):
+        for jj, j in enumerate(blob_rows):
+            w = int(W[t, jj])
+            D[t, k + j] = w
+            for s in present_idx:
+                D[t, s] ^= gf_mul(w, int(coef[j, s]))
+    return D
 
 
 # ---------------------------------------------------------------------------

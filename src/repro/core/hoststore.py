@@ -29,6 +29,7 @@ migrated into ``parity`` stripes at load time — see ``core/disk.py``.)
 
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -75,6 +76,11 @@ class HostStore:
         self.alive = True
         # (bank, key) -> reusable uint8 arena; see module docstring.
         self._arenas: dict[tuple[int, Any], np.ndarray] = {}
+        # Serializes arena growth + payload-dict writes when the pipeline
+        # drains on multiple workers (a holder store receives stripes from
+        # units owned by different workers). Distinct arena KEYS never share
+        # bytes, so only the bookkeeping needs the lock, never the memcpys.
+        self.lock = threading.Lock()
 
     # ------------------------------------------------------------------ #
     # arena leasing (zero-copy staging)
@@ -90,13 +96,15 @@ class HostStore:
     def lease(self, key: Any, nbytes: int) -> np.ndarray:
         """A reusable uint8 arena view of exactly ``nbytes`` for the upcoming
         checkpoint. Grown (never shrunk) when the payload grows; steady-state
-        checkpoints allocate nothing."""
+        checkpoints allocate nothing. Thread-safe: concurrent pipeline
+        workers may lease distinct keys from the same store."""
         k = (self.staging_bank, key)
-        buf = self._arenas.get(k)
-        if buf is None or buf.nbytes < nbytes:
-            buf = np.empty(nbytes, np.uint8)
-            self._arenas[k] = buf
-        return buf[:nbytes]
+        with self.lock:
+            buf = self._arenas.get(k)
+            if buf is None or buf.nbytes < nbytes:
+                buf = np.empty(nbytes, np.uint8)
+                self._arenas[k] = buf
+            return buf[:nbytes]
 
     def wipe(self) -> None:
         """Host failure: all in-memory snapshot data on this rank is gone."""

@@ -125,6 +125,41 @@ def rs_encode_arrays(arrays: list[jax.Array], coefs: tuple[tuple[int, ...], ...]
     return gf256_matmul(jnp.stack(views), coefs)
 
 
+@jax.jit
+def gf256_matmul_dyn(stacked: jax.Array, coefs: jax.Array) -> jax.Array:
+    """Erasure DECODE over axis 0 of (k, n) uint32 with a runtime (m, k)
+    coefficient matrix (gf256.erasure_decode_matrix rows — which ranks died
+    is data, not a compile-time constant, so the decode program compiles once
+    and serves every failure combination). Returns (m, n) uint32; the ref
+    oracle works byte-wise, so the dispatch bitcasts around it."""
+    from repro.kernels import rs_decode as _rsd_k
+
+    assert stacked.ndim == 2 and stacked.dtype == jnp.uint32
+    k, n = stacked.shape
+    assert coefs.ndim == 2 and coefs.shape[1] == k, (coefs.shape, k)
+    m = coefs.shape[0]
+    if _use_ref():
+        u8 = jax.lax.bitcast_convert_type(stacked.reshape(k, n, 1), jnp.uint8)
+        out = ref.gf256_matmul_dyn(u8.reshape(k, n * 4), coefs)
+        return jax.lax.bitcast_convert_type(out.reshape(m, n, 4), jnp.uint32)
+    tile = _rsd_k.SUBLANES * _rsd_k.BLOCK_COLS
+    npad = (-n) % tile
+    padded = jnp.pad(stacked, ((0, 0), (0, npad))) if npad else stacked
+    rows = padded.shape[1] // _rsd_k.BLOCK_COLS
+    x3 = padded.reshape(k, rows, _rsd_k.BLOCK_COLS)
+    out = _rsd_k.rs_decode_pallas(x3, coefs, interpret=_interpret())
+    return out.reshape(m, -1)[:, :n]
+
+
+def rs_decode_arrays(arrays: list[jax.Array], coefs: jax.Array) -> jax.Array:
+    """Erasure decode of arrays of any dtype/length -> (m, n) uint32 rebuilt
+    shards: stack [survivors ‖ intact blobs] and apply the decode matrix."""
+    views = [as_u32(a) for a in arrays]
+    n = max(v.shape[0] for v in views)
+    views = [_pad_to(v, n) if v.shape[0] < n else v for v in views]
+    return gf256_matmul_dyn(jnp.stack(views), jnp.asarray(coefs))
+
+
 # ---------------------------------------------------------------------------
 # Reshard row gather (elastic N-to-M recovery)
 # ---------------------------------------------------------------------------

@@ -38,6 +38,24 @@ def gf256_matmul(stacked: jax.Array, coefs: tuple[tuple[int, ...], ...]) -> jax.
     return jnp.stack(rows)
 
 
+def gf256_matmul_dyn(stacked: jax.Array, coefs: jax.Array) -> jax.Array:
+    """Erasure decode: out[j] = ⊕_i coefs[j, i] · x[i] over GF(2^8), with a
+    RUNTIME (m, k) coefficient matrix (the failure-dependent decode rows from
+    gf256.erasure_decode_matrix — encode's generator is static, decode's is
+    not). stacked: (k, n) uint8 -> (m, n) uint8, table definition as above.
+    """
+    from repro.core.gf256 import EXP_TABLE, LOG32
+
+    assert stacked.dtype == jnp.uint8 and stacked.ndim == 2
+    assert coefs.ndim == 2 and coefs.shape[1] == stacked.shape[0]
+    exp = jnp.asarray(EXP_TABLE)
+    log = jnp.asarray(LOG32)
+    logx = jnp.take(log, stacked.astype(jnp.int32), axis=0)       # (k, n)
+    logc = jnp.take(log, coefs.astype(jnp.int32), axis=0)         # (m, k)
+    terms = jnp.take(exp, logc[:, :, None] + logx[None, :, :], axis=0)  # (m, k, n)
+    return jax.lax.reduce(terms, jnp.uint8(0), jax.lax.bitwise_xor, (1,))
+
+
 def checksum(x: jax.Array) -> jax.Array:
     """Fletcher-style dual checksum of a uint32 buffer -> (2,) uint32.
 

@@ -53,7 +53,12 @@ def main() -> None:
                          "with the next train steps (DESIGN.md §9)")
     ap.add_argument("--async-workers", type=int, default=1,
                     help="background pipeline workers for --checkpoint-mode async "
-                         "(0 drains at the next step boundary instead)")
+                         "(0 drains at the next step boundary instead); >1 also "
+                         "parallelizes recovery across failure groups")
+    ap.add_argument("--restore-mode", choices=["pipelined", "sync"], default="pipelined",
+                    help="pipelined drains the chunked TRANSFER/DECODE/VERIFY "
+                         "recovery pipeline (DESIGN.md §10); sync keeps the "
+                         "serial per-origin decode baseline")
     ap.add_argument("--out", default=None, help="write history JSON here")
     args = ap.parse_args()
 
@@ -88,6 +93,7 @@ def main() -> None:
             rs_parity=args.rs_parity,
             compress=args.compress,
             async_workers=args.async_workers,
+            restore_mode=args.restore_mode,
         ),
     )
     trainer = Trainer(model, tcfg, injector=injector)

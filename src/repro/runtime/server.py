@@ -209,8 +209,12 @@ class Server:
         else:
             self.cluster.stabilize("spare")
             meta = self.engine.restore()
+            s = self.engine.stats
             log.info(
-                "sessions rolled back to pos %s (codec=%s/t%d)",
+                "sessions rolled back to pos %s (codec=%s/t%d, restore=%s "
+                "%.3fs: %d chunks, %.1f MiB rebuilt)",
                 meta.get("pos"), self.engine.codec.name, self.engine.codec.tolerance(),
+                self.scfg.engine.restore_mode, s.last_restore_s,
+                s.last_restore_chunks, s.last_restore_bytes_rebuilt / 2**20,
             )
         self.n_recoveries += 1

@@ -311,11 +311,15 @@ class Trainer:
         # Restored entities include the data pipeline + timers + train state;
         # the loop continues from the checkpointed step.
         self.n_recoveries += 1
+        s = self.engine.stats
         log.info(
-            "recovered to step %s (policy=%s, codec=%s/t%d, load_factor=%.2f)",
+            "recovered to step %s (policy=%s, codec=%s/t%d, load_factor=%.2f, "
+            "restore=%s %.3fs: %d chunks, %.1f MiB rebuilt)",
             meta.get("step"), report.policy,
             self.engine.codec.name, self.engine.codec.tolerance(),
             report.load_factor,
+            self.tcfg.engine.restore_mode, s.last_restore_s,
+            s.last_restore_chunks, s.last_restore_bytes_rebuilt / 2**20,
         )
 
     def _shrink_engine(self, report) -> dict[str, Any]:

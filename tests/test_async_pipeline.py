@@ -1,11 +1,14 @@
-"""The zero-copy chunked checkpoint pipeline (DESIGN.md §9): arena staging,
-encode/transfer/verify chunking, the pointer-swap commit point, and
-sync-vs-async restore equivalence across codecs."""
+"""The zero-copy chunked checkpoint pipeline (DESIGN.md §9) and its restore
+mirror (§10): arena staging, encode/transfer/verify chunking, the
+pointer-swap commit point, sync-vs-async creation equivalence, and
+sync-vs-pipelined restore equivalence across codecs — including multi-worker
+drains, mid-restore kill points, and reconstruction checksum validation."""
 
 import numpy as np
 import pytest
 
 from repro.core.checkpoint import CheckpointEngine, EngineConfig, FaultDuringCheckpoint
+from repro.core.integrity import IntegrityError
 from repro.core.serialization import pack_bytes, tree_packed_nbytes, unpack_bytes
 
 
@@ -259,3 +262,258 @@ def test_discard_pending_joins_background_drain():
     assert eng.stats.aborted == 1
     meta = eng.restore()  # the committed step-1 checkpoint is intact
     assert meta["step"] == 1
+
+
+# --------------------------------------------------------------------------- #
+# the restore pipeline (DESIGN.md §10): sync vs pipelined equivalence
+# --------------------------------------------------------------------------- #
+
+RESTORE_KILLS = {"copy": (2,), "xor": (5,), "rs": (5, 6)}  # rs: m=2 burst
+
+
+def _cfg(codec, **kw):
+    base = CODECS[codec]
+    return EngineConfig(**{**base.__dict__, **kw})
+
+
+@pytest.mark.parametrize("codec", list(CODECS))
+@pytest.mark.parametrize("workers", [0, 1, 4])
+def test_pipelined_restore_bit_identical_to_sync(codec, workers):
+    """The chunked TRANSFER/DECODE/VERIFY restore pipeline lands on exactly
+    the bytes the serial per-origin decode produces — serial drain and
+    multi-worker parallel drain alike — with matching recovery counters."""
+    n = 8
+    results = {}
+    counters = {}
+    for mode in ("sync", "pipelined"):
+        eng = CheckpointEngine(
+            n, _cfg(codec, restore_mode=mode, async_workers=workers,
+                    restore_chunk_bytes=256),  # several chunks per unit
+        )
+        vec = ShardedVec(n)
+        eng.register("state", vec)
+        assert eng.checkpoint({"step": 4})
+        for r in RESTORE_KILLS[codec]:
+            eng.stores[r].wipe()
+        for d in vec.data:
+            d += 7.0
+        meta = eng.restore()
+        assert meta["step"] == 4
+        results[mode] = [d.copy() for d in vec.data]
+        counters[mode] = (
+            eng.stats.zero_comm_restores,
+            eng.stats.adopted_restores,
+            eng.stats.reconstructed_restores,
+        )
+        eng.close()
+    for a, b in zip(results["sync"], results["pipelined"]):
+        assert np.array_equal(a, b)
+    assert counters["sync"] == counters["pipelined"]
+
+
+@pytest.mark.parametrize("codec", list(CODECS))
+def test_pipelined_restore_elastic_bit_identical(codec):
+    """restore_elastic recovers through the same pipeline: N=8 -> M=6 after
+    a failure, bytes equal to the sync-mode elastic restore."""
+    n, m = 8, 6
+    results = {}
+    for mode in ("sync", "pipelined"):
+        eng = CheckpointEngine(n, _cfg(codec, restore_mode=mode, async_workers=2))
+        vec = ShardedVec(n)
+        eng.register("state", vec)
+        assert eng.checkpoint({"step": 3})
+        eng.stores[5].wipe()
+        eng._alive_fn = lambda: {r for r, s in eng.stores.items() if s.alive}
+        meta = eng.restore_elastic(m)
+        assert meta["step"] == 3
+        results[mode] = [d.copy() for d in vec.data]
+        eng.close()
+    for a, b in zip(results["sync"], results["pipelined"]):
+        assert np.array_equal(a, b)
+
+
+def test_pipelined_restore_ragged_groups_all_failure_combos():
+    """Ragged last group (n=10, g=4 -> {8, 9}) under rs(m=2): every failure
+    combo within tolerance restores bit-identically through the pipeline."""
+    import itertools
+
+    n = 10
+    for kills in itertools.chain(
+        itertools.combinations(range(n), 1), [(0, 1), (8, 9), (3, 9), (4, 7)]
+    ):
+        eng = CheckpointEngine(
+            n, EngineConfig(codec="rs", parity_group=4, rs_parity=2,
+                            restore_mode="pipelined", restore_chunk_bytes=512),
+        )
+        vec = ShardedVec(n)
+        eng.register("state", vec)
+        assert eng.checkpoint({"step": 1})
+        orig = [d.copy() for d in vec.data]
+        for r in kills:
+            eng.stores[r].wipe()
+        for d in vec.data:
+            d *= -1.0
+        eng.restore()
+        for r in range(n):
+            assert np.array_equal(vec.data[r], orig[r]), (kills, r)
+        eng.close()
+
+
+def test_mid_restore_kill_at_every_chunk_leaves_engine_recoverable():
+    """A rank dying at any chunk of the restore pipeline cannot corrupt the
+    recovery: unit inputs are captured by reference at prep, so the restore
+    completes bit-identically, the committed checkpoint survives untouched,
+    and a SECOND restore rebuilds the newly dead rank too."""
+    n = 8
+    base = EngineConfig(codec="rs", parity_group=4, rs_parity=2,
+                        restore_mode="pipelined", restore_chunk_bytes=256,
+                        async_workers=0)  # serial drain: deterministic chunks
+    probe = CheckpointEngine(n, base)
+    pv = ShardedVec(n)
+    probe.register("state", pv)
+    assert probe.checkpoint({"step": 1})
+    probe.stores[5].wipe()
+    chunk_count = {"n": 0}
+    probe._fault_hook = lambda ph: chunk_count.__setitem__(
+        "n", chunk_count["n"] + (ph == "restore_chunk"))
+    probe.restore()
+    assert chunk_count["n"] >= 3
+
+    for kill_chunk in range(chunk_count["n"]):
+        state = {"chunks": 0, "armed": False}
+
+        def hook(phase):
+            if phase == "restore_chunk" and state["armed"]:
+                if state["chunks"] == kill_chunk:
+                    state["armed"] = False
+                    eng.stores[6].wipe()  # a SURVIVOR dies mid-restore
+                state["chunks"] += 1
+
+        eng = CheckpointEngine(n, base, fault_hook=hook)
+        vec = ShardedVec(n)
+        eng.register("state", vec)
+        assert eng.checkpoint({"step": 1})
+        orig = [d.copy() for d in vec.data]
+        eng.stores[5].wipe()
+        for d in vec.data:
+            d += 3.0
+        state["armed"] = True
+        meta = eng.restore()  # completes from the captured references
+        assert meta["step"] == 1
+        for r in range(n):
+            assert np.array_equal(vec.data[r], orig[r]), (kill_chunk, r)
+        # the engine is still recoverable: rank 6's death is a fresh failure
+        # against the SAME committed checkpoint — an m=2 burst in group
+        # {4..7}, whose two blobs stripe over the intact group {0..3}
+        for d in vec.data:
+            d += 11.0
+        meta = eng.restore()
+        assert meta["step"] == 1
+        for r in range(n):
+            assert np.array_equal(vec.data[r], orig[r]), (kill_chunk, r)
+        eng.close()
+
+
+def test_restore_verify_catches_corrupted_stripe():
+    """VERIFY recomputes the replicated capture-time checksum over every
+    codec-rebuilt shard: flipping a hosted parity stripe's byte after the
+    commit makes the pipelined restore raise instead of silently restoring
+    garbage (the sync path has no such guard)."""
+    n = 8
+    eng = CheckpointEngine(
+        n, EngineConfig(codec="rs", parity_group=4, rs_parity=2,
+                        restore_mode="pipelined", restore_chunk_bytes=256),
+    )
+    eng.register("state", ShardedVec(n))
+    assert eng.checkpoint({"step": 1})
+    eng.stores[1].wipe()
+    # corrupt one stripe of group 0's blob 0 on its holder (group 1 hosts it)
+    for r in range(n):
+        st = eng.stores[r]
+        if not st.alive:
+            continue
+        stripes = st.buffer.read_only.parity.get(0, {})
+        for key, stripe in stripes.items():
+            if key[0] == "state" and key[1] == 0:
+                stripe[0] ^= 0xFF
+                break
+        else:
+            continue
+        break
+    with pytest.raises(IntegrityError):
+        eng.restore()
+    eng.close()
+
+
+def test_multiworker_create_drain_bit_identical():
+    """async_workers > 1 shards the CREATE pipeline's units across workers
+    (per-store locks); the committed bytes equal the single-worker drain's,
+    and a restore out of them is bit-identical."""
+    n = 12
+    results = {}
+    for workers in (1, 4):
+        eng = CheckpointEngine(
+            n, EngineConfig(codec="rs", parity_group=3, rs_parity=2,
+                            async_workers=workers),
+        )
+        vec = ShardedVec(n)
+        eng.register("state", vec)
+        assert eng.checkpoint_async({"step": 2})
+        assert eng.finalize_async() is True
+        snap = {
+            r: np.asarray(eng.stores[r].buffer.read_only.own["state"][0]).copy()
+            for r in range(n)
+        }
+        parity = {
+            r: {
+                (gi, k): v.copy()
+                for gi, d in eng.stores[r].buffer.read_only.parity.items()
+                for k, v in d.items()
+            }
+            for r in range(n)
+        }
+        eng.stores[7].wipe()
+        eng.restore()
+        results[workers] = ([d.copy() for d in vec.data], snap, parity)
+        eng.close()
+    (d1, s1, p1), (d4, s4, p4) = results[1], results[4]
+    for a, b in zip(d1, d4):
+        assert np.array_equal(a, b)
+    for r in range(n):
+        assert np.array_equal(s1[r], s4[r])
+        assert set(p1[r]) == set(p4[r])
+        for k in p1[r]:
+            assert np.array_equal(p1[r][k], p4[r][k]), (r, k)
+
+
+def test_restore_reuses_arenas_steady_state():
+    """Back-to-back restores of the same failure lease the same decode/blob
+    arenas (zero steady-state allocation on the recovery path)."""
+    n = 8
+    eng = CheckpointEngine(
+        n, EngineConfig(codec="rs", parity_group=4, rs_parity=2,
+                        restore_mode="pipelined"),
+    )
+    vec = ShardedVec(n)
+    eng.register("state", vec)
+    assert eng.checkpoint({"step": 1})
+    eng.stores[1].wipe()
+    eng.restore()
+    restore_arenas = {
+        r: {
+            k: v.__array_interface__["data"][0]
+            for k, v in eng.stores[r]._arenas.items()
+            if isinstance(k[1], tuple) and k[1][0] == "restore"
+        }
+        for r in range(n)
+    }
+    assert any(restore_arenas.values())  # the decode did lease arenas
+    eng.restore()
+    for r in range(n):
+        after = {
+            k: v.__array_interface__["data"][0]
+            for k, v in eng.stores[r]._arenas.items()
+            if isinstance(k[1], tuple) and k[1][0] == "restore"
+        }
+        assert after == restore_arenas[r], f"rank {r} re-allocated restore arenas"
+    eng.close()

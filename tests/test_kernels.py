@@ -112,6 +112,62 @@ def test_rs_encode_arrays_matches_host_reference():
 
 
 # ---------------------------------------------------------------------------
+# Runtime-coefficient GF(2^8) matmul (erasure DECODE kernel)
+# ---------------------------------------------------------------------------
+
+@given(
+    k=st.integers(min_value=1, max_value=5),
+    m=st.integers(min_value=1, max_value=3),
+    n=st.integers(min_value=1, max_value=4000),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_gf256_matmul_dyn_matches_static(k, m, n, seed):
+    """The runtime-coefficient decode kernel computes the same GF(2^8)
+    matmul as the compile-time-constant encode kernel for the same matrix."""
+    r = np.random.default_rng(seed)
+    coefs = _cauchy_tuple(m, k)
+    words = r.integers(0, 2**32, size=(k, n), dtype=np.uint32)
+    got = np.asarray(
+        ops.gf256_matmul_dyn(jnp.asarray(words), jnp.asarray(np.array(coefs, np.uint8)))
+    )
+    want = np.asarray(ops.gf256_matmul(jnp.asarray(words), coefs))
+    assert np.array_equal(got, want)
+
+
+def test_gf256_matmul_dyn_reconstructs_erasures():
+    """End-to-end device erasure solve: encode with the static kernel, zero
+    the 'lost' rows, rebuild them with erasure_decode_matrix rows through the
+    dyn kernel — the on-device mirror of codec.decode."""
+    from repro.core.gf256 import cauchy_matrix, erasure_decode_matrix
+
+    r = np.random.default_rng(7)
+    k, m = 4, 2
+    C = cauchy_matrix(m, k)
+    data = r.integers(0, 2**32, size=(k, 3001), dtype=np.uint32)
+    blobs = np.asarray(ops.gf256_matmul(jnp.asarray(data), _cauchy_tuple(m, k)))
+    for missing in ([1], [0, 3], [2, 1]):
+        miss = sorted(missing)
+        present = [i for i in range(k) if i not in miss]
+        D = erasure_decode_matrix(k, C, present, list(range(len(miss))), miss)
+        inputs = np.concatenate([data, blobs])
+        for i in miss:
+            inputs[i] = 0  # the erased shards
+        out = np.asarray(
+            ops.gf256_matmul_dyn(jnp.asarray(inputs), jnp.asarray(D))
+        )
+        for t, i in enumerate(miss):
+            assert np.array_equal(out[t], data[i]), (missing, i)
+        # Pallas SWAR chain == the log/antilog-table ref oracle, byte for byte
+        want = np.asarray(
+            ref.gf256_matmul_dyn(
+                jnp.asarray(inputs.view(np.uint8).reshape(inputs.shape[0], -1)),
+                jnp.asarray(D),
+            )
+        )
+        assert np.array_equal(out.view(np.uint8).reshape(out.shape[0], -1), want)
+
+
+# ---------------------------------------------------------------------------
 # Checksum
 # ---------------------------------------------------------------------------
 
