@@ -10,13 +10,18 @@ dry-run roofline (see §Roofline checkpoint rows).
 The async rows measure the **blocked time** of the pipelined path: phase A
 capture + whatever of phase B the overlap window didn't hide (the window is
 the simulated train step; the benchmark waits for the background drain the
-way a real step would run concurrently). ``RESULTS`` carries the
-machine-readable numbers run.py folds into BENCH_results.json:
-GB/s creation throughput, modeled PCIe bytes, speedup, overlap efficiency.
+way a real step would run concurrently). The tier-flush rows (DESIGN.md §12)
+compare that blocked time against the same engine with a disk rung flushing
+every commit — the background flush must stay off the critical path (<10%
+overhead is the acceptance target; ``run.py --smoke`` gates at 20%).
+``RESULTS`` carries the machine-readable numbers run.py folds into
+BENCH_results.json: GB/s creation throughput, modeled PCIe bytes, speedup,
+overlap efficiency, tier-flush overhead + write throughput.
 """
 
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -140,6 +145,70 @@ def run_staging(mbytes: int = 8, repeats: int = 3) -> tuple[float, float, int]:
     return times[False], times[True], total
 
 
+def run_tier_flush(
+    n: int = 8, bytes_per_rank: int = 1 << 20, repeats: int = 12
+) -> dict:
+    """Background disk-tier flush (DESIGN.md §12): compare the async blocked
+    time (capture + finalize join) WITH a disk rung flushing every commit
+    against a baseline that writes the SAME generation to disk out-of-band
+    between steps — the A/B isolates the cost of the *engine-integrated*
+    background flush (snapshot staging at the commit point, deferred kick,
+    bank-conflict discipline) from the cache/page-cache side-effects any
+    disk write pays regardless of who issues it. The flush runs on the
+    drain pool after the pointer swap; the acceptance criterion is that it
+    adds <10% to the blocked capture window. Also reports the flush's own
+    wall time and throughput (the background cost the per-level Daly
+    schedule consumes)."""
+    import shutil
+    import tempfile
+
+    from repro.core import storage
+
+    tmp = tempfile.mkdtemp(prefix="bench-tier-")
+    out: dict = {}
+    try:
+        engines = {}
+        oob_tier = storage.DiskTier(storage.disk(os.path.join(tmp, "oob"), every=1))
+        for tag, tiers in [
+            ("base", ()),
+            ("flush", (storage.disk(os.path.join(tmp, "eng"), every=1),)),
+        ]:
+            eng = CheckpointEngine(
+                n, EngineConfig(parity_group=4, validate=True, tiers=tiers)
+            )
+            pay = _Payload(n, bytes_per_rank)
+            eng.register("domain", pay)
+            eng.checkpoint({"step": 0})  # warm
+            eng._join_flush()
+            best = float("inf")
+            for i in range(repeats):
+                best = min(best, _blocked_checkpoint(eng, {"step": i + 1}, True))
+                eng._join_flush()
+                if tag == "base":
+                    # equalize disk/cache side-effects: same bytes written,
+                    # just not through the engine's background machinery
+                    oob_tier.flush(storage.capture_snapshot(eng))
+                for d in pay.data:  # the inter-checkpoint "train step": the
+                    d *= np.float32(1.0)  # live state is touched either way
+            engines[tag] = eng
+            out[f"blocked_s_{tag}"] = best
+        eng = engines["flush"]
+        eng._join_flush()
+        out["tier_flush_overhead"] = max(
+            0.0, out["blocked_s_flush"] / max(out["blocked_s_base"], 1e-9) - 1.0
+        )
+        out["flush_s"] = eng.stats.last_flush_s
+        out["flush_bytes"] = eng.stats.last_flush_bytes
+        out["flush_gbps"] = eng.stats.last_flush_bytes / max(eng.stats.last_flush_s, 1e-9) / 1e9
+        out["tier_flushes"] = eng.stats.tier_flushes
+        out["tier_flush_skipped"] = eng.stats.tier_flush_skipped
+        for e in engines.values():
+            e.close()
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return out
+
+
 def main(smoke: bool = False) -> list[str]:
     lines = []
     weak_ranks = (2, 4, 8) if smoke else (2, 4, 8, 16, 32, 64)
@@ -175,6 +244,18 @@ def main(smoke: bool = False) -> list[str]:
         f"GBps={gbps_async:.2f};speedup={speedup:.2f};overlap_eff={overlap_eff:.2f}"
     )
 
+    # -- background disk-tier flush vs tier-less async baseline ---------------
+    tier = run_tier_flush(n=8, bytes_per_rank=1 << 18 if smoke else 1 << 20)
+    lines.append(
+        f"ckpt_tier_flush_blocked,{tier['blocked_s_flush'] * 1e6:.0f},"
+        f"overhead_vs_base={tier['tier_flush_overhead']:.3f};"
+        f"base_us={tier['blocked_s_base'] * 1e6:.0f}"
+    )
+    lines.append(
+        f"ckpt_tier_flush_write,{tier['flush_s'] * 1e6:.0f},"
+        f"GBps={tier['flush_gbps']:.2f};bytes={tier['flush_bytes']}"
+    )
+
     # -- double-buffered device staging (D2H overlap) -------------------------
     t_seq, t_dbuf, staged_bytes = run_staging(mbytes=2 if smoke else 8)
     stage_win = t_seq / max(t_dbuf, 1e-9)
@@ -202,6 +283,14 @@ def main(smoke: bool = False) -> list[str]:
             "pipeline_chunks": eng_a.stats.last_pipeline_chunks,
             "staging_overlap_win": round(stage_win, 3),
             "staging_bytes_fetched": staged_bytes,
+            # storage-tier ladder rows (DESIGN.md §12): blocked-time overhead
+            # of the background disk flush + its own write throughput
+            "tier_flush_overhead": round(tier["tier_flush_overhead"], 3),
+            "blocked_s_async_tierless": round(tier["blocked_s_base"], 6),
+            "blocked_s_async_flush": round(tier["blocked_s_flush"], 6),
+            "tier_flush_s": round(tier["flush_s"], 6),
+            "tier_flush_bytes": tier["flush_bytes"],
+            "tier_flush_gbps": round(tier["flush_gbps"], 3),
         }
     )
     return lines

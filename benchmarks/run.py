@@ -20,9 +20,12 @@ machine-readable.
 ``--smoke`` runs only the smoke-capable modules at tiny shapes — a fast CI
 perf-regression tripwire, not a measurement. In smoke mode the harness FAILS
 when the pipelined (async) creation path regresses more than 20% against the
-sync baseline (speedup < 0.8), and likewise when the pipelined RECOVERY path
-regresses more than 20% against the serial host-decode baseline — the
-create- and restore-side tripwires of the CI job.
+sync baseline (speedup < 0.8), when the pipelined RECOVERY path falls below
+its per-pattern floor against the serial host-decode baseline (the legacy
+decode now runs the same mul_table strength reduction, so single-failure
+recovery is allowed near parity while bursts must stay ahead), and when the
+background tier flush adds more than 20% to the async blocked window — the
+create-, restore- and flush-side tripwires of the CI job.
 """
 
 from __future__ import annotations
@@ -34,8 +37,18 @@ import traceback
 
 #: async/sync speedup below this in --smoke mode fails the run (>20% regression)
 SMOKE_SPEEDUP_FLOOR = 0.8
-#: pipelined/sync recovery speedup below this in --smoke mode fails the run
-SMOKE_RECOVERY_FLOOR = 0.8
+#: pipelined/sync recovery speedup below this in --smoke mode fails the run.
+#: Per failure pattern: the legacy sync decode received the same mul_table
+#: strength reduction as the pipelined matrix path (ROADMAP follow-up closed
+#: in PR 5), so the pipelined path's win is parallelism across groups/chunks
+#: (multi-failure bursts) plus the integrity VERIFY pass sync does not run —
+#: single-failure recovery is allowed to trail the (unverified) serial
+#: baseline, bursts must stay ahead of the regression floor.
+SMOKE_RECOVERY_FLOOR = {"single": 0.5, "burst2": 0.8}
+#: background tier-flush blocked-time overhead above this fails --smoke (the
+#: acceptance target is <10%; the gate matches the other tripwires' 20%
+#: headroom for CI noise)
+SMOKE_FLUSH_OVERHEAD_CEIL = 0.2
 
 
 def main() -> None:
@@ -105,13 +118,25 @@ def main() -> None:
                 file=sys.stderr,
             )
             failed += 1
+    if smoke and pipeline and "tier_flush_overhead" in pipeline:
+        overhead = pipeline["tier_flush_overhead"]
+        if overhead > SMOKE_FLUSH_OVERHEAD_CEIL:
+            print(
+                f"# tier-flush regression: background disk flush adds "
+                f"{100 * overhead:.0f}% to the async blocked window "
+                f"(> {100 * SMOKE_FLUSH_OVERHEAD_CEIL:.0f}%; tier-less "
+                f"{pipeline.get('blocked_s_async_tierless')}s vs flush "
+                f"{pipeline.get('blocked_s_async_flush')}s)",
+                file=sys.stderr,
+            )
+            failed += 1
     if smoke and recovery:
-        for tag in ("single", "burst2"):
+        for tag, floor in SMOKE_RECOVERY_FLOOR.items():
             speedup = recovery.get(f"recovery_speedup_{tag}", 0.0)
-            if speedup < SMOKE_RECOVERY_FLOOR:
+            if speedup < floor:
                 print(
                     f"# recovery pipeline regression ({tag}): speedup "
-                    f"{speedup:.2f} < {SMOKE_RECOVERY_FLOOR} (sync "
+                    f"{speedup:.2f} < {floor} (sync "
                     f"{recovery.get(f'ttr_s_sync_{tag}')}s vs pipelined "
                     f"{recovery.get(f'ttr_s_pipelined_{tag}')}s)",
                     file=sys.stderr,

@@ -3,8 +3,19 @@ where hosts are killed mid-flight â€” including one DURING checkpoint creation â
 and the run recovers every time, ending bitwise-identical to a fault-free run.
 
     PYTHONPATH=src python examples/fault_tolerance_demo.py
+
+``--cold-restart`` exercises the storage-tier ladder instead (DESIGN.md Â§12):
+the trainer runs with a background disk rung, is killed mid-run (the whole
+"job" â€” every in-memory snapshot dies with it), and a FRESH trainer on a
+*different* world size restarts from the newest disk generation via the
+elastic N-to-M path, finishing bitwise-identical to the fault-free run.
+
+    PYTHONPATH=src python examples/fault_tolerance_demo.py --cold-restart
 """
 
+import argparse
+import shutil
+import tempfile
 import time
 
 import jax
@@ -15,6 +26,63 @@ from repro.core.checkpoint import EngineConfig
 from repro.models import build_model
 from repro.runtime.failures import FailureInjector
 from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def _bitwise(a, b) -> bool:
+    return all(
+        np.array_equal(x, y)
+        for x, y in zip(jax.tree.leaves(jax.device_get(a)), jax.tree.leaves(jax.device_get(b)))
+    )
+
+
+def cold_restart_demo() -> None:
+    steps, kill_at = 30, 18
+    cfg = get_config("llama3.2-1b").reduced()
+    model = build_model(cfg)
+    base = dict(batch=4, seq=32, total_steps=steps, checkpoint_period=5)
+
+    print("=== reference run (no faults, 8 hosts) ===")
+    ref = Trainer(model, TrainerConfig(n_virtual_hosts=8, **base))
+    ref.run(steps)
+
+    tier_dir = tempfile.mkdtemp(prefix="tier-demo-")
+    try:
+        print(f"\n=== job A: 8 hosts, disk tier at {tier_dir}, killed at step {kill_at} ===")
+        a = Trainer(
+            model,
+            TrainerConfig(n_virtual_hosts=8, tier_dir=tier_dir, disk_flush_every=1, **base),
+        )
+        a.run(kill_at)          # the whole job "dies" here: every in-memory
+        a.engine.close()        # snapshot is gone, only the disk tier survives
+        flushed = a.engine.persistent_tiers[0].generations()
+        print(f"job A dead at step {kill_at}; disk generations on disk: {flushed}")
+        del a
+
+        print("\n=== job B: FRESH trainer on 6 hosts, cold restart from the disk tier (8->6) ===")
+        b = Trainer(
+            model,
+            TrainerConfig(n_virtual_hosts=6, tier_dir=tier_dir, disk_flush_every=1, **base),
+        )
+        meta = b.cold_restart()
+        print(f"resumed from flushed step {meta.get('step')} "
+              f"(escalations: {b.engine.stats.tier_escalations})")
+        b.run(steps)
+        same = _bitwise(ref.state, b.state)
+        print(f"final state bitwise-identical to fault-free run: {same}")
+        assert same
+        print("OK")
+    finally:
+        shutil.rmtree(tier_dir, ignore_errors=True)
+
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--cold-restart", action="store_true",
+                help="kill the job mid-run and restart a fresh trainer from "
+                     "the disk tier (elastic 8->6)")
+args = ap.parse_args()
+if args.cold_restart:
+    cold_restart_demo()
+    raise SystemExit(0)
 
 STEPS = 40
 cfg = get_config("mixtral-8x7b").reduced()  # MoE: the scheme is arch-agnostic

@@ -44,6 +44,15 @@ All redundancy math and placement lives behind the ``RedundancyCodec``
 interface (core/codec.py, DESIGN.md §8) — the engine encodes/decodes through
 ``self.codec`` and has no scheme-specific branches.
 
+Below the diskless tier sits the **storage-tier ladder** (core/storage.py,
+DESIGN.md §12): ``EngineConfig.tiers`` names persistent rungs (local disk,
+shared directory) that a committed generation flushes to in the background —
+on the same ``async_workers`` drain pool, after the pointer swap, so a flush
+never extends the blocked capture window — and recovery **escalates** down
+the ladder: codec reconstruction first, and only when the failure set
+exceeds tolerance (or nothing survives a cold start) is the newest valid
+on-disk generation rehydrated and recovery re-run against it.
+
 The engine is single-controller (it simulates the SPMD host set — see
 runtime.cluster); the device-tier collective program used on real pods is in
 core/device_tier.py and shares the distribution schedules.
@@ -60,9 +69,10 @@ import numpy as np
 from repro.core import codec as codec_mod
 from repro.core import distribution as dist
 from repro.core import parity as parity_mod
+from repro.core import storage as storage_mod
 from repro.core.hoststore import HostStore, StorePayload
 from repro.core.integrity import IntegrityError, np_checksum
-from repro.core.serialization import Manifest, pack_bytes, unpack_bytes
+from repro.core.serialization import Manifest, dtype_from_name, pack_bytes, unpack_bytes
 from repro.core.snapshot import SnapshotRegistry, Snapshottable
 from repro.utils.logging import get_logger
 
@@ -119,6 +129,12 @@ class EngineConfig:
     restore_mode: str = "pipelined"
     # Byte granularity of the restore pipeline's chunks (4-aligned).
     restore_chunk_bytes: int = 1 << 20
+    # Storage-tier ladder below the diskless HostStore tier (DESIGN.md §12):
+    # persistent TierSpec rungs from core/storage.py, e.g.
+    # ``(storage.disk("/ckpt", every=4),)`` — flushed in the background every
+    # k-th commit, escalated to when failures exceed codec tolerance or the
+    # whole job cold-starts. Empty keeps the engine purely diskless.
+    tiers: tuple = ()
 
 
 @dataclass
@@ -143,6 +159,14 @@ class CheckpointStats:
     last_restore_decode_s: float = 0.0   # wall time of the recovery drain
     last_restore_bytes_rebuilt: int = 0  # padded bytes reconstructed by codecs
     last_restore_chunks: int = 0         # TRANSFER/DECODE/VERIFY chunks drained
+    last_restore_decompressed_bytes: int = 0  # bytes expanded by the chunked DEQ stage
+    # Storage-tier ladder accounting (DESIGN.md §12):
+    tier_flushes: int = 0            # persistent-tier generations committed
+    tier_flush_skipped: int = 0      # flushes dropped under back-pressure
+    tier_escalations: int = 0        # recoveries that fell back to a tier
+    last_flush_s: float = 0.0        # wall time of the last background flush
+    last_flush_bytes: int = 0        # bytes the last flush wrote
+    last_flush_wait_s: float = 0.0   # capture time spent joining a flush (bank conflict)
 
 
 class FaultDuringCheckpoint(RuntimeError):
@@ -173,6 +197,26 @@ class _RestoreUnit:
     manifests: dict[int, Any]                  # missing idx -> origin manifest
     ref_sums: dict[int, Any]                   # missing idx -> capture checksum | None
     sums: dict[int, list]                      # missing idx -> per-chunk partials
+    # Chunked decompression plans for compressed origins (missing idx ->
+    # per-quantized-leaf _DeqLeaf): the int8 -> f32 blockwise dequantization
+    # runs per chunk inside the drain instead of one monolithic pass at
+    # finalize. None when no origin in the unit is compressed.
+    decomp: dict[int, list] | None = None
+
+
+@dataclass
+class _DeqLeaf:
+    """One quantized leaf of a compressed origin, dequantized chunk-by-chunk:
+    byte range [q_off, q_off+q_n) of the rebuilt compressed flat holds the
+    int8 codes; ``scales`` (one f32 per ``block`` codes) is resolved at prep
+    (the compressed blob is adopted by reference, so scale bytes exist before
+    the drain); ``out`` is the arena-leased f32 destination."""
+
+    q_off: int
+    q_n: int
+    block: int
+    scales: np.ndarray
+    out: np.ndarray
 
 
 @dataclass
@@ -216,6 +260,13 @@ class CheckpointEngine:
         self._pending: _PendingCheckpoint | None = None  # un-finalized async snapshot
         self._pool: Any = None               # lazy ThreadPoolExecutor (async drain)
         self._enc_scratch: dict[Any, np.ndarray] = {}  # transient blob accumulators
+        # Storage-tier ladder (DESIGN.md §12): rung 0 is the diskless
+        # HostStore set above; persistent rungs flush committed generations
+        # in the background and feed escalating recovery.
+        self.tiers = storage_mod.build_tiers(cfg.tiers)
+        self._flush_future: Any = None       # at most one in-flight flush
+        self._flush_created: int = -1        # commit counter when it started
+        self._flush_pending: Any = None      # staged (due, snapshot), not yet kicked
         self.stats = CheckpointStats()
         self.last_elastic_report: Any = None  # ElasticReport of the last N-to-M restore
         if cfg.parity_group:
@@ -274,6 +325,19 @@ class CheckpointEngine:
             # Two captures without a finalize: the first snapshot was never
             # committed — drain + drop it before its arenas are re-leased.
             self.discard_pending()
+        self.kick_tier_flush()  # staged flush runs behind this capture (disjoint banks)
+        if self._flush_future is not None and self.stats.created > self._flush_created:
+            # A commit happened since the in-flight tier flush started, so
+            # the bank this capture is about to stage into is the bank the
+            # flush is still reading (generation-parity rule): join it before
+            # the arenas are re-leased. The flush had a full checkpoint
+            # interval to finish, so this wait is the rare stall, not the
+            # steady state — recorded in last_flush_wait_s either way.
+            t_w = time.perf_counter()
+            self._join_flush()
+            self.stats.last_flush_wait_s = time.perf_counter() - t_w
+        else:
+            self.stats.last_flush_wait_s = 0.0
         t0 = time.perf_counter()
         alive0 = self._alive_fn()
         try:
@@ -626,7 +690,123 @@ class CheckpointEngine:
         self.stats.last_bytes_per_rank = pending.bytes_exchanged // max(
             len(pending.alive0), 1
         )
+        self._maybe_flush_tiers()
         return True
+
+    # ------------------------------------------------------------------ #
+    # storage-tier ladder: background flush of committed generations
+    # ------------------------------------------------------------------ #
+    @property
+    def persistent_tiers(self) -> list:
+        return [t for t in self.tiers if t.persistent]
+
+    def _maybe_flush_tiers(self) -> None:
+        """Stage a background flush of the just-committed generation for
+        every due persistent tier. The payload refs are captured HERE,
+        synchronously at the commit point — a concurrent kill or the next
+        capture's arena re-lease can never tear the flush's source bytes —
+        but the executor submission is deferred to ``kick_tier_flush`` (the
+        overlap window: the next ``drain_done`` poll, the next capture, or
+        any join point), so not even the worker wake-up lands on the blocked
+        capture+finalize path. At most one flush is in flight — when the
+        previous one has not finished, this cadence point is *skipped*
+        (back-pressure degrades the disk frequency, it never blocks
+        training)."""
+        due = [t for t in self.persistent_tiers if t.due(self.stats.created)]
+        if not due:
+            return
+        if self._flush_future is not None and not self._flush_future.done():
+            self.stats.tier_flush_skipped += len(due)
+            log.warning(
+                "tier flush skipped at commit %d: previous flush still "
+                "in flight", self.stats.created,
+            )
+            return
+        if self._flush_pending is not None:
+            self.stats.tier_flush_skipped += len(self._flush_pending[0])
+        self._flush_pending = (due, storage_mod.capture_snapshot(self))
+
+    def kick_tier_flush(self) -> None:
+        """Submit a staged tier flush to the drain pool. Public overlap-
+        window probe: callers (trainer/server step loops, ``drain_done``
+        polls) invoke it between the commit and the next blocked window so
+        the executor wake-up happens off the critical path; every join point
+        (``_join_flush``/``close``/escalation) kicks first, so a staged
+        generation is never lost."""
+        pending, self._flush_pending = self._flush_pending, None
+        if pending is None:
+            return
+        due, snap = pending
+        if self._flush_future is not None:
+            if not self._flush_future.done():
+                self.stats.tier_flush_skipped += len(due)
+                return
+            self._join_flush()  # reap the finished future
+        self._flush_created = snap.created
+        self._flush_future = self._executor().submit(self._run_flush, due, snap)
+
+    def _run_flush(self, tiers: list, snap) -> int:
+        t0 = time.perf_counter()
+        total = 0
+        for tier in tiers:
+            total += tier.flush(snap)
+        self.stats.tier_flushes += len(tiers)
+        self.stats.last_flush_s = time.perf_counter() - t0
+        self.stats.last_flush_bytes = total
+        return total
+
+    def _join_flush(self) -> None:
+        """Kick any staged flush, then join (and clear) the in-flight one.
+        A failed flush is logged, never raised — losing one disk generation
+        must not kill the job; the previous generation stays valid by the
+        commit protocol."""
+        self.kick_tier_flush()
+        future, self._flush_future = self._flush_future, None
+        if future is not None:
+            try:
+                future.result()
+            except Exception as e:  # noqa: BLE001 - flush failure is non-fatal
+                log.warning("tier flush failed (previous generation intact): %s", e)
+
+    def has_tier_data(self) -> bool:
+        """True when some persistent tier holds at least one committed
+        generation (or one is staged/in flight — escalation joins it first)
+        — i.e. escalation has somewhere to go."""
+        if self._flush_pending is not None or self._flush_future is not None:
+            return True
+        return any(t.has_data() for t in self.persistent_tiers)
+
+    def _store_alive(self) -> set[int]:
+        """Liveness as the stores see it (used after a tier load, when the
+        cluster's view predates the rehydration)."""
+        return {r for r, s in self.stores.items() if s.alive and s.buffer.valid}
+
+    def escalate_from_tiers(self) -> None:
+        """Load the newest valid persistent-tier generation into the
+        in-memory stores (cold start, or a burst beyond codec tolerance).
+        Tiers are tried in ladder order; each tier internally escalates to
+        older generations when its newest fails validation. Raises
+        ``distribution.DataLostError`` when no rung holds a loadable
+        generation. May resize the engine to the stored world size — the
+        elastic path maps it back onto the caller's world."""
+        self._join_flush()  # an in-flight flush may be committing the newest gen
+        errors: list[str] = []
+        for tier in self.persistent_tiers:
+            try:
+                gen = tier.load(self)
+            except dist.DataLostError as e:
+                errors.append(str(e))
+                continue
+            self.stats.tier_escalations += 1
+            log.warning(
+                "recovery escalated to the %s tier (generation %s, %d ranks)",
+                tier.name, gen, self.n_ranks,
+            )
+            return
+        raise dist.DataLostError(
+            "no persistent tier holds a loadable generation"
+            + (f": {'; '.join(errors)}" if errors else " (none configured)")
+        )
 
     def discard_pending(self) -> None:
         """Drop an un-finalized async snapshot (e.g. before a restore) — it
@@ -650,7 +830,9 @@ class CheckpointEngine:
         whose background drain already finished, or a synchronous-drain
         pending (finalize does the work itself). Public poll point for
         callers sizing their overlap window (benchmarks, servers deciding
-        when to finalize early)."""
+        when to finalize early) — which makes it a natural overlap-window
+        probe to kick a staged tier flush from."""
+        self.kick_tier_flush()
         pending = self._pending
         if pending is None or pending.future is None:
             return True
@@ -658,9 +840,11 @@ class CheckpointEngine:
 
     def close(self) -> None:
         """Release background resources: joins + drops any pending snapshot
-        and shuts the pipeline worker pool down. The engine stays usable for
-        synchronous checkpoints afterward (the pool re-creates lazily)."""
+        (and any in-flight tier flush) and shuts the pipeline worker pool
+        down. The engine stays usable for synchronous checkpoints afterward
+        (the pool re-creates lazily)."""
         self.discard_pending()
+        self._join_flush()
         if self._pool is not None:
             self._pool.shutdown(wait=True)
             self._pool = None
@@ -708,11 +892,14 @@ class CheckpointEngine:
         return any(self.stores[r].buffer.valid for r in alive)
 
     def checkpoint_step(self) -> Any:
-        """Meta recorded with the last valid checkpoint (e.g. the step)."""
-        for r in sorted(self._alive_fn()):
-            buf = self.stores[r].buffer
-            if buf.valid:
-                return buf.read_only.meta
+        """Meta recorded with the last valid checkpoint (e.g. the step).
+        Scans the stores directly (any alive store's valid buffer): after a
+        tier escalation the rehydrated stores are authoritative even while
+        the cluster's liveness view is still being realigned."""
+        for r in sorted(self.stores):
+            store = self.stores[r]
+            if store.alive and store.buffer.valid:
+                return store.buffer.read_only.meta
         raise RuntimeError("no valid checkpoint")
 
     def restore(self) -> dict[str, Any]:
@@ -742,7 +929,35 @@ class CheckpointEngine:
     def _recover_all(
         self, alive: set[int], failed: set[int]
     ) -> dict[str, dict[int, Any]]:
-        """Recover every entity's every shard (no entity mutation): the
+        """Recover every entity's every shard (no entity mutation), with
+        **escalating recovery** (DESIGN.md §12): the in-memory codec path is
+        always tried first — failures within tolerance never touch disk —
+        and only when it is provably insufficient (``DataLostError``: a burst
+        beyond ``m``, destroyed blob holders, or a cold start with nothing in
+        memory) does recovery fall down the storage-tier ladder, rehydrate
+        the stores from the newest valid generation, and re-run against the
+        loaded world (where every rank is a zero-comm survivor, minus any
+        ranks the flushed generation itself was missing — those re-enter the
+        codec path against the loaded stripes)."""
+        try:
+            return self._recover_all_memory(alive, failed)
+        except dist.DataLostError as e:
+            if not self.has_tier_data():
+                raise
+            log.warning(
+                "in-memory recovery impossible (%s); escalating down the "
+                "storage-tier ladder", e,
+            )
+            self.escalate_from_tiers()
+            alive = self._store_alive()
+            return self._recover_all_memory(
+                alive, set(range(self.n_ranks)) - alive
+            )
+
+    def _recover_all_memory(
+        self, alive: set[int], failed: set[int]
+    ) -> dict[str, dict[int, Any]]:
+        """One recovery attempt against the in-memory stores: the
         restore-mode dispatch point shared by ``restore`` and
         ``restore_elastic``."""
         if self.cfg.restore_mode == "sync":
@@ -865,6 +1080,7 @@ class CheckpointEngine:
                         u.decode_chunk(*u.bounds[i - 1])
                     if 0 <= i - 2 < nc:
                         self._restore_verify_chunk(u, i - 2)
+                        self._restore_decompress_chunk(u, i - 2)
                     self._fault_hook("restore_chunk")
             for name, origin, flat, man in local_jobs:
                 results[(name, origin)] = unpack_bytes(flat, man)
@@ -893,6 +1109,12 @@ class CheckpointEngine:
         self.stats.last_restore_chunks = len(chunk_tasks)
         self.stats.last_restore_bytes_rebuilt = sum(
             buf.nbytes for u in units for buf in u.rebuilt.values()
+        )
+        self.stats.last_restore_decompressed_bytes = sum(
+            leaf.out.nbytes
+            for u in units if u.decomp
+            for plan in u.decomp.values()
+            for leaf in plan
         )
         return shards
 
@@ -986,16 +1208,62 @@ class CheckpointEngine:
         bounds = [(lo, min(lo + step, n)) for lo in range(0, n, step)] or [(0, 0)]
         manifests = {i: self._redundancy_manifest(grp.members[i], name) for i in missing_idx}
         ref_sums: dict[int, Any] = {}
+        decomp: dict[int, list] = {}
         for i in missing_idx:
             compressed = isinstance(manifests[i], tuple) and manifests[i][0] == "compressed"
             ref_sums[i] = None if compressed else ref_table.get((grp.members[i], name))
+            if compressed:
+                # Only the full-copy codec may compress, and it adopts the
+                # whole compressed flat by reference at prep — so the tiny
+                # scale/meta leaves are resolvable here and the expensive
+                # int8->f32 expansion chunk-streams through the drain's DEQ
+                # stage instead of one monolithic pass at finalize.
+                plan = self._prep_decomp_plan(
+                    manifests[i][1], np.asarray(rebuilt[i]).reshape(-1),
+                    lambda key, nb, _i=i: store.lease(
+                        ("restore", gi, name, "deq", _i, key), nb
+                    ),
+                )
+                if plan:
+                    decomp[i] = plan
         return _RestoreUnit(
             gi=gi, grp=grp, name=name, missing_idx=missing_idx,
             stripe_srcs=multi,
             blobs=blobs, rebuilt=rebuilt, decode_chunk=decode_chunk, bounds=bounds,
             manifests=manifests, ref_sums=ref_sums,
             sums={i: [None] * len(bounds) for i in missing_idx},
+            decomp=decomp or None,
         )
+
+    def _prep_decomp_plan(self, cman: Manifest, flat: np.ndarray, lease) -> list:
+        """Chunked-dequantization plan for one compressed origin: one
+        ``_DeqLeaf`` per quantized leaf (``_q``/``_scale``/``_meta`` triples
+        in the packed manifest), with its f32 destination leased from the
+        recovering host's staging-bank arenas."""
+        plan: list[_DeqLeaf] = []
+        by_name = {n: k for k, n in enumerate(cman.names)}
+        for k, n in enumerate(cman.names):
+            if not n.endswith("_q") or cman.dtypes[k] != "int8":
+                continue
+            sk = by_name.get(n[: -len("_q")] + "_scale")
+            if sk is None or cman.dtypes[sk] != "float32":
+                # Unresolvable packed node: the finalize walk pairs plan
+                # entries with packed nodes 1:1, so a partial plan would
+                # misalign — fall back to the monolithic _decompress.
+                return []
+            q_off = cman.offsets[k]
+            q_n = int(np.prod(cman.shapes[k], dtype=np.int64))
+            s_off = cman.offsets[sk]
+            s_n = int(np.prod(cman.shapes[sk], dtype=np.int64))
+            # scales are tiny: copy them out now, so the DEQ stage never
+            # re-reads bytes a concurrent chunk could still be rebuilding
+            scales = np.array(flat[s_off : s_off + 4 * s_n].view(np.float32))
+            out = lease(k, q_n * 4).view(np.float32)
+            plan.append(_DeqLeaf(
+                q_off=q_off, q_n=q_n, block=q_n // max(s_n, 1),
+                scales=scales, out=out,
+            ))
+        return plan
 
     def _restore_ref_sums(self) -> dict:
         """Replicated capture-time exchange checksums (empty for pre-§10
@@ -1015,6 +1283,7 @@ class CheckpointEngine:
         self._restore_transfer_chunk(u, lo, hi)
         u.decode_chunk(lo, hi)
         self._restore_verify_chunk(u, ci)
+        self._restore_decompress_chunk(u, ci)
         self._fault_hook("restore_chunk")
 
     def _restore_transfer_chunk(self, u: _RestoreUnit, lo: int, hi: int) -> None:
@@ -1029,6 +1298,29 @@ class CheckpointEngine:
                 if a < z:
                     np.copyto(dst[a:z], s[a - off : z - off])
                 off += s.nbytes
+
+    def _restore_decompress_chunk(self, u: _RestoreUnit, ci: int) -> None:
+        """DEQ stage: blockwise int8 -> f32 dequantization of this chunk's
+        slice of every compressed origin's quantized leaves — the restore
+        mirror of the create path's compress, spread over the same chunk
+        grid instead of one monolithic pass at finalize. Chunks write
+        disjoint output ranges, so the parallel drain stays race-free; the
+        math (codes · per-block scale, in f32) is the exact elementwise op
+        of ``ops.dequantize_blockwise``, so the assembled payload is
+        bit-identical to the monolithic ``_decompress`` baseline."""
+        if not u.decomp:
+            return
+        lo, hi = u.bounds[ci]
+        for i, plan in u.decomp.items():
+            flat = np.asarray(u.rebuilt[i]).reshape(-1)
+            for leaf in plan:
+                a, z = max(lo, leaf.q_off), min(hi, leaf.q_off + leaf.q_n)
+                if a >= z:
+                    continue
+                e0 = a - leaf.q_off
+                codes = flat[a:z].view(np.int8).astype(np.float32)
+                idx = np.arange(e0, e0 + (z - a), dtype=np.int64) // leaf.block
+                np.multiply(codes, leaf.scales[idx], out=leaf.out[e0 : e0 + (z - a)])
 
     def _restore_verify_chunk(self, u: _RestoreUnit, ci: int) -> None:
         """VERIFY: Fletcher partials of the rebuilt chunk. Both sums are
@@ -1073,10 +1365,47 @@ class CheckpointEngine:
             man = u.manifests[i]
             rebuilt = np.asarray(u.rebuilt[i]).reshape(-1)
             if isinstance(man, tuple) and man[0] == "compressed":
-                payload = self._decompress(rebuilt, man)
+                if u.decomp and i in u.decomp:
+                    payload = self._finalize_decompressed(rebuilt, man[1], u.decomp[i])
+                else:
+                    payload = self._decompress(rebuilt, man)
             else:
                 payload = unpack_bytes(rebuilt[: man.total], man)
             (partials if has_subset else shards)[u.name][origin] = payload
+
+    def _finalize_decompressed(self, flat: np.ndarray, cman: Manifest, plan: list):
+        """Assemble a compressed origin's payload from the drain's chunk-
+        dequantized buffers: the same tree walk as
+        ``optim.grad_compress.decompress_tree``, minus the monolithic
+        dequantization pass the DEQ stage already spread over the chunks
+        (each packed node consumes its pre-expanded f32 arena; only shape /
+        dtype metadata is read here)."""
+        import jax
+
+        from repro.optim.grad_compress import _DTYPES
+
+        views = []
+        for shape, dtype, off in zip(cman.shapes, cman.dtypes, cman.offsets):
+            dt = dtype_from_name(dtype)
+            n = int(np.prod(shape, dtype=np.int64)) * dt.itemsize if shape else dt.itemsize
+            views.append(flat[off : off + n].view(dt).reshape(shape))
+        packed = jax.tree.unflatten(cman.treedef, views)
+        it = iter(plan)
+
+        def is_packed(x):
+            return isinstance(x, dict) and "_q" in x
+
+        def decomp(x):
+            if is_packed(x):
+                leaf = next(it)
+                meta = np.asarray(x["_meta"]).reshape(-1)
+                shape = tuple(int(v) for v in meta[:-2])
+                dtype = _DTYPES[int(meta[-2])]
+                size = int(meta[-1])
+                return leaf.out[:size].reshape(shape).astype(dtype)
+            return np.array(x)  # passthrough views die with the arena: copy
+
+        return jax.tree.map(decomp, packed, is_leaf=is_packed)
 
     # ------------------------------------------------------------------ #
     # Elastic N-to-M restore (beyond-paper: Ham et al.'s N-to-M algorithm)
@@ -1101,7 +1430,14 @@ class CheckpointEngine:
         assert new_n_ranks >= 1
         self.discard_pending()
         t0 = time.perf_counter()
-        alive = self._alive_fn()
+        if not self.has_valid_checkpoint and self.has_tier_data():
+            # Cold N-to-M restart: nothing in memory — rehydrate the stored
+            # world first (the engine resizes to the generation's N), then
+            # repartition onto the caller's M below.
+            self.escalate_from_tiers()
+            alive = self._store_alive()
+        else:
+            alive = self._alive_fn()
         failed = set(range(self.n_ranks)) - alive
         meta = self.checkpoint_step()  # read before the stores are rebuilt
 

@@ -1,118 +1,12 @@
-"""Optional low-frequency disk tier.
+"""Deprecated shim — the disk tier moved into ``core/storage.py``
+(the multi-level tier ladder, DESIGN.md §12).
 
-The paper: "one could for instance additionally implement checkpointing to
-disk at a lower frequency to protect the simulation against failures that
-strike the whole system" (§5.2.1). This tier serializes the engine's
-*read-only* (last valid) buffers, so a disk write never races an in-flight
-in-memory checkpoint.
+``save_to_disk`` / ``load_from_disk`` keep the legacy pickle layout (and its
+pre-codec migration) alive for old callers and old on-disk checkpoints; new
+code configures ``EngineConfig.tiers`` with ``storage.disk(...)`` /
+``storage.shared_dir(...)`` and lets the engine flush and escalate.
 """
 
 from __future__ import annotations
 
-import os
-import pickle
-from typing import Any
-
-import numpy as np
-
-from repro.core.checkpoint import CheckpointEngine
-from repro.utils.logging import get_logger
-
-log = get_logger("core.disk")
-
-
-def save_to_disk(engine: CheckpointEngine, path: str) -> int:
-    """Persist every alive rank's read-only buffer. Returns bytes written."""
-    os.makedirs(path, exist_ok=True)
-    total = 0
-    index: dict[str, Any] = {"n_ranks": engine.n_ranks, "ranks": []}
-    for r, store in engine.stores.items():
-        if not store.alive or not store.buffer.valid:
-            continue
-        payload = store.buffer.read_only
-        blob = {
-            "own": {k: (np.asarray(v[0]), v[1]) for k, v in payload.own.items()},
-            "own_exch": payload.own_exch,
-            "parity": payload.parity,
-            "meta": payload.meta,
-        }
-        fname = os.path.join(path, f"rank{r:05d}.pkl")
-        with open(fname, "wb") as f:
-            pickle.dump(blob, f, protocol=pickle.HIGHEST_PROTOCOL)
-        total += os.path.getsize(fname)
-        index["ranks"].append(r)
-    with open(os.path.join(path, "index.pkl"), "wb") as f:
-        pickle.dump(index, f)
-    log.info("disk checkpoint: %d ranks, %.1f MiB -> %s", len(index["ranks"]), total / 2**20, path)
-    return total
-
-
-def load_from_disk(engine: CheckpointEngine, path: str) -> None:
-    """Rehydrate the engine's read-only buffers from a disk checkpoint
-    (whole-system restart: every in-memory snapshot was lost). Pre-codec
-    checkpoints are migrated into the codec stripe layout so failed-rank
-    recovery keeps working across the format change — in-memory
-    ``StorePayload`` no longer has the legacy ``recv`` slot, so old pickles
-    that still carry one are translated at load time (the only place the
-    legacy format can enter the system)."""
-    from repro.core.hoststore import StorePayload
-
-    with open(os.path.join(path, "index.pkl"), "rb") as f:
-        index = pickle.load(f)
-    assert index["n_ranks"] == engine.n_ranks, (index["n_ranks"], engine.n_ranks)
-    legacy_recv: dict[int, dict[int, dict[str, Any]]] = {}
-    for r in index["ranks"]:
-        with open(os.path.join(path, f"rank{r:05d}.pkl"), "rb") as f:
-            blob = pickle.load(f)
-        payload = StorePayload(
-            own=blob["own"],
-            own_exch=blob.get("own_exch", {}),
-            parity=blob["parity"],
-            meta=blob["meta"],
-        )
-        if blob.get("recv"):
-            legacy_recv[r] = blob["recv"]
-        store = engine.stores[r]
-        store.revive(r)
-        store.buffer.write(payload)
-        store.buffer.swap()
-    _migrate_legacy_layout(engine, legacy_recv)
-
-
-def _migrate_legacy_layout(
-    engine: CheckpointEngine, legacy_recv: dict[int, dict[int, dict[str, Any]]]
-) -> None:
-    """Translate pre-codec disk layouts in place after a load:
-
-    * parity stripes keyed ``(entity, stripe)`` -> ``(entity, blob=0, stripe)``
-      (XOR had exactly one blob per group);
-    * legacy ``recv`` partner copies (``holder_rank -> origin -> entity ->
-      (flat, manifest)`` out of the pickles) -> whole-blob ``parity`` stripes
-      at the codec's placement for the holder that physically held them, with
-      their manifests replicated into meta so codec decode can unpack the
-      bytes.
-    """
-    from repro.core import distribution as dist
-
-    groups = dist.parity_groups(
-        engine.n_ranks, engine.codec.group_size(engine.n_ranks)
-    )
-    placements = {
-        gi: engine.codec.placement(groups, gi, engine.n_ranks)
-        for gi in range(len(groups))
-    }
-    for store in engine.stores.values():
-        payload = store.buffer.read_only
-        if payload is None:
-            continue
-        for stripes in payload.parity.values():
-            for key in [k for k in stripes if len(k) == 2]:
-                name, j = key
-                stripes[(name, 0, j)] = stripes.pop(key)
-        for origin, entry in legacy_recv.get(store.rank, {}).items():
-            for b, holders in enumerate(placements.get(origin, [])):
-                if store.rank not in holders:
-                    continue
-                for name, (flat, man) in entry.items():
-                    payload.parity.setdefault(origin, {})[(name, b, 0)] = flat
-                    payload.meta.setdefault("manifests", {})[(origin, name)] = man
+from repro.core.storage import load_from_disk, save_to_disk  # noqa: F401

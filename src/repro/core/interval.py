@@ -6,7 +6,12 @@
   * eq. 2: memory factor        MEM = S (1 + 2 R)
 
 plus an adaptive scheduler that re-estimates C from measured checkpoint
-durations and converts T_FO into a step period for the training loop.
+durations and converts T_FO into a step period for the training loop, and
+the **per-level schedule** for the storage-tier ladder (DESIGN.md §12):
+cheap diskless checkpoints at the Daly optimum of ordinary host failures,
+disk generations every k-th commit at the Daly optimum of the failures the
+diskless tier cannot survive (beyond-tolerance bursts, whole-job loss) —
+Young/Daly applied per level, each against its own failure class and cost.
 """
 
 from __future__ import annotations
@@ -88,3 +93,64 @@ class CheckpointScheduler:
     @property
     def expected_overhead(self) -> float:
         return overhead(self.checkpoint_s, self.mtbf_s)
+
+
+def multilevel_intervals(
+    mtbf_levels_s: list[float], cost_levels_s: list[float]
+) -> list[float]:
+    """Per-level Young/Daly optima for a storage-tier ladder: level ℓ guards
+    the failure classes levels < ℓ cannot handle (level 0: ordinary host
+    failures at the system MTBF; level 1: beyond-tolerance bursts / full-job
+    loss at their own, much longer, MTBF), each with its own checkpoint cost
+    C_ℓ. Returns T_ℓ = sqrt(2 μ_ℓ C_ℓ) per level — the ladder's flush
+    cadence is the ratio T_ℓ / T_0 (see :class:`MultiLevelScheduler`)."""
+    assert len(mtbf_levels_s) == len(cost_levels_s)
+    return [
+        optimal_interval(mu, max(c, 1e-9))
+        for mu, c in zip(mtbf_levels_s, cost_levels_s)
+    ]
+
+
+@dataclass
+class MultiLevelScheduler:
+    """Adaptive per-level schedule for the tier ladder.
+
+    ``base`` is the diskless (level-0) scheduler the trainer already runs;
+    each persistent level gets its own failure MTBF (``level_mtbf_s[ℓ-1]``)
+    and an adaptively re-estimated flush cost (running mean of measured
+    flush durations, like the base scheduler's C). ``flush_every(ℓ)``
+    converts the interval ratio into "flush this tier every k-th committed
+    level-0 checkpoint" — the quantity ``EngineConfig.tiers[ℓ-1].every``
+    consumes.
+    """
+
+    base: CheckpointScheduler
+    level_mtbf_s: list[float]
+    flush_s: list[float] = field(default_factory=list)   # C_ℓ priors
+    max_every: int = 10_000
+    _samples: dict = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        while len(self.flush_s) < len(self.level_mtbf_s):
+            self.flush_s.append(1.0)
+
+    def record_flush_duration(self, level: int, seconds: float) -> None:
+        """Fold one measured flush of persistent level ``level`` (1-based,
+        level 0 being the diskless tier) into its cost estimate."""
+        samples = self._samples.setdefault(level, [])
+        samples.append(seconds)
+        k = min(len(samples), 16)
+        self.flush_s[level - 1] = sum(samples[-k:]) / k
+
+    def interval_s(self, level: int) -> float:
+        if level == 0:
+            return self.base.interval_s
+        return optimal_interval(
+            self.level_mtbf_s[level - 1], max(self.flush_s[level - 1], 1e-9)
+        )
+
+    def flush_every(self, level: int) -> int:
+        """Commits between flushes of persistent level ``level`` (>= 1):
+        the per-level Daly interval expressed in level-0 checkpoints."""
+        ratio = self.interval_s(level) / max(self.base.interval_s, 1e-9)
+        return max(1, min(int(round(ratio)), self.max_every))

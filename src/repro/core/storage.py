@@ -1,0 +1,756 @@
+"""Multi-level storage tiers — the tier ladder behind the diskless engine
+(DESIGN.md §12).
+
+The paper's scheme is explicitly extensible past the diskless level: "one
+could for instance additionally implement checkpointing to disk at a lower
+frequency to protect the simulation against failures that strike the whole
+system" (§5.2.1). This module turns that sentence into a subsystem:
+
+  * ``TierSpec`` / ``diskless`` / ``disk`` / ``shared_dir`` — the declarative
+    ladder carried on ``EngineConfig.tiers`` (e.g. ``(disk(path, every=4),)``:
+    diskless in-memory checkpoints every interval, a disk generation every
+    4th commit).
+  * ``DisklessTier`` — rung 0, a descriptor for the in-memory ``HostStore``
+    set the engine already owns (codec reconstruction is its recovery path).
+  * ``DiskTier`` / ``SharedDirTier`` — persistent rungs. ``flush`` serializes
+    the committed (read-only) generation **chunked and checksummed**
+    (optionally zlib-compressed) into a new generation directory;
+    ``load`` rehydrates the engine's stores from the newest valid
+    generation, escalating to older generations when the newest fails
+    validation.
+
+**Commit protocol (the abort guarantee, one level down).** A flush writes
+every rank file into a ``gen-N.tmp-<pid>`` staging directory, fsyncs, then
+atomically renames it to ``gen-N`` and rewrites the ``LATEST`` pointer file
+via ``os.replace`` — the disk mirror of the engine's double-buffer pointer
+swap (DESIGN.md §2). A crash at ANY point mid-flush leaves either a stale
+``.tmp`` directory (ignored and garbage-collected) or a fully committed
+generation; the previous on-disk generation is never touched. Rank files are
+self-validating: the chunk stream carries a combined Fletcher checksum
+(same linear-combination rule as the restore pipeline's VERIFY), so torn or
+bit-rotten files fail ``IntegrityError`` at load and the loader falls back
+to the previous generation.
+
+**Escalating recovery.** The engine first attempts codec reconstruction from
+surviving hosts; only when the failure set exceeds tolerance (or after a
+cold start with zero survivors) does it escalate down the ladder —
+``CheckpointEngine.escalate_from_tiers`` loads the newest generation whose
+missing-rank set the active codec can still cover, then recovery re-runs
+against the rehydrated stores. Failures within tolerance never touch disk.
+
+The legacy pickle format of the old ``core/disk.py`` lives on here as
+``save_to_disk`` / ``load_from_disk`` (including the pre-codec layout
+migration); ``DiskTier.load`` falls back to it when a directory holds only
+legacy ``index.pkl`` checkpoints, so old jobs stay restorable.
+"""
+
+from __future__ import annotations
+
+import os
+import pickle
+import re
+import shutil
+import struct
+import time
+import zlib
+from dataclasses import dataclass
+from typing import Any
+
+import numpy as np
+
+from repro.core import distribution as dist
+from repro.core.hoststore import HostStore, StorePayload
+from repro.core.integrity import IntegrityError, np_checksum
+from repro.core.serialization import dtype_from_name
+from repro.utils.logging import get_logger
+
+log = get_logger("core.storage")
+
+_MASK = 0xFFFFFFFF
+
+
+# ---------------------------------------------------------------------------
+# Tier specs — the declarative ladder on EngineConfig.tiers
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TierSpec:
+    """One rung of the storage ladder (hashable: rides on the frozen
+    EngineConfig). ``every`` counts committed level-0 checkpoints between
+    flushes of this tier (the per-level interval schedule — Daly per level,
+    see core/interval.MultiLevelScheduler)."""
+
+    kind: str                      # "diskless" | "disk" | "shared"
+    path: str | None = None
+    every: int = 1
+    compress: bool = False
+    chunk_bytes: int = 4 << 20     # flush/verify chunk granularity
+    keep: int = 2                  # committed generations retained (>= 2)
+
+
+def diskless() -> TierSpec:
+    """Rung 0: the in-memory HostStore set (implicit; listed for clarity)."""
+    return TierSpec(kind="diskless")
+
+
+def disk(path: str, every: int = 4, *, compress: bool = False,
+         chunk_bytes: int = 4 << 20, keep: int = 2) -> TierSpec:
+    """Node-local (or job-local) disk rung: survives beyond-tolerance bursts
+    and full-job restarts on the same storage."""
+    return TierSpec(kind="disk", path=path, every=every, compress=compress,
+                    chunk_bytes=chunk_bytes, keep=keep)
+
+
+def shared_dir(path: str, every: int = 16, *, compress: bool = False,
+               chunk_bytes: int = 4 << 20, keep: int = 2) -> TierSpec:
+    """Shared-filesystem rung (parallel FS / object store mount): slowest,
+    survives node loss — the last line of the ladder."""
+    return TierSpec(kind="shared", path=path, every=every, compress=compress,
+                    chunk_bytes=chunk_bytes, keep=keep)
+
+
+# ---------------------------------------------------------------------------
+# Flush snapshot — references captured on the caller thread
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TierSnapshot:
+    """Immutable view of one committed generation, captured synchronously at
+    the commit point so the background flush never races a concurrent kill
+    (``wipe`` swaps the store's buffer out; the captured payload objects stay
+    alive through these references) or the next capture's arena re-lease."""
+
+    n_ranks: int
+    created: int                           # engine commit counter at capture
+    payloads: dict[int, StorePayload]      # alive+valid ranks only
+    step: Any = None                       # checkpoint meta step, if recorded
+
+
+def capture_snapshot(engine: Any) -> TierSnapshot:
+    payloads = {
+        r: st.buffer.read_only
+        for r, st in engine.stores.items()
+        if st.alive and st.buffer.valid
+    }
+    step = None
+    for p in payloads.values():
+        step = p.meta.get("step", p.meta.get("pos"))
+        break
+    return TierSnapshot(
+        n_ranks=engine.n_ranks,
+        created=engine.stats.created,
+        payloads=payloads,
+        step=step,
+    )
+
+
+# ---------------------------------------------------------------------------
+# StorageTier — the ladder interface
+# ---------------------------------------------------------------------------
+
+class StorageTier:
+    """One rung of the ladder. ``persistent`` rungs implement flush/load;
+    the diskless rung is a descriptor for the engine's own HostStores."""
+
+    name: str = "?"
+    kind: str = "?"
+    persistent: bool = False
+    every: int = 1     # flush every k-th committed level-0 checkpoint
+
+    def due(self, created: int) -> bool:
+        return self.persistent and self.every >= 1 and created > 0 and created % self.every == 0
+
+    def has_data(self) -> bool:
+        return False
+
+    def flush(self, snap: TierSnapshot) -> int:
+        """Persist one committed generation; returns bytes written."""
+        raise NotImplementedError
+
+    def load(self, engine: Any) -> int:
+        """Rehydrate ``engine``'s stores from the newest valid generation
+        (resizing the engine to the stored world if it differs). Returns the
+        generation number; raises ``distribution.DataLostError`` when no
+        generation is loadable."""
+        raise NotImplementedError
+
+
+class DisklessTier(StorageTier):
+    """Rung 0: the double-buffered in-memory HostStore set. Recovery at this
+    rung is the codec reconstruction path the engine already implements —
+    this object only anchors the ladder ordering and the report."""
+
+    name = "diskless"
+    kind = "diskless"
+    persistent = False
+
+
+# ---------------------------------------------------------------------------
+# Rank-file format: chunked, checksummed, optionally compressed
+# ---------------------------------------------------------------------------
+#
+# [chunk stream][header pickle][tail]
+#   chunk  = <u32 raw_len><u32 stored_len><stored bytes>
+#   tail   = <u64 header_len><8s magic>
+#
+# The header holds the array-stripped payload (arrays replaced by _BlobRef
+# placeholders), the blob table (aligned offsets into the logical raw
+# stream), and the combined Fletcher checksum of the raw stream. The loader
+# re-chunks identically, re-combines the checksum, and rejects mismatches
+# with IntegrityError — the flush-side mirror of the restore pipeline's
+# chunked VERIFY stage.
+
+_MAGIC = b"RTIER001"
+_CHUNK_HDR = struct.Struct("<II")
+_TAIL = struct.Struct("<Q8s")
+_ALIGN = 8  # blob starts are 8-aligned so loaded views never misalign
+
+
+@dataclass(frozen=True)
+class _BlobRef:
+    idx: int
+
+
+def _strip_arrays(obj: Any, blobs: list[np.ndarray]) -> Any:
+    """Replace every ndarray in a payload structure by a ``_BlobRef`` and
+    collect the arrays (in deterministic traversal order) for the chunked
+    byte stream — the header pickle stays tiny."""
+    if isinstance(obj, np.ndarray):
+        blobs.append(obj)
+        return _BlobRef(len(blobs) - 1)
+    if isinstance(obj, dict):
+        return {k: _strip_arrays(v, blobs) for k, v in obj.items()}
+    if isinstance(obj, tuple):
+        return tuple(_strip_arrays(v, blobs) for v in obj)
+    if isinstance(obj, list):
+        return [_strip_arrays(v, blobs) for v in obj]
+    return obj
+
+
+def _fill_arrays(obj: Any, views: list[np.ndarray]) -> Any:
+    if isinstance(obj, _BlobRef):
+        return views[obj.idx]
+    if isinstance(obj, dict):
+        return {k: _fill_arrays(v, views) for k, v in obj.items()}
+    if isinstance(obj, tuple):
+        return tuple(_fill_arrays(v, views) for v in obj)
+    if isinstance(obj, list):
+        return [_fill_arrays(v, views) for v in obj]
+    return obj
+
+
+def _combine(sums: tuple[int, int], chunk: np.ndarray, words: int) -> tuple[int, int, int]:
+    """Fold one chunk's Fletcher pair into the running stream checksum using
+    the linear-combination rule shared with the restore pipeline's VERIFY:
+    s1 = Σ c1, s2 = Σ (c2 + o·c1) at word offset o."""
+    c1, c2 = np_checksum(chunk)
+    s1 = (sums[0] + c1) & _MASK
+    s2 = (sums[1] + c2 + words * c1) & _MASK
+    return s1, s2, words + (chunk.nbytes + 3) // 4
+
+
+def write_rank_file(
+    path: str, payload: StorePayload, *, chunk_bytes: int = 4 << 20,
+    compress: bool = False,
+) -> tuple[int, tuple[int, int]]:
+    """Serialize one rank's committed payload. Returns (raw stream bytes,
+    stream checksum). The byte stream is written in ``chunk_bytes`` pieces,
+    each independently recoverable/verifiable; ``compress`` zlib-packs each
+    chunk (level 1: the flush is bandwidth-, not ratio-, bound)."""
+    blobs: list[np.ndarray] = []
+    light = _strip_arrays(
+        {"own": payload.own, "own_exch": payload.own_exch,
+         "parity": payload.parity, "meta": payload.meta},
+        blobs,
+    )
+    table: list[tuple[int, int, str, tuple[int, ...]]] = []
+    off = 0
+    for b in blobs:
+        table.append((off, int(b.nbytes), np.dtype(b.dtype).name, tuple(b.shape)))
+        off += b.nbytes + (-b.nbytes) % _ALIGN
+    raw_total = off
+
+    sums = (0, 0)
+    words = 0
+    step = max(4, chunk_bytes) & ~3
+    with open(path, "wb") as f:
+        for b in blobs:
+            flat = np.ascontiguousarray(b).reshape(-1).view(np.uint8)
+            pad = (-flat.nbytes) % _ALIGN
+            for lo in range(0, flat.nbytes, step) or [0]:
+                chunk = flat[lo : lo + step]
+                if chunk.nbytes == 0:
+                    continue
+                if pad and lo + step >= flat.nbytes:
+                    # fold the <8 alignment pad bytes into the final chunk
+                    # only — never a whole-blob copy just to append zeros
+                    chunk = np.concatenate([chunk, np.zeros(pad, np.uint8)])
+                s1, s2, words = _combine(sums, chunk, words)
+                sums = (s1, s2)
+                # memoryview: no tobytes() copy — a multi-MiB copy holds the
+                # GIL and would stall the training thread this flush is
+                # supposed to stay off of (io + zlib release it)
+                data = zlib.compress(chunk, 1) if compress else memoryview(chunk)
+                f.write(_CHUNK_HDR.pack(chunk.nbytes, len(data)))
+                f.write(data)
+                time.sleep(0)  # cooperative GIL yield between chunks
+        header = pickle.dumps(
+            {"payload": light, "table": table, "raw_total": raw_total,
+             "checksum": sums, "compress": compress},
+            protocol=pickle.HIGHEST_PROTOCOL,
+        )
+        f.write(header)
+        f.write(_TAIL.pack(len(header), _MAGIC))
+        f.flush()
+        os.fsync(f.fileno())
+    return raw_total, sums
+
+
+def read_rank_file(path: str) -> StorePayload:
+    """Inverse of ``write_rank_file``: stream the chunks into one arena,
+    verifying the combined checksum, then rebuild the payload with zero-copy
+    views into the arena. Raises ``IntegrityError`` on any mismatch."""
+    with open(path, "rb") as f:
+        f.seek(0, os.SEEK_END)
+        size = f.tell()
+        if size < _TAIL.size:
+            raise IntegrityError(f"{path}: truncated (no tail)")
+        f.seek(size - _TAIL.size)
+        header_len, magic = _TAIL.unpack(f.read(_TAIL.size))
+        if magic != _MAGIC:
+            raise IntegrityError(f"{path}: bad magic {magic!r}")
+        header_off = size - _TAIL.size - header_len
+        if header_off < 0:
+            raise IntegrityError(f"{path}: truncated header")
+        f.seek(header_off)
+        header = pickle.loads(f.read(header_len))
+        arena = np.empty(header["raw_total"], np.uint8)
+        f.seek(0)
+        pos = 0
+        sums = (0, 0)
+        words = 0
+        while pos < header["raw_total"]:
+            # Any malformed framing or compression stream is a corruption
+            # verdict, not a crash: the loader must be able to fall back to
+            # the previous generation (struct.error: torn header;
+            # zlib.error: bit-rotten compressed body).
+            try:
+                raw_len, stored_len = _CHUNK_HDR.unpack(f.read(_CHUNK_HDR.size))
+                data = f.read(stored_len)
+                if len(data) != stored_len:
+                    raise IntegrityError(f"{path}: short chunk at raw offset {pos}")
+                raw = zlib.decompress(data) if header["compress"] else data
+            except (struct.error, zlib.error) as e:
+                raise IntegrityError(f"{path}: corrupt chunk at {pos}: {e}") from e
+            if len(raw) != raw_len:
+                raise IntegrityError(f"{path}: chunk length mismatch at {pos}")
+            if pos + raw_len > header["raw_total"]:
+                raise IntegrityError(f"{path}: chunk overruns raw stream at {pos}")
+            chunk = np.frombuffer(raw, np.uint8)
+            s1, s2, words = _combine(sums, chunk, words)
+            sums = (s1, s2)
+            arena[pos : pos + raw_len] = chunk
+            pos += raw_len
+    if sums != tuple(header["checksum"]):
+        raise IntegrityError(f"{path}: stream checksum mismatch")
+    views = [
+        arena[off : off + nbytes].view(dtype_from_name(dt)).reshape(shape)
+        for off, nbytes, dt, shape in header["table"]
+    ]
+    d = _fill_arrays(header["payload"], views)
+    return StorePayload(own=d["own"], own_exch=d["own_exch"],
+                        parity=d["parity"], meta=d["meta"])
+
+
+# ---------------------------------------------------------------------------
+# DiskTier — persistent generations with the atomic commit pointer
+# ---------------------------------------------------------------------------
+
+_GEN_RE = re.compile(r"^gen-(\d{10})$")
+
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True
+    return True
+
+
+def _fsync_dir(path: str) -> None:
+    """Durability for rename/replace: directory-entry updates only survive
+    power loss once the containing directory itself is fsynced."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # pragma: no cover - platforms without dir fds
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+class DiskTier(StorageTier):
+    name = "disk"
+    kind = "disk"
+    persistent = True
+
+    def __init__(self, spec: TierSpec) -> None:
+        assert spec.path, f"{self.kind} tier needs a path"
+        self.path = spec.path
+        self.every = spec.every
+        self.compress = spec.compress
+        self.chunk_bytes = spec.chunk_bytes
+        self.keep = max(2, spec.keep)
+
+    # -- generation bookkeeping ----------------------------------------- #
+    def generations(self) -> list[int]:
+        """Committed generation numbers, ascending."""
+        if not os.path.isdir(self.path):
+            return []
+        out = []
+        for entry in os.listdir(self.path):
+            m = _GEN_RE.match(entry)
+            if m and os.path.exists(os.path.join(self.path, entry, "MANIFEST.pkl")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def has_data(self) -> bool:
+        if self.generations():
+            return True
+        # legacy pickle layout (pre-ladder core/disk.py)
+        return os.path.exists(os.path.join(self.path, "index.pkl"))
+
+    def _gen_dir(self, gen: int) -> str:
+        return os.path.join(self.path, f"gen-{gen:010d}")
+
+    # -- flush: chunked write + atomic commit --------------------------- #
+    def flush(self, snap: TierSnapshot) -> int:
+        t0 = time.perf_counter()
+        os.makedirs(self.path, exist_ok=True)
+        self._gc_tmp()
+        tmp = os.path.join(self.path, f"gen-staging.tmp-{os.getpid()}")
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        total = 0
+        ranks: dict[int, dict[str, Any]] = {}
+        for r, payload in sorted(snap.payloads.items()):
+            fname = os.path.join(tmp, f"rank{r:05d}.tier")
+            nbytes, sums = write_rank_file(
+                fname, payload, chunk_bytes=self.chunk_bytes, compress=self.compress
+            )
+            total += os.path.getsize(fname)
+            ranks[r] = {"raw_bytes": nbytes, "checksum": sums}
+        manifest = {
+            "format": 1,
+            "n_ranks": snap.n_ranks,
+            "ranks": ranks,
+            "created": snap.created,
+            "step": snap.step,
+            "compress": self.compress,
+            "wall_time": time.time(),
+        }
+        with open(os.path.join(tmp, "MANIFEST.pkl"), "wb") as f:
+            pickle.dump(manifest, f, protocol=pickle.HIGHEST_PROTOCOL)
+            f.flush()
+            os.fsync(f.fileno())
+        # COMMIT: atomic rename, then the LATEST pointer — a crash before the
+        # rename leaves only the ignored .tmp dir; after it, a fully valid
+        # generation. The previous generation is never opened for writing.
+        # The generation number is claimed AT the rename (a concurrent
+        # flusher on a shared directory that won the race just pushes us to
+        # the next number), and the parent directory is fsynced so the
+        # rename itself survives power loss.
+        gen = 0
+        for _ in range(64):
+            gens = self.generations()
+            gen = (gens[-1] + 1) if gens else 1
+            try:
+                os.rename(tmp, self._gen_dir(gen))
+                break
+            except OSError:
+                continue  # lost the race: re-scan and take the next number
+        else:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise OSError(f"{self.name} tier: could not claim a generation "
+                          f"number under {self.path!r}")
+        _fsync_dir(self.path)
+        self._write_latest(gen)
+        _fsync_dir(self.path)
+        self._prune()
+        log.info(
+            "%s tier flush: gen %d, %d ranks, %.1f MiB in %.3fs -> %s",
+            self.name, gen, len(ranks), total / 2**20,
+            time.perf_counter() - t0, self.path,
+        )
+        return total
+
+    def _load_order(self, gens: list[int]) -> list[int]:
+        """Generations in load-preference order: the LATEST commit pointer
+        first (when it names a committed generation), then the rest newest-
+        first. A stale or missing pointer (crash between the gen rename and
+        the pointer rewrite) degrades to the pure newest-first scan — the
+        pointer is an optimization of the common case, the directory scan is
+        the source of truth."""
+        order = sorted(gens, reverse=True)
+        try:
+            with open(os.path.join(self.path, "LATEST")) as f:
+                m = _GEN_RE.match(f.read().strip())
+            if m and int(m.group(1)) in gens:
+                latest = int(m.group(1))
+                order = [latest] + [g for g in order if g != latest]
+        except OSError:
+            pass
+        return order
+
+    def _write_latest(self, gen: int) -> None:
+        tmp = os.path.join(self.path, f".LATEST.tmp-{os.getpid()}")
+        with open(tmp, "w") as f:
+            f.write(f"gen-{gen:010d}\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, os.path.join(self.path, "LATEST"))
+
+    def _prune(self) -> None:
+        for gen in self.generations()[: -self.keep]:
+            shutil.rmtree(self._gen_dir(gen), ignore_errors=True)
+
+    def _gc_tmp(self) -> None:
+        """Remove abandoned staging directories. Only our own, or those of
+        writers that no longer exist — a live foreign pid's in-flight staging
+        dir (two jobs sharing a SharedDirTier path) is left alone."""
+        for entry in os.listdir(self.path):
+            if ".tmp-" not in entry:
+                continue
+            try:
+                pid = int(entry.rsplit(".tmp-", 1)[1])
+            except ValueError:
+                pid = -1
+            if pid != os.getpid() and pid > 0 and _pid_alive(pid):
+                continue
+            shutil.rmtree(os.path.join(self.path, entry), ignore_errors=True)
+
+    # -- load: newest valid generation, escalating to older ones --------- #
+    def _read_generation(self, gen: int) -> tuple[dict[int, StorePayload], dict]:
+        gdir = self._gen_dir(gen)
+        with open(os.path.join(gdir, "MANIFEST.pkl"), "rb") as f:
+            manifest = pickle.load(f)
+        payloads: dict[int, StorePayload] = {}
+        for r, info in manifest["ranks"].items():
+            payload = read_rank_file(os.path.join(gdir, f"rank{r:05d}.tier"))
+            payloads[int(r)] = payload
+        return payloads, manifest
+
+    def _coverable(self, engine: Any, manifest: dict) -> bool:
+        """True when the generation's missing ranks (dead at flush time) are
+        still recoverable by the active codec — the same plan check the
+        engine runs, so an incomplete-but-coverable generation is preferred
+        over falling further down the ladder."""
+        missing = set(range(manifest["n_ranks"])) - {int(r) for r in manifest["ranks"]}
+        if not missing:
+            return True
+        from repro.core import codec as codec_mod
+
+        try:
+            codec_mod.codec_recovery_plan(manifest["n_ranks"], missing, engine.codec)
+            return True
+        except dist.DataLostError:
+            return False
+
+    def load(self, engine: Any) -> int:
+        gens = self.generations()
+        if not gens and os.path.exists(os.path.join(self.path, "index.pkl")):
+            # Legacy pickle layout: migrate through the old loader, under the
+            # same contract as generation loads — a mismatched world resizes
+            # the engine (the elastic path maps it back), and ANY failure is
+            # a DataLostError so escalation degrades instead of crashing.
+            try:
+                with open(os.path.join(self.path, "index.pkl"), "rb") as f:
+                    n_ranks = pickle.load(f)["n_ranks"]
+                if engine.n_ranks != n_ranks:
+                    engine.n_ranks = n_ranks
+                    engine.stores = {r: HostStore(r) for r in range(n_ranks)}
+                load_from_disk(engine, self.path)
+            except Exception as e:  # noqa: BLE001 — corrupt legacy pickles
+                raise dist.DataLostError(
+                    f"{self.name} tier: legacy checkpoint at {self.path!r} "
+                    f"unloadable: {type(e).__name__}: {e}"
+                ) from e
+            log.warning("%s tier: loaded legacy pickle checkpoint from %s",
+                        self.name, self.path)
+            return 0
+        errors: list[str] = []
+        for gen in self._load_order(gens):
+            try:
+                payloads, manifest = self._read_generation(gen)
+            except Exception as e:  # noqa: BLE001 — a corrupt generation (torn
+                # header, bit-rot in the pickled structure, absurd sizes) can
+                # raise nearly anything; the contract here is "try the next
+                # older generation", never "crash recovery".
+                errors.append(f"gen {gen}: {type(e).__name__}: {e}")
+                log.warning(
+                    "%s tier: generation %d failed validation (%s); "
+                    "escalating to the previous generation", self.name, gen, e,
+                )
+                continue
+            if not self._coverable(engine, manifest):
+                errors.append(f"gen {gen}: missing ranks exceed codec tolerance")
+                continue
+            n_ranks = manifest["n_ranks"]
+            if engine.n_ranks != n_ranks:
+                # The stored world wins: restore_elastic maps it onto the
+                # caller's M ranks afterward (cold N-to-M restart).
+                engine.n_ranks = n_ranks
+                engine.stores = {r: HostStore(r) for r in range(n_ranks)}
+            for r in range(n_ranks):
+                store = engine.stores[r]
+                store.revive(r)
+                if r in payloads:
+                    store.buffer.write(payloads[r])
+                    store.buffer.swap()
+            log.info(
+                "%s tier: loaded generation %d (step %s, %d/%d ranks)",
+                self.name, gen, manifest.get("step"),
+                len(payloads), n_ranks,
+            )
+            return gen
+        raise dist.DataLostError(
+            f"{self.name} tier at {self.path!r} holds no loadable generation"
+            + (f" ({'; '.join(errors)})" if errors else "")
+        )
+
+
+class SharedDirTier(DiskTier):
+    """Shared-filesystem rung: same format and commit protocol as DiskTier,
+    but semantically the slowest/most durable line — it survives node loss,
+    so it sits last in the ladder and flushes least often (the per-level
+    Daly schedule assigns it the longest interval)."""
+
+    name = "shared"
+    kind = "shared"
+
+
+# ---------------------------------------------------------------------------
+# Ladder construction
+# ---------------------------------------------------------------------------
+
+_TIER_KINDS = {
+    "diskless": lambda spec: DisklessTier(),
+    "disk": DiskTier,
+    "shared": SharedDirTier,
+}
+
+
+def build_tiers(specs: tuple[TierSpec, ...] | list[TierSpec]) -> list[StorageTier]:
+    """Resolve an EngineConfig.tiers ladder. Rung 0 is always the diskless
+    HostStore tier — implicit when the spec list omits it."""
+    tiers: list[StorageTier] = []
+    if not specs or specs[0].kind != "diskless":
+        tiers.append(DisklessTier())
+    for spec in specs or ():
+        if spec.kind not in _TIER_KINDS:
+            raise KeyError(f"unknown storage tier kind {spec.kind!r}; "
+                           f"have {sorted(_TIER_KINDS)}")
+        tiers.append(_TIER_KINDS[spec.kind](spec))
+    return tiers
+
+
+# ---------------------------------------------------------------------------
+# Legacy pickle format (the old core/disk.py) — kept for migration
+# ---------------------------------------------------------------------------
+
+def save_to_disk(engine: Any, path: str) -> int:
+    """Persist every alive rank's read-only buffer (legacy pickle layout).
+    Prefer the DiskTier generation format for new jobs — this entry point
+    exists so pre-ladder callers and their on-disk checkpoints keep working."""
+    os.makedirs(path, exist_ok=True)
+    total = 0
+    index: dict[str, Any] = {"n_ranks": engine.n_ranks, "ranks": []}
+    for r, store in engine.stores.items():
+        if not store.alive or not store.buffer.valid:
+            continue
+        payload = store.buffer.read_only
+        blob = {
+            "own": {k: (np.asarray(v[0]), v[1]) for k, v in payload.own.items()},
+            "own_exch": payload.own_exch,
+            "parity": payload.parity,
+            "meta": payload.meta,
+        }
+        fname = os.path.join(path, f"rank{r:05d}.pkl")
+        with open(fname, "wb") as f:
+            pickle.dump(blob, f, protocol=pickle.HIGHEST_PROTOCOL)
+        total += os.path.getsize(fname)
+        index["ranks"].append(r)
+    with open(os.path.join(path, "index.pkl"), "wb") as f:
+        pickle.dump(index, f)
+    log.info("disk checkpoint: %d ranks, %.1f MiB -> %s", len(index["ranks"]), total / 2**20, path)
+    return total
+
+
+def load_from_disk(engine: Any, path: str) -> None:
+    """Rehydrate the engine's read-only buffers from a legacy pickle disk
+    checkpoint (whole-system restart: every in-memory snapshot was lost).
+    Pre-codec checkpoints are migrated into the codec stripe layout so
+    failed-rank recovery keeps working across the format change — in-memory
+    ``StorePayload`` no longer has the legacy ``recv`` slot, so old pickles
+    that still carry one are translated at load time (the only place the
+    legacy format can enter the system)."""
+    with open(os.path.join(path, "index.pkl"), "rb") as f:
+        index = pickle.load(f)
+    assert index["n_ranks"] == engine.n_ranks, (index["n_ranks"], engine.n_ranks)
+    legacy_recv: dict[int, dict[int, dict[str, Any]]] = {}
+    for r in index["ranks"]:
+        with open(os.path.join(path, f"rank{r:05d}.pkl"), "rb") as f:
+            blob = pickle.load(f)
+        payload = StorePayload(
+            own=blob["own"],
+            own_exch=blob.get("own_exch", {}),
+            parity=blob["parity"],
+            meta=blob["meta"],
+        )
+        if blob.get("recv"):
+            legacy_recv[r] = blob["recv"]
+        store = engine.stores[r]
+        store.revive(r)
+        store.buffer.write(payload)
+        store.buffer.swap()
+    _migrate_legacy_layout(engine, legacy_recv)
+
+
+def _migrate_legacy_layout(
+    engine: Any, legacy_recv: dict[int, dict[int, dict[str, Any]]]
+) -> None:
+    """Translate pre-codec disk layouts in place after a load:
+
+    * parity stripes keyed ``(entity, stripe)`` -> ``(entity, blob=0, stripe)``
+      (XOR had exactly one blob per group);
+    * legacy ``recv`` partner copies (``holder_rank -> origin -> entity ->
+      (flat, manifest)`` out of the pickles) -> whole-blob ``parity`` stripes
+      at the codec's placement for the holder that physically held them, with
+      their manifests replicated into meta so codec decode can unpack the
+      bytes.
+    """
+    groups = dist.parity_groups(
+        engine.n_ranks, engine.codec.group_size(engine.n_ranks)
+    )
+    placements = {
+        gi: engine.codec.placement(groups, gi, engine.n_ranks)
+        for gi in range(len(groups))
+    }
+    for store in engine.stores.values():
+        payload = store.buffer.read_only
+        if payload is None:
+            continue
+        for stripes in payload.parity.values():
+            for key in [k for k in stripes if len(k) == 2]:
+                name, j = key
+                stripes[(name, 0, j)] = stripes.pop(key)
+        for origin, entry in legacy_recv.get(store.rank, {}).items():
+            for b, holders in enumerate(placements.get(origin, [])):
+                if store.rank not in holders:
+                    continue
+                for name, (flat, man) in entry.items():
+                    payload.parity.setdefault(origin, {})[(name, b, 0)] = flat
+                    payload.meta.setdefault("manifests", {})[(origin, name)] = man

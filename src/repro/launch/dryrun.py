@@ -228,6 +228,113 @@ def run_snapshot_cell(
     return rec
 
 
+def run_restore_cell(
+    arch: str, mesh_kind: str, codec: str = "rs", parity_group: int = 4,
+    rs_parity: int = 2, hlo_out: str | None = None,
+) -> dict[str, Any]:
+    """Lower + compile the device-tier fused STRIPED RESTORE program
+    (DESIGN.md §10) for this arch's train state — the recovery mirror of the
+    snapshot cell. Records the per-arch PCIe-bytes comparison of on-device
+    restore (survivor shards + held stripes upload, decode on device) vs the
+    host-decode alternative (stripes + survivor exchange buffers download,
+    decoded buffers upload back) — the roofline input for choosing the
+    recovery path per architecture."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import get_config
+    from repro.core.device_tier import build_striped_restore_program, striped_decode_rows
+    from repro.launch.steps import build_step
+    from repro.utils.hlo import analyze_hlo_collectives
+
+    cfg = get_config(arch)
+    mesh = _mesh(mesh_kind)
+    bundle = build_step(cfg, "train_4k", mesh)
+    state_sds, _ = bundle.args_sds
+    state_sh, _ = bundle.in_shardings
+    pspecs = jax.tree.map(lambda s: s.spec, state_sh)
+
+    prog = build_striped_restore_program(
+        mesh, state_sds, pspecs, redundancy_axis="data",
+        codec=codec, parity_group=parity_group, rs_parity=rs_parity,
+    )
+    n_parity = 1 if codec == "xor" else rs_parity
+    rec: dict[str, Any] = {
+        "arch": arch,
+        "shape": f"restore_{codec}{parity_group}",
+        "mesh": mesh_kind,
+        "kind": "restore",
+        "restore_codec": codec,
+        "parity_group": parity_group,
+        "rs_parity": rs_parity,
+        "fused_buckets": len(prog.buckets),
+        # the comparison cell: device restore vs host decode over PCIe
+        "pcie_bytes_global": prog.pcie_bytes,
+        "host_decode_pcie_bytes_global": prog.host_decode_pcie_bytes,
+        "pcie_savings_vs_host_decode": round(
+            1.0 - prog.pcie_bytes / max(prog.host_decode_pcie_bytes, 1), 4
+        ),
+    }
+
+    # SDS stand-ins for the runtime inputs: parity stripes as the snapshot
+    # program emits them, one decode row + mask entry per failure-axis coord
+    # (one failed rank in the first group — representative; the compiled
+    # program serves every failure combination at runtime).
+    def _axes_prod(axes):
+        k = 1
+        for a in axes:
+            k *= mesh.shape[a]
+        return k
+
+    parity_sds = {
+        b.tag: jax.ShapeDtypeStruct(
+            (n_parity, (b.words // parity_group) * _axes_prod(b.axes)), jnp.uint32
+        )
+        for b in prog.buckets
+    }
+    rows, masks = {}, {}
+    for a in prog.axes:
+        r, m = striped_decode_rows(
+            mesh.shape[a], parity_group, codec, rs_parity, failed={0}
+        )
+        rows[a] = jax.ShapeDtypeStruct(r.shape, jnp.uint32)
+        masks[a] = jax.ShapeDtypeStruct(m.shape, jnp.uint32)
+    parity_sh = {
+        b.tag: NamedSharding(mesh, P(None, b.axes) if b.axes else P(None, None))
+        for b in prog.buckets
+    }
+    repl = {a: NamedSharding(mesh, P()) for a in prog.axes}
+
+    t0 = time.time()
+    jitted = jax.jit(
+        prog.restore_fn, in_shardings=(state_sh, parity_sh, repl, dict(repl)),
+    )
+    lowered = jitted.lower(state_sds, parity_sds, rows, masks)
+    compiled = lowered.compile()
+    rec["lower_compile_s"] = round(time.time() - t0, 2)
+    hlo = compiled.as_text()
+    coll = analyze_hlo_collectives(hlo)
+    rec.update(
+        status="compiled",
+        memory=_memory_analysis_dict(compiled),
+        cost=_cost_analysis_dict(compiled),
+        collectives={
+            "bytes_by_kind": coll.bytes_by_kind,
+            "count_by_kind": coll.count_by_kind,
+            "total_bytes": coll.total_bytes,
+        },
+    )
+    if hlo_out:
+        with gzip.open(hlo_out, "wt") as f:
+            f.write(hlo)
+    print(f"[dryrun] {arch} restore_{codec}{parity_group} x {mesh_kind}: compiled in "
+          f"{rec['lower_compile_s']}s; PCIe {prog.pcie_bytes/2**30:.2f} GiB on-device vs "
+          f"{prog.host_decode_pcie_bytes/2**30:.2f} GiB host-decode "
+          f"({100*rec['pcie_savings_vs_host_decode']:.0f}% saved); {coll.summary()}")
+    return rec
+
+
 def main() -> None:
     from repro.configs import SHAPES, list_archs
 
@@ -243,6 +350,12 @@ def main() -> None:
     ap.add_argument("--snapshot-parity-group", type=int, default=0,
                     help="group size g for --snapshot-codec xor/rs (default 4 "
                          "when a striped codec is selected)")
+    ap.add_argument("--restore", action="store_true",
+                    help="lower the fused striped RESTORE program too "
+                         "(per-arch PCIe comparison: on-device restore vs "
+                         "host decode — DESIGN.md §10)")
+    ap.add_argument("--restore-codec", default="rs", choices=["xor", "rs"],
+                    help="striped codec for the --restore cell")
     ap.add_argument("--fast", action="store_true", help="lower only (no compile)")
     ap.add_argument("--skip-existing", action="store_true",
                     help="skip cells whose JSON already exists (resume)")
@@ -296,6 +409,26 @@ def main() -> None:
                 except Exception as e:
                     failures += 1
                     rec = {"arch": arch, "shape": "snapshot", "mesh": mesh_kind,
+                           "status": "failed", "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    print(f"[dryrun] FAILED {tag}: {rec['error']}")
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=2, default=str)
+        if args.restore:
+            g = args.snapshot_parity_group if args.snapshot_parity_group >= 1 else 4
+            for mesh_kind in meshes:
+                tag = f"{arch}__restore__{mesh_kind}"
+                if args.skip_existing and os.path.exists(os.path.join(args.out, tag + ".json")):
+                    continue
+                try:
+                    rec = run_restore_cell(
+                        arch, mesh_kind, codec=args.restore_codec,
+                        parity_group=g,
+                        hlo_out=os.path.join(args.out, tag + ".hlo.gz"),
+                    )
+                except Exception as e:
+                    failures += 1
+                    rec = {"arch": arch, "shape": "restore", "mesh": mesh_kind,
                            "status": "failed", "error": f"{type(e).__name__}: {e}",
                            "traceback": traceback.format_exc()[-4000:]}
                     print(f"[dryrun] FAILED {tag}: {rec['error']}")

@@ -59,8 +59,26 @@ def main() -> None:
                     help="pipelined drains the chunked TRANSFER/DECODE/VERIFY "
                          "recovery pipeline (DESIGN.md §10); sync keeps the "
                          "serial per-origin decode baseline")
+    ap.add_argument("--tier-dir", default=None,
+                    help="persistent disk rung of the storage-tier ladder "
+                         "(DESIGN.md §12): committed checkpoints flush here in "
+                         "the background; recovery escalates to it when "
+                         "failures exceed codec tolerance or on cold restart")
+    ap.add_argument("--disk-flush-every", type=int, default=0,
+                    help="flush the disk tier every k-th committed checkpoint "
+                         "(0 = adaptive per-level Daly schedule)")
+    ap.add_argument("--tier-mtbf", type=float, default=30 * 24 * 3600.0,
+                    help="MTBF (s) of the failures the diskless tier cannot "
+                         "survive (whole-job loss / beyond-tolerance bursts) — "
+                         "drives the adaptive disk-flush cadence")
+    ap.add_argument("--cold-restart", action="store_true",
+                    help="resume from the newest --tier-dir generation instead "
+                         "of initializing fresh (elastic N-to-M when the stored "
+                         "world size differs from --hosts)")
     ap.add_argument("--out", default=None, help="write history JSON here")
     args = ap.parse_args()
+    if args.cold_restart and not args.tier_dir:
+        ap.error("--cold-restart requires --tier-dir")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -86,6 +104,9 @@ def main() -> None:
         mtbf_individual_s=args.mtbf,
         checkpoint_period=args.period,
         checkpoint_mode=args.checkpoint_mode,
+        tier_dir=args.tier_dir,
+        disk_flush_every=args.disk_flush_every,
+        tier_mtbf_s=args.tier_mtbf,
         engine=EngineConfig(
             scheme=args.scheme,
             parity_group=args.parity_group,
@@ -97,6 +118,9 @@ def main() -> None:
         ),
     )
     trainer = Trainer(model, tcfg, injector=injector)
+    if args.cold_restart:
+        meta = trainer.cold_restart()
+        log.info("cold restart: resuming from step %s", meta.get("step"))
     history = trainer.run(args.steps)
 
     log.info(

@@ -134,6 +134,17 @@ class VirtualCluster:
         )
         return report
 
+    def restart_all(self) -> None:
+        """Full-restart policy (DESIGN.md §12): after a whole-job loss every
+        rank rejoins on a fresh communicator — liveness resets to the full
+        world and the revoked flag clears. The ranks' in-memory stores are
+        rehydrated separately by the engine's tier-ladder escalation (the
+        data, not the hosts, is what the disk generation restores)."""
+        self._alive = set(range(self.n_ranks))
+        self.revoked = False
+        self.fault_log.append(("restart", [self.n_ranks]))
+        log.info("cluster restarted: all %d ranks rejoined", self.n_ranks)
+
     def regrow(self, n_new_ranks: int) -> None:
         """Elastic scale-up: new hosts join (paper §5.2.4's 'add available
         resources ... as soon as they are available')."""

@@ -136,6 +136,8 @@ class Server:
                     raise ProcessFaultException(
                         sorted(self.cluster.failed), "checkpoint"
                     )
+                # staged tier flush starts here, behind the next decode steps
+                self.engine.kick_tier_flush()
                 for r in self.injector.kills_at_step(ticks):
                     self.cluster.kill(r)
                 ticks += 1
@@ -182,7 +184,13 @@ class Server:
 
     def recover(self) -> None:
         if not self.engine.has_valid_checkpoint:
-            raise RuntimeError("no valid session checkpoint")
+            if not self.engine.has_tier_data():
+                raise RuntimeError("no valid session checkpoint")
+            # Whole-serving-job loss: every in-memory session snapshot died
+            # with its host — all ranks rejoin and the engine escalates to
+            # the persistent tier ladder inside restore (DESIGN.md §12).
+            log.warning("no in-memory session checkpoint; escalating to the tier ladder")
+            self.cluster.restart_all()
         elastic = self.scfg.recovery_policy == "elastic" or (
             self.cluster.spares_left < len(self.cluster.failed)
         )

@@ -28,7 +28,7 @@ from jax.sharding import Mesh, NamedSharding
 
 from repro.configs.base import ModelConfig
 from repro.core.checkpoint import CheckpointEngine, EngineConfig
-from repro.core.interval import CheckpointScheduler, system_mtbf
+from repro.core.interval import CheckpointScheduler, MultiLevelScheduler, system_mtbf
 from repro.data.synthetic import SyntheticDataPipeline
 from repro.models.common import ShardCtx
 from repro.models.model import Model
@@ -63,9 +63,18 @@ class TrainerConfig:
     checkpoint_period: int | None = None  # None -> Daly-optimal (adaptive)
     engine: EngineConfig = field(default_factory=EngineConfig)
     moment_dtype: Any = jnp.float32
-    # Optional low-frequency disk tier (paper §5.2.1: protects against
-    # failures that strike the whole system). Every `disk_every` successful
-    # in-memory checkpoints, the read-only buffers are persisted.
+    # Storage-tier ladder (paper §5.2.1 "checkpointing to disk at a lower
+    # frequency"; DESIGN.md §12): `tier_dir` adds a persistent disk rung to
+    # EngineConfig.tiers. Flushes run in the background on the engine's
+    # drain pool every `disk_flush_every` committed checkpoints; 0 derives
+    # the cadence adaptively from the per-level Daly schedule
+    # (interval.MultiLevelScheduler at `tier_mtbf_s`, the MTBF of the
+    # failures the diskless tier cannot survive).
+    tier_dir: str | None = None
+    disk_flush_every: int = 0
+    tier_mtbf_s: float = 30 * 24 * 3600.0
+    # Deprecated aliases for (tier_dir, disk_flush_every) — pre-ladder
+    # configs keep their exact cadence.
     disk_path: str | None = None
     disk_every: int = 8
     # Overlapped checkpointing: "sync" blocks the step loop for the full
@@ -112,8 +121,9 @@ class Trainer:
         self.plan = ShardPlan.from_pspecs(sds, pspecs)
 
         # -- cluster + engine + scheduler -------------------------------------
+        self._engine_cfg = self._resolve_engine_cfg(tcfg)
         self.cluster = VirtualCluster(tcfg.n_virtual_hosts, tcfg.n_spares)
-        self.engine = CheckpointEngine(tcfg.n_virtual_hosts, tcfg.engine)
+        self.engine = CheckpointEngine(tcfg.n_virtual_hosts, self._engine_cfg)
         self.cluster.attach_engine(self.engine)
         self.engine.register(
             "train_state",
@@ -124,6 +134,13 @@ class Trainer:
 
         mtbf = system_mtbf(tcfg.mtbf_individual_s, tcfg.n_virtual_hosts)
         self.scheduler = CheckpointScheduler(mtbf_s=mtbf, step_time_s=0.1)
+        # Per-level Daly schedule for the tier ladder: active when a disk
+        # rung exists and no fixed flush cadence was pinned (DESIGN.md §12).
+        self.mlsched: MultiLevelScheduler | None = None
+        if self.engine.persistent_tiers and self._auto_flush_every:
+            self.mlsched = MultiLevelScheduler(
+                base=self.scheduler, level_mtbf_s=[tcfg.tier_mtbf_s]
+            )
         self.injector = injector or FailureInjector(tcfg.n_virtual_hosts)
         self.straggler = StragglerDetector(tcfg.n_virtual_hosts)
 
@@ -133,8 +150,48 @@ class Trainer:
         self.n_recoveries = 0
         self._last_ckpt_step = -(10**9)
         self._pending_ckpt_step = -(10**9)
+        self._seen_flushes = 0
 
     # ------------------------------------------------------------------ #
+    def _resolve_engine_cfg(self, tcfg: TrainerConfig) -> EngineConfig:
+        """Fold the trainer's tier knobs into the engine config: `tier_dir`
+        (or the deprecated `disk_path`) appends a disk rung to
+        `EngineConfig.tiers` unless the caller configured a ladder
+        explicitly. A pinned cadence (`disk_flush_every` > 0, or the legacy
+        `disk_every` alias) fixes `every`; otherwise the MultiLevelScheduler
+        retunes it after every checkpoint."""
+        from dataclasses import replace
+
+        from repro.core import storage as storage_mod
+
+        tier_dir = tcfg.tier_dir or tcfg.disk_path
+        self._auto_flush_every = False
+        if tcfg.engine.tiers or tier_dir is None:
+            return tcfg.engine
+        every = tcfg.disk_flush_every
+        if every <= 0 and tcfg.disk_path:
+            every = tcfg.disk_every          # legacy alias keeps its cadence
+        if every <= 0:
+            self._auto_flush_every = True
+            every = 4                        # placeholder until first retune
+        return replace(tcfg.engine, tiers=(storage_mod.disk(tier_dir, every=every),))
+
+    def _retune_tier_schedule(self) -> None:
+        """Post-commit tier upkeep, called from the step loop right after a
+        checkpoint commits: kick the staged background flush (the executor
+        wake-up happens here, behind the next train step, never on the
+        blocked capture+finalize path) and fold the last measured flush into
+        the per-level Daly cadence."""
+        self.engine.kick_tier_flush()
+        if self.mlsched is None:
+            return
+        stats = self.engine.stats
+        if stats.tier_flushes > self._seen_flushes and stats.last_flush_s > 0:
+            self._seen_flushes = stats.tier_flushes
+            self.mlsched.record_flush_duration(1, stats.last_flush_s)
+        for tier in self.engine.persistent_tiers:
+            tier.every = self.mlsched.flush_every(1)
+
     def _state_pspecs(self, mesh) -> dict[str, Any]:
         rules = self.model.rules
         p_specs = self.model.abstract_params
@@ -202,6 +259,7 @@ class Trainer:
                     self.scheduler.record_checkpoint_duration(
                         self.timers("checkpoint").mean
                     )
+                    self._retune_tier_schedule()
                 elif pending is False:
                     raise ProcessFaultException(
                         sorted(self.cluster.failed), "checkpoint"
@@ -255,14 +313,10 @@ class Trainer:
                         self.scheduler.record_checkpoint_duration(
                             self.timers("checkpoint").mean
                         )
-                        if (
-                            self.tcfg.disk_path
-                            and self.engine.stats.created % self.tcfg.disk_every == 0
-                        ):
-                            from repro.core.disk import save_to_disk
-
-                            with self.timers("disk_checkpoint"):
-                                save_to_disk(self.engine, self.tcfg.disk_path)
+                        # A due disk rung was flushed by the engine in the
+                        # background (after the pointer swap, off the blocked
+                        # window); only the cadence retune happens here.
+                        self._retune_tier_schedule()
                     else:
                         raise ProcessFaultException(
                             sorted(self.cluster.failed), "checkpoint"
@@ -280,26 +334,26 @@ class Trainer:
         return self.scheduler.due(step, max(self._last_ckpt_step, 0))
 
     def recover(self) -> None:
-        """Stabilize the parallel environment, then roll back (Algorithm 3)."""
-        if not self.engine.has_valid_checkpoint:
-            if self.tcfg.disk_path:
-                # Whole-system-loss path: rehydrate in-memory stores from the
-                # low-frequency disk tier, then recover normally.
-                from repro.core.disk import load_from_disk
+        """Stabilize the parallel environment, then roll back (Algorithm 3).
 
-                log.warning("no in-memory checkpoint; falling back to disk tier")
-                for r in range(self.engine.n_ranks):
-                    if not self.engine.stores[r].alive:
-                        self.engine.stores[r].revive(r)
-                self.cluster._alive = set(range(self.cluster.n_ranks))
-                self.cluster.revoked = False
-                load_from_disk(self.engine, self.tcfg.disk_path)
+        Recovery escalates down the storage-tier ladder (DESIGN.md §12):
+        the engine first reconstructs from surviving hosts via the codec;
+        a whole-system loss (below) or a burst beyond codec tolerance
+        (inside ``engine.restore``) rehydrates the newest valid disk
+        generation and recovery re-runs against it. Failures within
+        tolerance never touch disk."""
+        if not self.engine.has_valid_checkpoint:
+            if self.engine.has_tier_data():
+                # Full-restart policy: every in-memory snapshot died with its
+                # host; all ranks rejoin and the engine escalates internally.
+                log.warning("no in-memory checkpoint; escalating to the tier ladder")
+                self.cluster.restart_all()
                 meta = self.engine.restore()
                 self.n_recoveries += 1
-                log.info("recovered from disk to step %s", meta.get("step"))
+                log.info("recovered from the tier ladder to step %s", meta.get("step"))
                 return
             raise RuntimeError(
-                "fault before the first checkpoint and no disk tier configured"
+                "fault before the first checkpoint and no persistent tier configured"
             )
         report = self.cluster.stabilize(self.tcfg.recovery_policy)  # revoke+shrink
         if report.policy == "elastic":
@@ -369,15 +423,48 @@ class Trainer:
         global state is bit-identical; only the shard topology changes."""
         return self._elastic_recover(n_new)
 
+    def cold_restart(self) -> dict[str, Any]:
+        """Restart a **fresh job** from the persistent tier ladder: nothing
+        in memory (the previous process died), the newest valid disk
+        generation rehydrates the stores, and training resumes from the
+        flushed step — bit-identically, including the data-pipeline state.
+        When the stored world size N differs from this job's
+        ``n_virtual_hosts`` M, the checkpoint is repartitioned N→M through
+        ``restore_elastic`` (the elastic layer's cold-start pairing)."""
+        eng = self.engine
+        if not eng.has_tier_data():
+            raise RuntimeError("cold restart requested but no tier holds data")
+        eng.escalate_from_tiers()         # engine resizes to the stored N
+        n_stored = eng.n_ranks
+        self.cluster.resize(n_stored)     # realign liveness to the loaded world
+        if n_stored != self.tcfg.n_virtual_hosts:
+            log.info(
+                "cold restart: stored world %d -> job world %d (elastic N-to-M)",
+                n_stored, self.tcfg.n_virtual_hosts,
+            )
+            meta = self._elastic_recover(self.tcfg.n_virtual_hosts)
+        else:
+            meta = eng.restore()
+            self._last_ckpt_step = int(meta.get("step", 0))
+        self.n_recoveries += 1
+        log.info("cold restart complete: resuming from step %s", meta.get("step"))
+        return meta
+
     def _swap_engine(self, n_new: int) -> None:
         """Rebuild the engine for a new world size; entities carry over and
         re-shard themselves at the next checkpoint."""
         old = self.engine
         old.close()  # join + release the old engine's pipeline worker
-        new_engine = CheckpointEngine(n_new, self.tcfg.engine)
+        new_engine = CheckpointEngine(n_new, self._engine_cfg)
         for name, ent in old._entities.items():
             new_engine._entities[name] = ent
         new_engine._replicated = set(old._replicated)
+        # Carry the tier ladder's adaptive state across the resize: the
+        # retuned flush cadence, and the flush counter the Daly retune
+        # compares against (the new engine's stats restart at zero).
+        for old_tier, new_tier in zip(old.persistent_tiers, new_engine.persistent_tiers):
+            new_tier.every = old_tier.every
+        self._seen_flushes = 0
         self.cluster.n_ranks = n_new
         self.cluster._alive = set(range(n_new))
         self.cluster.attach_engine(new_engine)

@@ -433,3 +433,69 @@ def test_ragged_world_full_blob_fallback_and_error():
         """
     )
     assert "OK" in _run(code)
+
+
+def test_ragged_fallback_warns_once_per_key_and_pcie_accounting_exact():
+    """The auto full-blob fallback logs exactly ONCE per (axis, size, g)
+    key — repeated builds stay silent, a different g warns again — and the
+    full-blob program's ``pcie_bytes`` equals the measured payload exactly:
+    own copies + the m whole parity blobs every group member keeps."""
+    code = textwrap.dedent(
+        """
+        import logging
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.core import device_tier
+        from repro.core.device_tier import build_snapshot_program
+
+        records = []
+        class Capture(logging.Handler):
+            def emit(self, rec):
+                records.append(rec.getMessage())
+        device_tier.log.addHandler(Capture())
+        device_tier.log.setLevel(logging.WARNING)
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        sds = {"w": jax.ShapeDtypeStruct((8, 4), jnp.float32),
+               "b": jax.ShapeDtypeStruct((8,), jnp.float32)}
+        ps = {"w": P("data", "model"), "b": P("data")}
+        build = lambda g: build_snapshot_program(
+            mesh, sds, ps, validate=False, include_own_copy=True,
+            codec="rs", parity_group=g, rs_parity=2)
+
+        prog = build(3)       # 3 does not divide 4 -> fallback, warns
+        build(3)              # same (axis, size, g) key -> silent
+        build(3)
+        warned = [m for m in records if "emit_full_blobs" in m]
+        assert len(warned) == 1, warned
+        build(5)              # different g -> its own one-time warning
+        warned = [m for m in records if "emit_full_blobs" in m]
+        assert len(warned) == 2, warned
+
+        # full-blob PCIe accounting matches the actual payload bytes:
+        # own copies (unpadded leaves) + m whole blobs per group member
+        rng = np.random.default_rng(0)
+        state = {k: jax.device_put(
+                     jnp.asarray(rng.standard_normal(sds[k].shape), jnp.float32),
+                     NamedSharding(mesh, ps[k]))
+                 for k in sds}
+        payload = jax.jit(prog.snapshot_fn)(state)
+        own = sum(np.asarray(x).nbytes for x in jax.tree.leaves(payload["own"]))
+        axes_prod = {"data": 4}
+        parity = 0
+        for b in prog.buckets:
+            blobs = np.asarray(payload["parity_full"][b.tag])
+            parity += blobs.nbytes
+        assert prog.pcie_bytes == own + parity, (prog.pcie_bytes, own, parity)
+        # and the stripe-path accounting on a dividing world is 1/g of it
+        strided = build_snapshot_program(
+            mesh, sds, ps, validate=False, include_own_copy=True,
+            codec="rs", parity_group=2, rs_parity=2)
+        assert "parity" not in payload  # ragged build stayed full-blob
+        sp = jax.jit(strided.snapshot_fn)(state)
+        sparity = sum(np.asarray(sp["parity"][b.tag]).nbytes for b in strided.buckets)
+        assert strided.pcie_bytes == own + sparity, (strided.pcie_bytes, own, sparity)
+        print("OK")
+        """
+    )
+    assert "OK" in _run(code)

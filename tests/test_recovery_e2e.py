@@ -191,3 +191,50 @@ def test_shrink_then_regrow_bitwise(reference):
     t.run(26)
     assert int(t.state["step"]) == 26
     assert t.n_recoveries == 2
+
+
+def test_cold_restart_from_tier_ladder_n_to_m(tmp_path, reference):
+    """Storage-tier ladder (DESIGN.md §12): the job dies mid-run with a disk
+    rung flushing in the background; a FRESH trainer on a different world
+    size (4 -> 3) cold-restarts from the newest generation via the elastic
+    N-to-M path and finishes bitwise-identical to the fault-free run."""
+    model, ref_state, _ = reference
+    tier = str(tmp_path / "tier")
+    a = Trainer(model, _tcfg(tier_dir=tier, disk_flush_every=1))
+    a.run(12)                    # checkpoints at 5, 10 flushed to disk
+    a.engine.close()             # the "crash": nothing in memory survives
+    gens = a.engine.persistent_tiers[0].generations()
+    assert gens, "background flush produced no generations"
+    del a
+
+    b = Trainer(model, _tcfg(n_virtual_hosts=3, tier_dir=tier, disk_flush_every=1))
+    meta = b.cold_restart()
+    # the newest committed generation: step 10, or step 5 if the step-10
+    # flush was dropped under back-pressure (cadence degrades, never blocks)
+    assert meta["step"] in (5, 10)
+    assert b.engine.stats.tier_escalations == 1
+    assert b.engine.n_ranks == 3
+    b.run(20)
+    b.engine.close()  # join the background flush before pytest tears down logging
+    assert _bitwise(jax.device_get(b.state), ref_state)
+
+
+def test_beyond_tolerance_burst_recovers_from_tier(tmp_path, reference):
+    """A burst larger than the codec tolerates (both members of an XOR
+    group) escalates to the disk rung mid-run and the trajectory still
+    replays bitwise-identically; an in-tolerance failure earlier in the same
+    run never touched disk."""
+    model, ref_state, _ = reference
+    inj = FailureInjector(4, schedule={8: [2], 16: [0, 1]})
+    t = Trainer(
+        model,
+        _tcfg(n_spares=8, tier_dir=str(tmp_path / "tier"), disk_flush_every=1,
+              engine=EngineConfig(parity_group=2)),
+        injector=inj,
+    )
+    t.run(20)
+    t.engine.close()  # join the background flush before pytest tears down logging
+    assert t.n_recoveries == 2
+    # first failure (rank 2) stayed in-memory; the 0+1 group burst escalated
+    assert t.engine.stats.tier_escalations == 1
+    assert _bitwise(jax.device_get(t.state), ref_state)

@@ -66,3 +66,23 @@ def test_encoder_arch_rejected():
     model = build_model(cfg)
     with pytest.raises(AssertionError):
         Server(model, ServerConfig(batch=2, max_seq=16))
+
+
+def test_whole_job_loss_escalates_to_tier_ladder(setup, tmp_path):
+    """Every serving host dies between session checkpoints: recover()
+    takes the full-restart policy, the engine escalates to the disk rung
+    (DESIGN.md §12), and the regenerated continuation stays bitwise
+    identical to the fault-free run."""
+    from repro.core import storage
+    from repro.core.checkpoint import EngineConfig
+
+    cfg, model, params, prompts = setup
+    _, ref = _serve(model, params, prompts)
+    inj = FailureInjector(4, schedule={9: [0, 1, 2, 3]})
+    s, out = _serve(
+        model, params, prompts, injector=inj,
+        engine=EngineConfig(tiers=(storage.disk(str(tmp_path / "tier"), every=1),)),
+    )
+    assert s.n_recoveries >= 1
+    assert s.engine.stats.tier_escalations >= 1
+    assert np.array_equal(ref, out)

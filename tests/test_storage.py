@@ -1,0 +1,531 @@
+"""Storage-tier ladder (DESIGN.md §12): rank-file format, the atomic commit
+protocol, background flush semantics, escalating recovery (codec first, disk
+only beyond tolerance / on cold start), cold N-to-M restart, the chunked
+restore-side decompression, and the per-level Daly schedule."""
+
+import os
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core import storage
+from repro.core.checkpoint import CheckpointEngine, EngineConfig
+from repro.core.hoststore import StorePayload
+from repro.core.integrity import IntegrityError
+from repro.core.interval import CheckpointScheduler, MultiLevelScheduler
+
+
+class _Payload:
+    def __init__(self, n, per_rank_bytes=1 << 16, seed=0):
+        self.n = n
+        self.data = [
+            np.random.default_rng(seed + r).standard_normal(per_rank_bytes // 4).astype(np.float32)
+            for r in range(n)
+        ]
+
+    def snapshot_shards(self, n):
+        return [{"blocks": self.data[r]} for r in range(n)]
+
+    def restore_shards(self, shards):
+        for origin, payload in shards.items():
+            self.data[origin] = np.asarray(payload["blocks"])
+
+
+def _mk_engine(tmp_path, n=8, *, every=1, compress_tier=False, **cfg):
+    base = dict(codec="rs", parity_group=4, rs_parity=2)
+    base.update(cfg)
+    eng = CheckpointEngine(
+        n,
+        EngineConfig(
+            tiers=(storage.disk(str(tmp_path / "tier"), every=every,
+                                compress=compress_tier),),
+            **base,
+        ),
+    )
+    pay = _Payload(n)
+    eng.register("domain", pay)
+    return eng, pay
+
+
+def _kill(eng, ranks, revive=False):
+    for r in ranks:
+        eng.stores[r].wipe()
+        if revive:
+            eng.stores[r].revive(r)
+
+
+# ------------------------------------------------------------------ #
+# rank-file format
+# ------------------------------------------------------------------ #
+
+@pytest.mark.parametrize("compress", [False, True])
+def test_rank_file_roundtrip(tmp_path, compress):
+    rng = np.random.default_rng(0)
+    payload = StorePayload(
+        own={"ent": (rng.integers(0, 255, 100_003, dtype=np.uint8), "manifest")},
+        own_exch={"ent": (rng.integers(0, 255, 997, dtype=np.uint8), "sub")},
+        parity={0: {("ent", 0, 1): rng.integers(0, 255, 4099, dtype=np.uint8)}},
+        meta={"step": 7, "checksums": {"ent": (1, 2)}, "small": np.arange(3, dtype=np.int64)},
+    )
+    path = str(tmp_path / "rank.tier")
+    nbytes, sums = storage.write_rank_file(
+        path, payload, chunk_bytes=1 << 12, compress=compress
+    )
+    assert nbytes > 0
+    out = storage.read_rank_file(path)
+    assert np.array_equal(out.own["ent"][0], payload.own["ent"][0])
+    assert out.own["ent"][1] == "manifest"
+    assert np.array_equal(out.own_exch["ent"][0], payload.own_exch["ent"][0])
+    assert np.array_equal(out.parity[0][("ent", 0, 1)], payload.parity[0][("ent", 0, 1)])
+    assert out.meta["step"] == 7
+    assert np.array_equal(out.meta["small"], payload.meta["small"])
+
+
+@pytest.mark.parametrize("where", ["body", "truncate", "tail"])
+def test_rank_file_corruption_detected(tmp_path, where):
+    payload = StorePayload(own={"e": (np.arange(65536, dtype=np.uint8) % 251, "m")})
+    path = str(tmp_path / "rank.tier")
+    storage.write_rank_file(path, payload, chunk_bytes=1 << 12)
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        if where == "body":
+            f.seek(100)
+            f.write(b"\xff" * 32)
+        elif where == "truncate":
+            f.truncate(size // 2)
+        else:
+            f.seek(size - 4)
+            f.write(b"\x00\x00\x00\x00")
+    with pytest.raises(IntegrityError):
+        storage.read_rank_file(path)
+
+
+def test_rank_file_odd_blob_sizes_roundtrip(tmp_path):
+    """Blob lengths not multiple of the 8-byte alignment: the pad folds into
+    the final chunk (never a whole-blob copy) and round-trips exactly."""
+    rng = np.random.default_rng(3)
+    payload = StorePayload(
+        own={f"e{k}": (rng.integers(0, 255, 5000 + k, dtype=np.uint8), k)
+             for k in range(1, 9)},
+    )
+    path = str(tmp_path / "rank.tier")
+    storage.write_rank_file(path, payload, chunk_bytes=1 << 10)
+    out = storage.read_rank_file(path)
+    for k in range(1, 9):
+        assert np.array_equal(out.own[f"e{k}"][0], payload.own[f"e{k}"][0])
+
+
+def test_corrupt_compressed_generation_escalates(tmp_path):
+    """Bit-rot inside a zlib-compressed chunk is a corruption verdict
+    (escalate to the previous generation), never a crash."""
+    eng, pay = _mk_engine(tmp_path, compress_tier=True)
+    orig = [d.copy() for d in pay.data]
+    assert eng.checkpoint({"step": 1})
+    eng._join_flush()
+    assert eng.checkpoint({"step": 2})
+    eng._join_flush()
+    tier = eng.persistent_tiers[0]
+    newest = tier._gen_dir(tier.generations()[-1])
+    victim = sorted(f for f in os.listdir(newest) if f.endswith(".tier"))[0]
+    with open(os.path.join(newest, victim), "r+b") as f:
+        f.seek(64)
+        f.write(b"\xa5" * 16)                 # inside a compressed chunk body
+    _kill(eng, range(eng.n_ranks))
+    for d in pay.data:
+        d += 1.0
+    meta = eng.restore()
+    assert meta["step"] == 1
+    assert all(np.array_equal(pay.data[r], orig[r]) for r in range(eng.n_ranks))
+    eng.close()
+
+
+def test_latest_pointer_preferred_and_stale_pointer_tolerated(tmp_path):
+    eng, _ = _mk_engine(tmp_path)
+    assert eng.checkpoint({"step": 1})
+    eng._join_flush()
+    assert eng.checkpoint({"step": 2})
+    eng._join_flush()
+    tier = eng.persistent_tiers[0]
+    assert tier._load_order([1, 2]) == [2, 1]     # pointer names gen 2
+    # crash-between-rename-and-pointer-rewrite: stale pointer -> pure scan
+    with open(os.path.join(tier.path, "LATEST"), "w") as f:
+        f.write("gen-0000000042\n")
+    assert tier._load_order([1, 2]) == [2, 1]
+    os.remove(os.path.join(tier.path, "LATEST"))
+    assert tier._load_order([1, 2]) == [2, 1]
+    eng.close()
+
+
+# ------------------------------------------------------------------ #
+# ladder construction + commit protocol
+# ------------------------------------------------------------------ #
+
+def test_build_tiers_implicit_diskless(tmp_path):
+    tiers = storage.build_tiers(())
+    assert [t.kind for t in tiers] == ["diskless"]
+    tiers = storage.build_tiers(
+        (storage.disk(str(tmp_path / "d"), every=4),
+         storage.shared_dir(str(tmp_path / "s"), every=16))
+    )
+    assert [t.kind for t in tiers] == ["diskless", "disk", "shared"]
+    assert [t.every for t in tiers[1:]] == [4, 16]
+    with pytest.raises(KeyError):
+        storage.build_tiers((storage.TierSpec(kind="tape"),))
+
+
+def test_flush_commit_protocol_crash_leaves_previous_generation(tmp_path):
+    """A crash mid-flush (stale .tmp staging dir) never invalidates the
+    committed generations; the next flush garbage-collects the wreckage and
+    commits atomically on top."""
+    eng, pay = _mk_engine(tmp_path)
+    orig = [d.copy() for d in pay.data]
+    assert eng.checkpoint({"step": 1})
+    eng._join_flush()
+    tier = eng.persistent_tiers[0]
+    assert tier.generations() == [1]
+
+    # simulate a flush that died mid-write: partial staging dir + junk file
+    wreck = os.path.join(tier.path, "gen-0000000099.tmp-12345")
+    os.makedirs(wreck)
+    with open(os.path.join(wreck, "rank00000.tier"), "wb") as f:
+        f.write(b"partial garbage")
+    assert tier.generations() == [1]          # staging dirs are invisible
+
+    assert eng.checkpoint({"step": 2})
+    eng._join_flush()
+    assert tier.generations() == [1, 2]
+    assert not os.path.exists(wreck)          # GC'd at the next flush
+    with open(os.path.join(tier.path, "LATEST")) as f:
+        assert f.read().strip() == "gen-0000000002"
+
+    # cold start restores the newest committed generation bit-identically
+    for d in pay.data:
+        d += 3.0
+    _kill(eng, range(eng.n_ranks))
+    meta = eng.restore()
+    assert meta["step"] == 2
+    assert all(np.array_equal(pay.data[r], orig[r]) for r in range(eng.n_ranks))
+    eng.close()
+
+
+def test_generation_pruning_keeps_newest(tmp_path):
+    eng, _ = _mk_engine(tmp_path)
+    for step in range(1, 5):
+        assert eng.checkpoint({"step": step})
+        eng._join_flush()
+    tier = eng.persistent_tiers[0]
+    assert tier.generations() == [3, 4]       # keep=2 (default)
+    eng.close()
+
+
+# ------------------------------------------------------------------ #
+# escalating recovery
+# ------------------------------------------------------------------ #
+
+def test_within_tolerance_never_touches_disk(tmp_path, monkeypatch):
+    """Failures the codec covers must recover purely in memory — the ladder
+    is the fallback, not the fast path."""
+    eng, pay = _mk_engine(tmp_path)
+    orig = [d.copy() for d in pay.data]
+    assert eng.checkpoint({"step": 1})
+    eng._join_flush()
+
+    def _forbidden(self, engine):
+        raise AssertionError("disk tier touched for an in-tolerance failure")
+
+    monkeypatch.setattr(storage.DiskTier, "load", _forbidden)
+    _kill(eng, (1, 2), revive=True)           # 2 <= m in one group
+    for d in pay.data:
+        d += 1.0
+    eng.restore()
+    assert eng.stats.tier_escalations == 0
+    assert eng.stats.reconstructed_restores > 0
+    assert all(np.array_equal(pay.data[r], orig[r]) for r in range(eng.n_ranks))
+    eng.close()
+
+
+@pytest.mark.parametrize("restore_mode", ["pipelined", "sync"])
+def test_beyond_tolerance_burst_escalates_bit_identical(tmp_path, restore_mode):
+    """A burst of m+1 failures in one group exceeds rs(m=2): recovery
+    escalates to the newest disk generation and restores bit-identically."""
+    eng, pay = _mk_engine(tmp_path, restore_mode=restore_mode)
+    orig = [d.copy() for d in pay.data]
+    assert eng.checkpoint({"step": 1})
+    eng._join_flush()
+    _kill(eng, (0, 1, 2), revive=True)        # m+1 = 3 in group 0
+    for d in pay.data:
+        d += 1.0
+    eng.restore()
+    assert eng.stats.tier_escalations == 1
+    assert all(np.array_equal(pay.data[r], orig[r]) for r in range(eng.n_ranks))
+    eng.close()
+
+
+def test_cold_start_zero_survivors(tmp_path):
+    eng, pay = _mk_engine(tmp_path)
+    orig = [d.copy() for d in pay.data]
+    assert eng.checkpoint({"step": 1})
+    eng._join_flush()
+    _kill(eng, range(eng.n_ranks))            # whole job gone, stores dead
+    for d in pay.data:
+        d += 2.0
+    meta = eng.restore()
+    assert meta["step"] == 1
+    assert eng.stats.tier_escalations == 1
+    assert all(np.array_equal(pay.data[r], orig[r]) for r in range(eng.n_ranks))
+    eng.close()
+
+
+def test_corrupt_newest_generation_escalates_to_previous(tmp_path):
+    eng, pay = _mk_engine(tmp_path)
+    orig = [d.copy() for d in pay.data]
+    assert eng.checkpoint({"step": 1})
+    eng._join_flush()
+    assert eng.checkpoint({"step": 2})
+    eng._join_flush()
+    tier = eng.persistent_tiers[0]
+    newest = tier._gen_dir(tier.generations()[-1])
+    victim = sorted(f for f in os.listdir(newest) if f.endswith(".tier"))[0]
+    with open(os.path.join(newest, victim), "r+b") as f:
+        f.seek(64)
+        f.write(b"\x00" * 128)
+    _kill(eng, range(eng.n_ranks))
+    for d in pay.data:
+        d += 5.0
+    meta = eng.restore()
+    assert meta["step"] == 1                  # fell back one generation
+    assert all(np.array_equal(pay.data[r], orig[r]) for r in range(eng.n_ranks))
+    eng.close()
+
+
+def test_incomplete_generation_covered_by_codec(tmp_path):
+    """A generation missing one rank's file (e.g. flushed while a spare was
+    still empty) still loads when the codec can rebuild the hole from the
+    flushed stripes — escalation composes with in-memory recovery."""
+    eng, pay = _mk_engine(tmp_path, every=10**9)   # only the manual flush below
+    orig = [d.copy() for d in pay.data]
+    assert eng.checkpoint({"step": 1})
+    snap = storage.capture_snapshot(eng)
+    del snap.payloads[5]                      # rank 5's file never written
+    tier = eng.persistent_tiers[0]
+    tier.flush(snap)
+    _kill(eng, range(eng.n_ranks))
+    for d in pay.data:
+        d += 1.0
+    eng.restore()
+    assert eng.stats.tier_escalations == 1
+    assert eng.stats.reconstructed_restores >= 1   # rank 5 rebuilt via codec
+    assert all(np.array_equal(pay.data[r], orig[r]) for r in range(eng.n_ranks))
+    eng.close()
+
+
+def test_incomplete_generation_beyond_tolerance_skipped(tmp_path):
+    """A generation whose holes exceed codec tolerance is skipped in favor
+    of an older complete one."""
+    eng, pay = _mk_engine(tmp_path)
+    orig = [d.copy() for d in pay.data]
+    assert eng.checkpoint({"step": 1})
+    eng._join_flush()                         # gen 1: complete
+    snap = storage.capture_snapshot(eng)
+    for r in (0, 1, 2):                       # m+1 holes in group 0
+        del snap.payloads[r]
+    tier = eng.persistent_tiers[0]
+    tier.flush(snap)                          # gen 2: uncoverable
+    _kill(eng, range(eng.n_ranks))
+    eng.restore()
+    assert all(np.array_equal(pay.data[r], orig[r]) for r in range(eng.n_ranks))
+    eng.close()
+
+
+def test_cold_restart_n_to_m_elastic(tmp_path):
+    """N-rank job flushes to disk; a fresh M-rank engine escalates and
+    repartitions via restore_elastic — the merged state is bit-identical."""
+    eng, pay = _mk_engine(tmp_path, n=8)
+    orig = [d.copy() for d in pay.data]
+    assert eng.checkpoint({"step": 3})
+    eng._join_flush()
+    eng.close()
+
+    m = 6
+    eng2 = CheckpointEngine(
+        m, EngineConfig(codec="rs", parity_group=4, rs_parity=2,
+                        tiers=(storage.disk(str(tmp_path / "tier"), every=1),)),
+    )
+    pay2 = _Payload(8, seed=99)               # old-world shard map, wrong data
+    eng2.register("domain", pay2)
+    meta = eng2.restore_elastic(m)
+    assert meta["step"] == 3
+    assert eng2.stats.tier_escalations == 1
+    assert eng2.n_ranks == m
+    # entity without shard_coords: old-world shard map restored globally
+    assert all(np.array_equal(pay2.data[r], orig[r]) for r in range(8))
+    eng2.close()
+
+
+def test_legacy_pickle_fallback(tmp_path):
+    """A directory holding only the old pickle layout still escalates —
+    DiskTier.load falls through to the legacy loader + layout migration."""
+    eng, pay = _mk_engine(tmp_path, every=10**9)   # never auto-flush
+    orig = [d.copy() for d in pay.data]
+    assert eng.checkpoint({"step": 4})
+    storage.save_to_disk(eng, str(tmp_path / "tier"))
+    _kill(eng, range(eng.n_ranks))
+    for d in pay.data:
+        d += 1.0
+    meta = eng.restore()
+    assert meta["step"] == 4
+    assert all(np.array_equal(pay.data[r], orig[r]) for r in range(eng.n_ranks))
+    eng.close()
+
+
+def test_legacy_pickle_world_mismatch_resizes_and_corrupt_degrades(tmp_path):
+    """Legacy-pickle escalation honors the same contract as generation
+    loads: a different stored world resizes the engine (elastic pairing),
+    and a corrupt index degrades to DataLostError instead of crashing."""
+    eng, pay = _mk_engine(tmp_path, n=8, every=10**9)
+    orig = [d.copy() for d in pay.data]
+    assert eng.checkpoint({"step": 4})
+    storage.save_to_disk(eng, str(tmp_path / "tier"))
+    eng.close()
+
+    eng2 = CheckpointEngine(
+        6, EngineConfig(codec="rs", parity_group=4, rs_parity=2,
+                        tiers=(storage.disk(str(tmp_path / "tier"), every=1),)),
+    )
+    pay2 = _Payload(8, seed=7)
+    eng2.register("domain", pay2)
+    meta = eng2.restore_elastic(6)            # cold N(8) -> M(6) off the pickle
+    assert meta["step"] == 4
+    assert all(np.array_equal(pay2.data[r], orig[r]) for r in range(8))
+    eng2.close()
+
+    from repro.core.distribution import DataLostError
+
+    with open(str(tmp_path / "tier" / "index.pkl"), "wb") as f:
+        f.write(b"not a pickle")
+    eng3 = CheckpointEngine(
+        8, EngineConfig(codec="rs", parity_group=4, rs_parity=2,
+                        tiers=(storage.disk(str(tmp_path / "tier"), every=1),)),
+    )
+    eng3.register("domain", _Payload(8))
+    with pytest.raises(DataLostError):
+        eng3.restore()
+    eng3.close()
+
+
+def test_no_tier_raises_original_error(tmp_path):
+    eng = CheckpointEngine(4, EngineConfig(parity_group=2))
+    pay = _Payload(4)
+    eng.register("domain", pay)
+    assert eng.checkpoint({"step": 1})
+    _kill(eng, (0, 1), revive=True)           # 2 > xor tolerance 1
+    from repro.core.distribution import DataLostError
+
+    with pytest.raises(DataLostError):
+        eng.restore()
+    eng.close()
+
+
+# ------------------------------------------------------------------ #
+# background flush semantics
+# ------------------------------------------------------------------ #
+
+def test_flush_runs_in_background_and_backpressure_skips(tmp_path, monkeypatch):
+    eng, _ = _mk_engine(tmp_path)
+    import threading
+
+    gate = threading.Event()
+    real_flush = storage.DiskTier.flush
+
+    def slow_flush(self, snap):
+        gate.wait(timeout=30)
+        return real_flush(self, snap)
+
+    monkeypatch.setattr(storage.DiskTier, "flush", slow_flush)
+    assert eng.checkpoint({"step": 1})        # stages the flush at commit
+    assert eng._flush_pending is not None and eng._flush_future is None
+    eng.kick_tier_flush()                     # the overlap-window submit
+    assert eng._flush_future is not None and not eng._flush_future.done()
+    assert eng.checkpoint({"step": 2})        # previous in flight -> skipped
+    assert eng.stats.tier_flush_skipped == 1
+    gate.set()
+    eng._join_flush()
+    assert eng.stats.tier_flushes == 1
+    assert eng.persistent_tiers[0].generations() == [1]
+    eng.close()
+
+
+def test_async_flush_with_background_drain_bit_identical(tmp_path):
+    """checkpoint_async + background drain + due flush + further checkpoints:
+    the capture-side bank-conflict join keeps the flushed generation torn-free
+    (its checksums validate on load) across back-to-back commits."""
+    eng, pay = _mk_engine(tmp_path, async_workers=2)
+    states = {}
+    for step in range(1, 4):
+        assert eng.checkpoint_async({"step": step})
+        assert eng.finalize_async() is True
+        states[step] = [d.copy() for d in pay.data]
+        for d in pay.data:
+            d *= 1.1
+    eng._join_flush()
+    _kill(eng, range(eng.n_ranks))
+    meta = eng.restore()
+    step = meta["step"]
+    assert all(np.array_equal(pay.data[r], states[step][r]) for r in range(eng.n_ranks))
+    eng.close()
+
+
+# ------------------------------------------------------------------ #
+# chunked restore-side decompression
+# ------------------------------------------------------------------ #
+
+@pytest.mark.parametrize("workers", [1, 3])
+def test_chunked_decompression_bit_identical(tmp_path, workers):
+    results = {}
+    for mode in ("sync", "pipelined"):
+        eng = CheckpointEngine(
+            4,
+            EngineConfig(compress=True, restore_mode=mode,
+                         async_workers=workers, restore_chunk_bytes=1 << 13),
+        )
+        pay = _Payload(4, per_rank_bytes=1 << 17)
+        eng.register("domain", pay)
+        assert eng.checkpoint({"step": 0})
+        _kill(eng, (1,), revive=True)
+        for d in pay.data:
+            d += 1.0
+        eng.restore()
+        results[mode] = [d.copy() for d in pay.data]
+        if mode == "pipelined":
+            # the DEQ stage ran inside the drain, not at finalize
+            assert eng.stats.last_restore_decompressed_bytes > 0
+            assert eng.stats.last_restore_chunks > 1
+        eng.close()
+    for r in range(4):
+        assert np.array_equal(results["sync"][r], results["pipelined"][r])
+
+
+# ------------------------------------------------------------------ #
+# per-level Daly schedule
+# ------------------------------------------------------------------ #
+
+def test_multilevel_scheduler_flush_every():
+    from repro.core.interval import multilevel_intervals, optimal_interval
+
+    base = CheckpointScheduler(mtbf_s=3600.0, step_time_s=0.1, checkpoint_s=1.0)
+    ml = MultiLevelScheduler(base=base, level_mtbf_s=[30 * 24 * 3600.0])
+    # T_disk / T_mem with the priors
+    t0 = base.interval_s
+    t1 = optimal_interval(30 * 24 * 3600.0, 1.0)
+    assert ml.flush_every(1) == max(1, round(t1 / t0))
+    # a slower measured flush pushes the disk interval out
+    for _ in range(4):
+        ml.record_flush_duration(1, 25.0)
+    assert ml.interval_s(1) == optimal_interval(30 * 24 * 3600.0, 25.0)
+    assert ml.flush_every(1) > max(1, round(t1 / t0))
+    # level-0 passthrough + the pure helper
+    assert ml.interval_s(0) == base.interval_s
+    assert multilevel_intervals([3600.0, 86400.0], [1.0, 10.0]) == [
+        optimal_interval(3600.0, 1.0), optimal_interval(86400.0, 10.0)
+    ]
