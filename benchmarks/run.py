@@ -49,6 +49,19 @@ SMOKE_RECOVERY_FLOOR = {"single": 0.5, "burst2": 0.8}
 #: acceptance target is <10%; the gate matches the other tripwires' 20%
 #: headroom for CI noise)
 SMOKE_FLUSH_OVERHEAD_CEIL = 0.2
+#: enabled-span-tracing overhead above this fails --smoke (DESIGN.md §13
+#: budget: <2% on the async create path)
+SMOKE_TRACE_OVERHEAD_CEIL = 0.02
+
+
+def _trace_out_path(argv: list[str]) -> str | None:
+    """``--trace-out PATH`` / ``--trace-out=PATH`` from the raw argv."""
+    for i, a in enumerate(argv):
+        if a == "--trace-out" and i + 1 < len(argv):
+            return argv[i + 1]
+        if a.startswith("--trace-out="):
+            return a.split("=", 1)[1]
+    return None
 
 
 def main() -> None:
@@ -64,6 +77,11 @@ def main() -> None:
     )
 
     smoke = "--smoke" in sys.argv[1:]
+    trace_out = _trace_out_path(sys.argv[1:])
+    if trace_out:
+        from repro.obs.trace import tracer
+
+        tracer().enable()
     full = (
         bench_checkpoint_scaling,
         bench_recovery,
@@ -98,6 +116,35 @@ def main() -> None:
 
     pipeline = dict(getattr(bench_checkpoint_scaling, "RESULTS", {}) or {})
     recovery = dict(getattr(bench_recovery, "RESULTS", {}) or {})
+
+    if trace_out:
+        # Write the recorded span timeline (Perfetto-loadable) and cross-check
+        # the bench's A/B-derived overlap efficiency against the same quantity
+        # reconstructed from span structure alone (DESIGN.md §13): the two
+        # definitions should agree within ~5% — a disagreement means the span
+        # taxonomy no longer covers the pipeline's blocked window.
+        from repro.obs.trace import trace_overlap_efficiency, tracer
+
+        tracer().write(trace_out)
+        print(f"# wrote {trace_out} ({len(tracer().events())} spans)", file=sys.stderr)
+        span_eff = trace_overlap_efficiency(
+            trace_out,
+            eng=pipeline.get("trace_eng_async"),
+            sync_eng=pipeline.get("trace_eng_sync"),
+        )
+        if span_eff is not None:
+            pipeline["overlap_efficiency_spans"] = round(span_eff, 3)
+            bench_eff = pipeline.get("overlap_efficiency")
+            if bench_eff is not None:
+                pipeline["overlap_efficiency_span_delta"] = round(
+                    abs(span_eff - bench_eff), 3
+                )
+                print(
+                    f"# overlap efficiency: bench A/B {bench_eff:.3f} vs "
+                    f"span-reconstructed {span_eff:.3f}",
+                    file=sys.stderr,
+                )
+
     out = {
         "smoke": smoke,
         "rows": rows,
@@ -127,6 +174,18 @@ def main() -> None:
                 f"(> {100 * SMOKE_FLUSH_OVERHEAD_CEIL:.0f}%; tier-less "
                 f"{pipeline.get('blocked_s_async_tierless')}s vs flush "
                 f"{pipeline.get('blocked_s_async_flush')}s)",
+                file=sys.stderr,
+            )
+            failed += 1
+    if smoke and pipeline and "trace_overhead_enabled" in pipeline:
+        overhead = pipeline["trace_overhead_enabled"]
+        if overhead > SMOKE_TRACE_OVERHEAD_CEIL:
+            print(
+                f"# tracing regression: enabled spans add "
+                f"{100 * overhead:.1f}% to the async create path "
+                f"(> {100 * SMOKE_TRACE_OVERHEAD_CEIL:.0f}%; off "
+                f"{pipeline.get('trace_t_off_s')}s vs on "
+                f"{pipeline.get('trace_t_on_s')}s)",
                 file=sys.stderr,
             )
             failed += 1

@@ -60,6 +60,9 @@ core/device_tier.py and shares the distribution schedules.
 
 from __future__ import annotations
 
+import itertools
+import os
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Protocol
@@ -74,9 +77,18 @@ from repro.core.hoststore import HostStore, StorePayload
 from repro.core.integrity import IntegrityError, np_checksum
 from repro.core.serialization import Manifest, dtype_from_name, pack_bytes, unpack_bytes
 from repro.core.snapshot import SnapshotRegistry, Snapshottable
+from repro.obs.journal import EventJournal
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import tracer
 from repro.utils.logging import get_logger
 
 log = get_logger("core.checkpoint")
+
+_TR = tracer()  # process-global span tracer (no-op spans while disabled)
+
+# Engines number themselves so multi-engine traces (benchmark A/B runs,
+# server + trainer in one process) stay attributable per engine.
+_ENGINE_SEQ = itertools.count()
 
 
 class DistributedEntity(Protocol):
@@ -137,36 +149,111 @@ class EngineConfig:
     tiers: tuple = ()
 
 
-@dataclass
-class CheckpointStats:
-    created: int = 0
-    aborted: int = 0
-    restored: int = 0
-    last_create_s: float = 0.0
-    last_restore_s: float = 0.0
-    last_bytes_exchanged: int = 0
-    last_bytes_per_rank: int = 0
-    zero_comm_restores: int = 0    # shards restored from local memory
-    adopted_restores: int = 0      # shards adopted from partner copies
-    reconstructed_restores: int = 0  # shards rebuilt from parity
+#: ``CheckpointStats`` attribute -> (metric kind, metric name, python type,
+#: help). The flat legacy fields are *views* over these registry cells
+#: (DESIGN.md §13): reading an attribute reads the cell, writing / ``+=``
+#: writes it — so the Prometheus endpoint and the legacy fields can never
+#: disagree. Naming follows the ``ckpt_* / restore_* / tier_*`` conventions.
+_STATS_METRICS: dict[str, tuple[str, str, type, str]] = {
+    "created": ("counter", "ckpt_created_total", int,
+                "Checkpoints committed (pointer swaps)."),
+    "aborted": ("counter", "ckpt_aborted_total", int,
+                "Checkpoints aborted before the commit point."),
+    "restored": ("counter", "restore_total", int,
+                 "Successful restores (incl. elastic)."),
+    "last_create_s": ("gauge", "ckpt_last_create_seconds", float,
+                      "Wall time of the last checkpoint, capture to commit."),
+    "last_restore_s": ("gauge", "restore_last_seconds", float,
+                       "Wall time of the last restore."),
+    "last_bytes_exchanged": ("gauge", "ckpt_last_bytes_exchanged", int,
+                             "Redundancy bytes the last checkpoint moved."),
+    "last_bytes_per_rank": ("gauge", "ckpt_last_bytes_per_rank", int,
+                            "Redundancy bytes per rank, last checkpoint."),
+    "zero_comm_restores": ("counter", "restore_zero_comm_shards_total", int,
+                           "Shards restored from local memory."),
+    "adopted_restores": ("counter", "restore_adopted_shards_total", int,
+                         "Shards adopted from partner copies."),
+    "reconstructed_restores": ("counter", "restore_reconstructed_shards_total",
+                               int, "Shards rebuilt from parity."),
     # Pipeline accounting (DESIGN.md §9):
-    last_capture_s: float = 0.0      # phase A: arena-staged snapshot capture
-    last_finalize_wait_s: float = 0.0  # time finalize_async blocked on phase B
-    last_blocked_s: float = 0.0      # capture + finalize wait = critical path
-    last_bytes_staged: int = 0       # own + exchange bytes staged (host DMA)
-    last_pipeline_chunks: int = 0    # (group, entity) units drained
+    "last_capture_s": ("gauge", "ckpt_last_capture_seconds", float,
+                       "Phase A: arena-staged snapshot capture."),
+    "last_finalize_wait_s": ("gauge", "ckpt_last_finalize_wait_seconds", float,
+                             "Time finalize_async blocked on phase B."),
+    "last_blocked_s": ("gauge", "ckpt_last_blocked_seconds", float,
+                       "Capture + finalize wait = blocked critical path."),
+    "last_bytes_staged": ("gauge", "ckpt_last_bytes_staged", int,
+                          "Own + exchange bytes staged (host DMA)."),
+    "last_pipeline_chunks": ("gauge", "ckpt_last_pipeline_chunks", int,
+                             "(group, entity) units the last drain ran."),
     # Restore pipeline accounting (DESIGN.md §10):
-    last_restore_decode_s: float = 0.0   # wall time of the recovery drain
-    last_restore_bytes_rebuilt: int = 0  # padded bytes reconstructed by codecs
-    last_restore_chunks: int = 0         # TRANSFER/DECODE/VERIFY chunks drained
-    last_restore_decompressed_bytes: int = 0  # bytes expanded by the chunked DEQ stage
+    "last_restore_decode_s": ("gauge", "restore_last_decode_seconds", float,
+                              "Wall time of the last recovery drain."),
+    "last_restore_bytes_rebuilt": ("gauge", "restore_last_bytes_rebuilt", int,
+                                   "Padded bytes codecs reconstructed."),
+    "last_restore_chunks": ("gauge", "restore_last_chunks", int,
+                            "TRANSFER/DECODE/VERIFY chunks drained."),
+    "last_restore_decompressed_bytes": (
+        "gauge", "restore_last_decompressed_bytes", int,
+        "Bytes expanded by the chunked DEQ stage."),
     # Storage-tier ladder accounting (DESIGN.md §12):
-    tier_flushes: int = 0            # persistent-tier generations committed
-    tier_flush_skipped: int = 0      # flushes dropped under back-pressure
-    tier_escalations: int = 0        # recoveries that fell back to a tier
-    last_flush_s: float = 0.0        # wall time of the last background flush
-    last_flush_bytes: int = 0        # bytes the last flush wrote
-    last_flush_wait_s: float = 0.0   # capture time spent joining a flush (bank conflict)
+    "tier_flushes": ("counter", "tier_flush_total", int,
+                     "Persistent-tier generations committed."),
+    "tier_flush_skipped": ("counter", "tier_flush_skipped_total", int,
+                           "Flush cadence points dropped under back-pressure."),
+    "tier_flush_queued": ("counter", "tier_flush_queued_total", int,
+                          "Flush cadence points deferred into the queue slot."),
+    "tier_escalations": ("counter", "tier_escalation_total", int,
+                         "Recoveries that fell back to a persistent tier."),
+    "last_flush_s": ("gauge", "tier_last_flush_seconds", float,
+                     "Wall time of the last background flush."),
+    "last_flush_bytes": ("gauge", "tier_last_flush_bytes", int,
+                         "Bytes the last flush wrote."),
+    "last_flush_wait_s": ("gauge", "tier_last_flush_wait_seconds", float,
+                          "Capture time spent joining a flush (bank conflict)."),
+}
+
+
+class CheckpointStats:
+    """Flat engine statistics, kept as a backwards-compatible *view* over a
+    :class:`~repro.obs.metrics.MetricsRegistry`: every attribute maps to a
+    typed counter/gauge cell (``_STATS_METRICS``), so ``stats.created += 1``
+    and ``registry.counter("ckpt_created_total")`` are the same number by
+    construction. Int-typed fields round-trip through ``int`` on read, so
+    ``%d`` formatting and exact comparisons behave like the old dataclass."""
+
+    __slots__ = ("registry", "_cells")
+
+    def __init__(self, registry: MetricsRegistry | None = None) -> None:
+        reg = registry if registry is not None else MetricsRegistry()
+        cells: dict[str, tuple[Any, type]] = {}
+        for attr, (kind, name, typ, help_) in _STATS_METRICS.items():
+            cells[attr] = (getattr(reg, kind)(name, help_), typ)
+        object.__setattr__(self, "registry", reg)
+        object.__setattr__(self, "_cells", cells)
+
+    def __getattr__(self, attr: str) -> Any:
+        try:
+            metric, typ = object.__getattribute__(self, "_cells")[attr]
+        except KeyError:
+            raise AttributeError(attr) from None
+        return typ(metric.value())
+
+    def __setattr__(self, attr: str, value: Any) -> None:
+        try:
+            metric, _ = self._cells[attr]
+        except KeyError:
+            raise AttributeError(
+                f"CheckpointStats has no field {attr!r}"
+            ) from None
+        metric.set(value)
+
+    def __repr__(self) -> str:
+        body = ", ".join(f"{a}={getattr(self, a)!r}" for a in _STATS_METRICS)
+        return f"CheckpointStats({body})"
+
+    def as_dict(self) -> dict[str, Any]:
+        return {a: getattr(self, a) for a in _STATS_METRICS}
 
 
 class FaultDuringCheckpoint(RuntimeError):
@@ -235,6 +322,9 @@ class _PendingCheckpoint:
     # exchange checksums for the restore pipeline's VERIFY, computed off
     # the blocking capture window. Keys are (rank, entity).
     exch_sums: dict = field(default_factory=dict)
+    # Generation this snapshot becomes when it commits (stats.created + 1 at
+    # capture) — the label that ties every span of one checkpoint together.
+    gen: int = 0
 
 
 class CheckpointEngine:
@@ -266,8 +356,40 @@ class CheckpointEngine:
         self.tiers = storage_mod.build_tiers(cfg.tiers)
         self._flush_future: Any = None       # at most one in-flight flush
         self._flush_created: int = -1        # commit counter when it started
-        self._flush_pending: Any = None      # staged (due, snapshot), not yet kicked
+        self._flush_pending: Any = None      # queued (due, snapshot): one slot
+        # Guards the _flush_pending hand-off between the caller and the flush
+        # worker (the worker chains the queued flush inline — back-pressure
+        # defers a cadence point instead of dropping it).
+        self._flush_lock = threading.Lock()
+        # Observability (DESIGN.md §13): an engine-local metrics registry —
+        # CheckpointStats is a view over it — per-stage histograms for the
+        # adaptive chunk planner, and a durable event journal placed inside
+        # the first persistent tier's directory so the failure/recovery
+        # record survives cold restarts alongside the checkpoint data.
+        self._obs_id = next(_ENGINE_SEQ)
         self.stats = CheckpointStats()
+        self.registry = self.stats.registry
+        self._h_stage = self.registry.histogram(
+            "ckpt_stage_seconds", "Create-pipeline stage seconds per unit.",
+            labelnames=("phase",),
+        )
+        self._h_rate = self.registry.histogram(
+            "ckpt_stage_bytes_per_second",
+            "Create-pipeline stage throughput per unit.", labelnames=("phase",),
+        )
+        self._h_restore = self.registry.histogram(
+            "restore_stage_seconds", "Restore-pipeline stage seconds per chunk.",
+            labelnames=("phase",),
+        )
+        journal_path = next(
+            (
+                os.path.join(t.path, "journal.jsonl")
+                for t in self.tiers
+                if t.persistent and getattr(t, "path", None)
+            ),
+            None,
+        )
+        self.journal = EventJournal(journal_path, self.registry)
         self.last_elastic_report: Any = None  # ElasticReport of the last N-to-M restore
         if cfg.parity_group:
             # Non-dividing world sizes get a short last group (parity_groups):
@@ -326,34 +448,49 @@ class CheckpointEngine:
             # committed — drain + drop it before its arenas are re-leased.
             self.discard_pending()
         self.kick_tier_flush()  # staged flush runs behind this capture (disjoint banks)
-        if self._flush_future is not None and self.stats.created > self._flush_created:
-            # A commit happened since the in-flight tier flush started, so
-            # the bank this capture is about to stage into is the bank the
-            # flush is still reading (generation-parity rule): join it before
-            # the arenas are re-leased. The flush had a full checkpoint
-            # interval to finish, so this wait is the rare stall, not the
-            # steady state — recorded in last_flush_wait_s either way.
+        queued = self._flush_pending  # local ref: the flush worker may take it
+        if (
+            self._flush_future is not None
+            and self.stats.created > self._flush_created
+        ) or (queued is not None and self.stats.created > queued[1].created):
+            # A commit happened since the in-flight tier flush started (or
+            # since a queued flush captured its snapshot), so the bank this
+            # capture is about to stage into is the bank that flush still
+            # reads (generation-parity rule): join it before the arenas are
+            # re-leased. The flush had a full checkpoint interval to finish,
+            # so this wait is the rare stall, not the steady state —
+            # recorded in last_flush_wait_s either way.
             t_w = time.perf_counter()
-            self._join_flush()
+            with _TR.span("flush_wait", eng=self._obs_id, gen=self.stats.created + 1):
+                self._join_flush()
             self.stats.last_flush_wait_s = time.perf_counter() - t_w
         else:
             self.stats.last_flush_wait_s = 0.0
+        gen = self.stats.created + 1  # generation this capture becomes on commit
         t0 = time.perf_counter()
         alive0 = self._alive_fn()
         try:
-            self._fault_hook("before_create")
-            packed_partner, manifests, exch_sums = self._capture(alive0, meta)
-            self._fault_hook("after_create")
+            with _TR.span("capture", eng=self._obs_id, gen=gen):
+                self._fault_hook("before_create")
+                packed_partner, manifests, exch_sums = self._capture(alive0, meta)
+                self._fault_hook("after_create")
         except FaultDuringCheckpoint as e:
             log.warning("checkpoint aborted during create: %s", e)
             for s in self.stores.values():
                 s.buffer.discard_writable()
             self.stats.aborted += 1
+            self.journal.record("abort", phase="capture", gen=gen, cause=str(e))
             return False
 
         self.stats.last_capture_s = time.perf_counter() - t0
+        self._h_stage.observe(self.stats.last_capture_s, phase="capture")
+        if self.stats.last_capture_s > 0:
+            self._h_rate.observe(
+                self.stats.last_bytes_staged / self.stats.last_capture_s,
+                phase="capture",
+            )
         pending = _PendingCheckpoint(
-            packed_partner, manifests, alive0, t0, exch_sums=exch_sums
+            packed_partner, manifests, alive0, t0, exch_sums=exch_sums, gen=gen
         )
         self._pending = pending
         if background is None:
@@ -532,13 +669,30 @@ class CheckpointEngine:
         total = 0
         verified: set = set()
         encoded: dict[int, list[np.ndarray]] = {}
+        eng, gen = self._obs_id, pending.gen
         for i in range(n + 2):
             if i < n:
-                encoded[i] = self._encode_unit(units[i], pending)
+                u = units[i]
+                with _TR.span("encode", eng=eng, gen=gen, group=u[0], entity=u[3]):
+                    t = time.perf_counter()
+                    encoded[i] = self._encode_unit(u, pending)
+                    self._h_stage.observe(time.perf_counter() - t, phase="encode")
             if 0 <= i - 1 < n:
-                total += self._transfer_unit(units[i - 1], encoded.pop(i - 1))
+                u = units[i - 1]
+                with _TR.span("transfer", eng=eng, gen=gen, group=u[0], entity=u[3]):
+                    t = time.perf_counter()
+                    nb = self._transfer_unit(u, encoded.pop(i - 1))
+                    dt = time.perf_counter() - t
+                    self._h_stage.observe(dt, phase="transfer")
+                    if dt > 0:
+                        self._h_rate.observe(nb / dt, phase="transfer")
+                    total += nb
             if 0 <= i - 2 < n:
-                self._verify_unit(units[i - 2], verified)
+                u = units[i - 2]
+                with _TR.span("verify", eng=eng, gen=gen, group=u[0], entity=u[3]):
+                    t = time.perf_counter()
+                    self._verify_unit(u, verified)
+                    self._h_stage.observe(time.perf_counter() - t, phase="verify")
             self._fault_hook("pipeline_chunk")
         return total, verified
 
@@ -650,25 +804,28 @@ class CheckpointEngine:
             return None
         pending = self._pending
         self._pending = None
+        eng, gen = self._obs_id, pending.gen
         t_wait0 = time.perf_counter()
         try:
-            if pending.future is not None:
-                pending.bytes_exchanged, pending.verified = pending.future.result()
-            else:
-                pending.bytes_exchanged, pending.verified = self._drain(pending)
+            with _TR.span("finalize_wait", eng=eng, gen=gen):
+                if pending.future is not None:
+                    pending.bytes_exchanged, pending.verified = pending.future.result()
+                else:
+                    pending.bytes_exchanged, pending.verified = self._drain(pending)
             self.stats.last_finalize_wait_s = time.perf_counter() - t_wait0
 
             self._fault_hook("after_distribute")
 
             # -- handshake ----------------------------------------------------
-            alive1 = self._alive_fn()
-            if alive1 != pending.alive0 or len(alive1) < self.n_ranks:
-                raise FaultDuringCheckpoint(
-                    f"rank set changed during checkpoint: "
-                    f"{sorted(pending.alive0 - alive1)} died"
-                )
-            if self.cfg.validate:
-                self._validate(alive1, skip=pending.verified)
+            with _TR.span("handshake", eng=eng, gen=gen):
+                alive1 = self._alive_fn()
+                if alive1 != pending.alive0 or len(alive1) < self.n_ranks:
+                    raise FaultDuringCheckpoint(
+                        f"rank set changed during checkpoint: "
+                        f"{sorted(pending.alive0 - alive1)} died"
+                    )
+                if self.cfg.validate:
+                    self._validate(alive1, skip=pending.verified)
 
         except FaultDuringCheckpoint as e:
             # Read-only buffers were never touched; discard in-flight writes.
@@ -676,11 +833,13 @@ class CheckpointEngine:
             for s in self.stores.values():
                 s.buffer.discard_writable()
             self.stats.aborted += 1
+            self.journal.record("abort", phase="finalize", gen=gen, cause=str(e))
             return False
 
         # -- swap: pointer swap, no communication — cannot be interrupted ----
-        for r in pending.alive0:
-            self.stores[r].buffer.swap()
+        with _TR.span("commit", eng=eng, gen=gen):
+            for r in pending.alive0:
+                self.stores[r].buffer.swap()
         self.stats.created += 1
         self.stats.last_create_s = time.perf_counter() - pending.t0
         self.stats.last_blocked_s = (
@@ -708,23 +867,41 @@ class CheckpointEngine:
         but the executor submission is deferred to ``kick_tier_flush`` (the
         overlap window: the next ``drain_done`` poll, the next capture, or
         any join point), so not even the worker wake-up lands on the blocked
-        capture+finalize path. At most one flush is in flight — when the
-        previous one has not finished, this cadence point is *skipped*
-        (back-pressure degrades the disk frequency, it never blocks
-        training)."""
+        capture+finalize path. At most one flush is in flight plus at most
+        one *queued* in the single-slot ``_flush_pending``: a cadence point
+        arriving while a flush is still running is chained behind it (counted
+        in ``tier_flush_queued``), and only when the slot is already
+        occupied is the older staged snapshot *dropped* in favor of the
+        newer one (counted in ``tier_flush_skipped``) — back-pressure
+        degrades the disk frequency, it never blocks training."""
         due = [t for t in self.persistent_tiers if t.due(self.stats.created)]
         if not due:
             return
-        if self._flush_future is not None and not self._flush_future.done():
-            self.stats.tier_flush_skipped += len(due)
-            log.warning(
-                "tier flush skipped at commit %d: previous flush still "
-                "in flight", self.stats.created,
+        with self._flush_lock:
+            in_flight = (
+                self._flush_future is not None and not self._flush_future.done()
             )
-            return
-        if self._flush_pending is not None:
-            self.stats.tier_flush_skipped += len(self._flush_pending[0])
-        self._flush_pending = (due, storage_mod.capture_snapshot(self))
+            if self._flush_pending is not None:
+                # The single queue slot is taken: drop the OLDER staged
+                # snapshot (the newer generation supersedes it on disk).
+                old_due, old_snap = self._flush_pending
+                self.stats.tier_flush_skipped += len(old_due)
+                self.journal.record(
+                    "flush_skipped", gen=old_snap.created,
+                    superseded_by=self.stats.created,
+                )
+                log.warning(
+                    "tier flush of commit %d dropped: superseded by commit %d "
+                    "while a flush is still in flight",
+                    old_snap.created, self.stats.created,
+                )
+            self._flush_pending = (due, storage_mod.capture_snapshot(self))
+            if in_flight:
+                self.stats.tier_flush_queued += len(due)
+                self.journal.record(
+                    "flush_queued", gen=self.stats.created,
+                    tiers=",".join(t.name for t in due),
+                )
 
     def kick_tier_flush(self) -> None:
         """Submit a staged tier flush to the drain pool. Public overlap-
@@ -732,41 +909,80 @@ class CheckpointEngine:
         polls) invoke it between the commit and the next blocked window so
         the executor wake-up happens off the critical path; every join point
         (``_join_flush``/``close``/escalation) kicks first, so a staged
-        generation is never lost."""
-        pending, self._flush_pending = self._flush_pending, None
-        if pending is None:
-            return
-        due, snap = pending
-        if self._flush_future is not None:
-            if not self._flush_future.done():
-                self.stats.tier_flush_skipped += len(due)
+        generation is never lost. While a flush is in flight the staged one
+        stays queued — the worker chains it (``_run_flush``) the moment the
+        running flush finishes, so the cadence point is deferred, not
+        dropped."""
+        submit = None
+        with self._flush_lock:
+            if self._flush_pending is None:
                 return
-            self._join_flush()  # reap the finished future
-        self._flush_created = snap.created
-        self._flush_future = self._executor().submit(self._run_flush, due, snap)
+            if self._flush_future is not None:
+                if not self._flush_future.done():
+                    return  # stays queued; the flush worker will chain it
+                self._reap_flush_future()
+            submit, self._flush_pending = self._flush_pending, None
+            self._flush_created = submit[1].created
+        self._flush_future = self._executor().submit(self._run_flush, *submit)
 
-    def _run_flush(self, tiers: list, snap) -> int:
-        t0 = time.perf_counter()
-        total = 0
-        for tier in tiers:
-            total += tier.flush(snap)
-        self.stats.tier_flushes += len(tiers)
-        self.stats.last_flush_s = time.perf_counter() - t0
-        self.stats.last_flush_bytes = total
-        return total
-
-    def _join_flush(self) -> None:
-        """Kick any staged flush, then join (and clear) the in-flight one.
-        A failed flush is logged, never raised — losing one disk generation
-        must not kill the job; the previous generation stays valid by the
-        commit protocol."""
-        self.kick_tier_flush()
+    def _reap_flush_future(self) -> None:
+        """Clear a finished flush future, logging (never raising) a failure —
+        losing one disk generation must not kill the job; the previous
+        generation stays valid by the commit protocol."""
         future, self._flush_future = self._flush_future, None
         if future is not None:
             try:
                 future.result()
             except Exception as e:  # noqa: BLE001 - flush failure is non-fatal
                 log.warning("tier flush failed (previous generation intact): %s", e)
+
+    def _run_flush(self, tiers: list, snap) -> int:
+        """Flush worker: write one staged generation to every due tier, then
+        chain any flush that was queued behind this one (under the lock, so
+        a hand-off races neither ``kick_tier_flush`` nor a new staging)."""
+        grand_total = 0
+        while True:
+            t0 = time.perf_counter()
+            total = 0
+            try:
+                for tier in tiers:
+                    with _TR.span(
+                        "flush", eng=self._obs_id, gen=snap.created, tier=tier.name
+                    ):
+                        total += tier.flush(snap)
+            except Exception as e:
+                self.journal.record(
+                    "flush", ok=False, gen=snap.created, cause=str(e),
+                )
+                raise
+            self.stats.tier_flushes += len(tiers)
+            self.stats.last_flush_s = time.perf_counter() - t0
+            self.stats.last_flush_bytes = total
+            self.journal.record(
+                "flush", ok=True, gen=snap.created, bytes=total,
+                duration_s=self.stats.last_flush_s, n_ranks=snap.n_ranks,
+                tiers=",".join(t.name for t in tiers),
+            )
+            grand_total += total
+            with self._flush_lock:
+                if self._flush_pending is None:
+                    return grand_total
+                (tiers, snap), self._flush_pending = self._flush_pending, None
+                self._flush_created = snap.created
+
+    def _join_flush(self) -> None:
+        """Kick any staged flush, then join (and clear) the in-flight one —
+        looping, because the worker may chain a flush that was queued after
+        its last hand-off check. Returns with no flush staged, queued, or
+        running."""
+        while True:
+            self.kick_tier_flush()
+            if self._flush_future is None:
+                with self._flush_lock:
+                    if self._flush_pending is None:
+                        return
+                continue  # a late staging slipped in: kick it too
+            self._reap_flush_future()
 
     def has_tier_data(self) -> bool:
         """True when some persistent tier holds at least one committed
@@ -793,11 +1009,17 @@ class CheckpointEngine:
         errors: list[str] = []
         for tier in self.persistent_tiers:
             try:
-                gen = tier.load(self)
+                t0 = time.perf_counter()
+                with _TR.span("escalate", eng=self._obs_id, tier=tier.name):
+                    gen = tier.load(self)
             except dist.DataLostError as e:
                 errors.append(str(e))
                 continue
             self.stats.tier_escalations += 1
+            self.journal.record(
+                "escalation", tier=tier.name, gen=gen, n_ranks=self.n_ranks,
+                duration_s=time.perf_counter() - t0,
+            )
             log.warning(
                 "recovery escalated to the %s tier (generation %s, %d ranks)",
                 tier.name, gen, self.n_ranks,
@@ -917,13 +1139,23 @@ class CheckpointEngine:
         alive = self._alive_fn()
         failed = set(range(self.n_ranks)) - alive
 
-        recovered = self._recover_all(alive, failed)
-        for name, ent in self._entities.items():
-            ent.restore_shards(recovered[name])
+        with _TR.span(
+            "restore", eng=self._obs_id, failed=len(failed), mode=self.cfg.restore_mode
+        ):
+            recovered = self._recover_all(alive, failed)
+            for name, ent in self._entities.items():
+                ent.restore_shards(recovered[name])
 
         meta = self.checkpoint_step()
         self.stats.restored += 1
         self.stats.last_restore_s = time.perf_counter() - t0
+        self.journal.record(
+            "recovery", mode=self.cfg.restore_mode, failed=len(failed),
+            n_ranks=self.n_ranks, duration_s=self.stats.last_restore_s,
+            bytes_rebuilt=self.stats.last_restore_bytes_rebuilt,
+            escalations=self.stats.tier_escalations,
+            step=meta.get("step") if isinstance(meta, dict) else None,
+        )
         return meta
 
     def _recover_all(
@@ -1071,16 +1303,45 @@ class CheckpointEngine:
             # Serial drain: the literal three-stage pipeline per unit, then
             # the local unpacks — same bytes, deterministic chunk order (the
             # form the mid-restore fault-injection tests kill at).
+            eng = self._obs_id
             for u in units:
                 nc = len(u.bounds)
                 for i in range(nc + 2):
                     if i < nc:
-                        self._restore_transfer_chunk(u, *u.bounds[i])
+                        with _TR.span(
+                            "r_transfer", eng=eng, group=u.gi, entity=u.name, chunk=i
+                        ):
+                            t = time.perf_counter()
+                            self._restore_transfer_chunk(u, *u.bounds[i])
+                            self._h_restore.observe(
+                                time.perf_counter() - t, phase="r_transfer"
+                            )
                     if 0 <= i - 1 < nc:
-                        u.decode_chunk(*u.bounds[i - 1])
+                        with _TR.span(
+                            "decode", eng=eng, group=u.gi, entity=u.name, chunk=i - 1
+                        ):
+                            t = time.perf_counter()
+                            u.decode_chunk(*u.bounds[i - 1])
+                            self._h_restore.observe(
+                                time.perf_counter() - t, phase="decode"
+                            )
                     if 0 <= i - 2 < nc:
-                        self._restore_verify_chunk(u, i - 2)
-                        self._restore_decompress_chunk(u, i - 2)
+                        with _TR.span(
+                            "r_verify", eng=eng, group=u.gi, entity=u.name, chunk=i - 2
+                        ):
+                            t = time.perf_counter()
+                            self._restore_verify_chunk(u, i - 2)
+                            self._h_restore.observe(
+                                time.perf_counter() - t, phase="r_verify"
+                            )
+                        with _TR.span(
+                            "deq", eng=eng, group=u.gi, entity=u.name, chunk=i - 2
+                        ):
+                            t = time.perf_counter()
+                            self._restore_decompress_chunk(u, i - 2)
+                            self._h_restore.observe(
+                                time.perf_counter() - t, phase="deq"
+                            )
                     self._fault_hook("restore_chunk")
             for name, origin, flat, man in local_jobs:
                 results[(name, origin)] = unpack_bytes(flat, man)
@@ -1280,10 +1541,23 @@ class CheckpointEngine:
         (chunks are range-disjoint, so any interleaving across workers is
         race-free and byte-identical to the serial pipeline)."""
         lo, hi = u.bounds[ci]
-        self._restore_transfer_chunk(u, lo, hi)
-        u.decode_chunk(lo, hi)
-        self._restore_verify_chunk(u, ci)
-        self._restore_decompress_chunk(u, ci)
+        eng = self._obs_id
+        with _TR.span("r_transfer", eng=eng, group=u.gi, entity=u.name, chunk=ci):
+            t = time.perf_counter()
+            self._restore_transfer_chunk(u, lo, hi)
+            self._h_restore.observe(time.perf_counter() - t, phase="r_transfer")
+        with _TR.span("decode", eng=eng, group=u.gi, entity=u.name, chunk=ci):
+            t = time.perf_counter()
+            u.decode_chunk(lo, hi)
+            self._h_restore.observe(time.perf_counter() - t, phase="decode")
+        with _TR.span("r_verify", eng=eng, group=u.gi, entity=u.name, chunk=ci):
+            t = time.perf_counter()
+            self._restore_verify_chunk(u, ci)
+            self._h_restore.observe(time.perf_counter() - t, phase="r_verify")
+        with _TR.span("deq", eng=eng, group=u.gi, entity=u.name, chunk=ci):
+            t = time.perf_counter()
+            self._restore_decompress_chunk(u, ci)
+            self._h_restore.observe(time.perf_counter() - t, phase="deq")
         self._fault_hook("restore_chunk")
 
     def _restore_transfer_chunk(self, u: _RestoreUnit, lo: int, hi: int) -> None:
@@ -1454,7 +1728,11 @@ class CheckpointEngine:
             residency[origin] = dense if dense is not None and dense < new_n_ranks else None
 
         report = ElasticReport(n_old=self.n_ranks, n_new=new_n_ranks)
-        recovered = self._recover_all(alive, failed)  # pipelined or sync
+        with _TR.span(
+            "restore", eng=self._obs_id, failed=len(failed),
+            mode=self.cfg.restore_mode, elastic=new_n_ranks,
+        ):
+            recovered = self._recover_all(alive, failed)  # pipelined or sync
         for name, ent in self._entities.items():
             shards = recovered[name]
             coords = self._stored_coords(name)
@@ -1484,6 +1762,12 @@ class CheckpointEngine:
         self.last_elastic_report = report
         self.stats.restored += 1
         self.stats.last_restore_s = time.perf_counter() - t0
+        self.journal.record(
+            "resize", n_old=report.n_old, n_new=report.n_new,
+            failed=len(failed), bytes_moved=report.bytes_moved,
+            bytes_total=report.bytes_total,
+            duration_s=self.stats.last_restore_s,
+        )
         log.info(
             "elastic restore %d->%d ranks: %.1f MiB held, %.1f MiB moved (lower bound %.1f)",
             report.n_old, report.n_new,

@@ -44,6 +44,7 @@ Modes (hillclimb levers, see EXPERIMENTS §Perf):
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Any
@@ -54,10 +55,24 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import distribution as dist
+from repro.obs.trace import tracer
 from repro.sharding.mesh import shard_map
 from repro.utils.logging import get_logger
 
 log = get_logger("core.device_tier")
+_TR = tracer()
+
+
+def _traced(phase: str):
+    """Span-wrap a program builder (trace-time cost shows up in Perfetto as
+    one block per build, DESIGN.md §13) without touching its body."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            with _TR.span(phase):
+                return fn(*args, **kwargs)
+        return wrapper
+    return deco
 
 #: (axis, size, g) combos already warned about taking the full-blob fallback
 _RAGGED_WARNED: set[tuple[str, int, int]] = set()
@@ -178,6 +193,7 @@ def _from_u32_local(
     return flat.reshape(local)
 
 
+@_traced("build_snapshot_program")
 def build_snapshot_program(
     mesh: Mesh,
     state_sds: Any,            # ShapeDtypeStruct pytree
@@ -633,18 +649,20 @@ def staged_snapshot_fetch(
     (the staged path recomputes the handshake checksum host-side).
     """
     fetched: list[Any] = []
-    for fn in prog.snapshot_chunk_fns:
-        out = fn(state)  # async dispatch: the device starts this chunk's encode
-        if double_buffer:
-            for x in jax.tree.leaves(out):
-                x.copy_to_host_async()  # D2H queued behind the chunk's compute
-            fetched.append(out)
-        else:
-            fetched.append(jax.tree.map(np.asarray, out))  # blocking fetch
+    for i, fn in enumerate(prog.snapshot_chunk_fns):
+        with _TR.span("d2h_dispatch", chunk=i, double_buffer=double_buffer):
+            out = fn(state)  # async dispatch: the device starts this chunk's encode
+            if double_buffer:
+                for x in jax.tree.leaves(out):
+                    x.copy_to_host_async()  # D2H queued behind the chunk's compute
+                fetched.append(out)
+            else:
+                fetched.append(jax.tree.map(np.asarray, out))  # blocking fetch
     payload: dict[str, Any] = {}
-    for out in fetched:
+    for i, out in enumerate(fetched):
         if double_buffer:
-            out = jax.tree.map(np.asarray, out)  # already host-resident
+            with _TR.span("d2h_merge", chunk=i):
+                out = jax.tree.map(np.asarray, out)  # already host-resident
         for key, val in out.items():
             if isinstance(val, dict) and isinstance(payload.get(key), dict):
                 payload[key].update(val)
@@ -748,6 +766,7 @@ def striped_decode_rows(
     return rows.astype(np.uint32), mask
 
 
+@_traced("build_striped_restore_program")
 def build_striped_restore_program(
     mesh: Mesh,
     state_sds: Any,

@@ -62,9 +62,12 @@ from repro.core import distribution as dist
 from repro.core.hoststore import HostStore, StorePayload
 from repro.core.integrity import IntegrityError, np_checksum
 from repro.core.serialization import dtype_from_name
+from repro.obs.trace import tracer
 from repro.utils.logging import get_logger
 
 log = get_logger("core.storage")
+
+_TR = tracer()  # tier FLUSH / load spans land on the engine's timeline
 
 _MASK = 0xFFFFFFFF
 
@@ -438,9 +441,10 @@ class DiskTier(StorageTier):
         ranks: dict[int, dict[str, Any]] = {}
         for r, payload in sorted(snap.payloads.items()):
             fname = os.path.join(tmp, f"rank{r:05d}.tier")
-            nbytes, sums = write_rank_file(
-                fname, payload, chunk_bytes=self.chunk_bytes, compress=self.compress
-            )
+            with _TR.span("tier_write", tier=self.name, gen=snap.created, rank=r):
+                nbytes, sums = write_rank_file(
+                    fname, payload, chunk_bytes=self.chunk_bytes, compress=self.compress
+                )
             total += os.path.getsize(fname)
             ranks[r] = {"raw_bytes": nbytes, "checksum": sums}
         manifest = {
@@ -584,12 +588,17 @@ class DiskTier(StorageTier):
         errors: list[str] = []
         for gen in self._load_order(gens):
             try:
-                payloads, manifest = self._read_generation(gen)
+                with _TR.span("tier_read", tier=self.name, tier_gen=gen):
+                    payloads, manifest = self._read_generation(gen)
             except Exception as e:  # noqa: BLE001 — a corrupt generation (torn
                 # header, bit-rot in the pickled structure, absurd sizes) can
                 # raise nearly anything; the contract here is "try the next
                 # older generation", never "crash recovery".
                 errors.append(f"gen {gen}: {type(e).__name__}: {e}")
+                _TR.instant(
+                    "tier_gen_rejected", tier=self.name, tier_gen=gen,
+                    cause=type(e).__name__,
+                )
                 log.warning(
                     "%s tier: generation %d failed validation (%s); "
                     "escalating to the previous generation", self.name, gen, e,

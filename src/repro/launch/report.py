@@ -1,0 +1,104 @@
+"""Render a recorded checkpoint trace as a per-generation phase report.
+
+    PYTHONPATH=src python -m repro.launch.report trace.json
+
+Input is the Chrome-trace JSON written by ``--trace-out`` (launch.train,
+launch.serve, benchmarks/run.py). The report shows, per checkpoint
+generation: how long every pipeline phase ran (CAPTURE / ENCODE / TRANSFER /
+VERIFY / handshake / commit / flush), how long the caller was actually
+blocked, and the reconstructed overlap efficiency
+
+    overlap_efficiency = 1 - blocked / serialized
+
+(DESIGN.md §13) — the same quantity the scaling benchmark derives from its
+sync-vs-async A/B, but measured from span structure alone. Restore-path
+phases (r_transfer / decode / r_verify / deq / escalate) are listed when the
+trace holds a recovery.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.obs.trace import (
+    BLOCKING_PHASES,
+    CREATE_PHASES,
+    RESTORE_PHASES,
+    generation_breakdown,
+    load_trace,
+)
+
+_EXTRA_PHASES = ("finalize_wait", "flush_wait", "flush", "restore")
+
+
+def _fmt_s(v: float) -> str:
+    if v >= 1.0:
+        return f"{v:8.3f}s"
+    return f"{v * 1e3:7.2f}ms"
+
+
+def render(path: str, eng: int | None = None) -> str:
+    """The report text (also returned for tests / programmatic use)."""
+    events = load_trace(path)
+    gens = generation_breakdown(events, eng=eng)
+    lines: list[str] = []
+    if not gens:
+        return "no labeled checkpoint generations in trace\n"
+
+    phase_order = [
+        p for p in (*CREATE_PHASES, *_EXTRA_PHASES, *RESTORE_PHASES)
+        if any(p in rec["phases"] for rec in gens.values())
+    ]
+    hdr = f"{'gen':>5} " + " ".join(f"{p:>13}" for p in phase_order)
+    hdr += f" {'blocked':>10} {'overlap_eff':>11}"
+    lines.append(hdr)
+    lines.append("-" * len(hdr))
+    for g in sorted(gens, key=lambda x: (not isinstance(x, int), x)):
+        rec = gens[g]
+        row = f"{g!s:>5} "
+        row += " ".join(
+            f"{_fmt_s(rec['phases'][p]):>13}" if p in rec["phases"] else f"{'-':>13}"
+            for p in phase_order
+        )
+        has_wait = "finalize_wait" in rec["phases"]
+        row += f" {_fmt_s(rec['blocked_s']):>10}"
+        row += f" {rec['overlap_efficiency']:>10.1%}" if has_wait else f" {'(sync)':>11}"
+        lines.append(row)
+
+    waited = [
+        rec["overlap_efficiency"] for rec in gens.values()
+        if "finalize_wait" in rec["phases"] and rec["serialized_s"] > 0
+    ]
+    if waited:
+        lines.append("")
+        lines.append(
+            f"async generations: {len(waited)}; overlap efficiency "
+            f"best={max(waited):.1%} mean={sum(waited) / len(waited):.1%}"
+        )
+    lines.append(
+        f"blocking phases: {', '.join(BLOCKING_PHASES)}; "
+        f"{len(events)} spans total"
+    )
+    return "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="Per-generation phase breakdown of a --trace-out file"
+    )
+    ap.add_argument("trace", help="Chrome-trace JSON written by --trace-out")
+    ap.add_argument("--eng", type=int, default=None,
+                    help="filter to one engine's spans (the 'eng' label)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the raw per-generation dict as JSON instead")
+    args = ap.parse_args()
+    if args.json:
+        gens = generation_breakdown(load_trace(args.trace), eng=args.eng)
+        print(json.dumps({str(k): v for k, v in gens.items()}, indent=2))
+    else:
+        print(render(args.trace, eng=args.eng), end="")
+
+
+if __name__ == "__main__":
+    main()

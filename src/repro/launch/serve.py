@@ -14,6 +14,7 @@ import numpy as np
 from repro.configs import get_config, list_archs
 from repro.core.checkpoint import EngineConfig
 from repro.models import build_model
+from repro.obs.trace import tracer
 from repro.runtime.failures import FailureInjector
 from repro.runtime.server import Server, ServerConfig
 from repro.utils.logging import get_logger
@@ -41,7 +42,16 @@ def main() -> None:
     ap.add_argument("--checkpoint-mode", choices=["sync", "async"], default="sync",
                     help="async overlaps the session-checkpoint pipeline with "
                          "the next decode steps (DESIGN.md §9)")
+    ap.add_argument("--trace-out", default=None,
+                    help="record checkpoint/restore spans and write a "
+                         "Chrome-trace JSON here (Perfetto-loadable)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve the engine's Prometheus registry on "
+                         "http://127.0.0.1:PORT/metrics (0 = free port)")
     args = ap.parse_args()
+
+    if args.trace_out:
+        tracer().enable()
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -69,6 +79,8 @@ def main() -> None:
         ),
     )
     server = Server(model, scfg, injector=injector)
+    if args.metrics_port is not None:
+        server.start_metrics_server(args.metrics_port)
     prompts = np.random.default_rng(0).integers(
         0, cfg.vocab_size, (args.batch, args.prompt_len), dtype=np.int32
     )
@@ -82,6 +94,11 @@ def main() -> None:
              args.gen, args.batch, server.n_recoveries)
     for b in range(min(args.batch, 2)):
         log.info("session %d: %s", b, out[b, : args.prompt_len + args.gen].tolist())
+    if args.trace_out:
+        tracer().write(args.trace_out)
+        log.info("trace written to %s (%d events)", args.trace_out,
+                 len(tracer().events()))
+    server.stop_metrics_server()
 
 
 if __name__ == "__main__":

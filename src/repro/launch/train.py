@@ -17,6 +17,7 @@ import jax
 from repro.configs import get_config, list_archs
 from repro.core.checkpoint import EngineConfig
 from repro.models import build_model
+from repro.obs.trace import tracer
 from repro.runtime.failures import FailureInjector
 from repro.runtime.trainer import Trainer, TrainerConfig
 from repro.utils.logging import get_logger
@@ -76,9 +77,19 @@ def main() -> None:
                          "of initializing fresh (elastic N-to-M when the stored "
                          "world size differs from --hosts)")
     ap.add_argument("--out", default=None, help="write history JSON here")
+    ap.add_argument("--trace-out", default=None,
+                    help="record checkpoint/restore spans and write a "
+                         "Chrome-trace JSON here (load in Perfetto, or render "
+                         "with `python -m repro.launch.report <file>`)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve the engine's Prometheus registry on "
+                         "http://127.0.0.1:PORT/metrics (0 = pick a free port)")
     args = ap.parse_args()
     if args.cold_restart and not args.tier_dir:
         ap.error("--cold-restart requires --tier-dir")
+
+    if args.trace_out:
+        tracer().enable()
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -118,6 +129,13 @@ def main() -> None:
         ),
     )
     trainer = Trainer(model, tcfg, injector=injector)
+    metrics_server = None
+    if args.metrics_port is not None:
+        from repro.runtime.server import start_metrics_server
+
+        metrics_server = start_metrics_server(
+            lambda: trainer.engine.registry, args.metrics_port
+        )
     if args.cold_restart:
         meta = trainer.cold_restart()
         log.info("cold restart: resuming from step %s", meta.get("step"))
@@ -137,6 +155,12 @@ def main() -> None:
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"history": history, "timers": trainer.timers.report()}, f, indent=2)
+    if args.trace_out:
+        tracer().write(args.trace_out)
+        log.info("trace written to %s (%d events)", args.trace_out,
+                 len(tracer().events()))
+    if metrics_server is not None:
+        metrics_server.stop()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,37 @@
+"""Unified observability subsystem (DESIGN.md §13).
+
+Three cooperating pieces, all stdlib-only:
+
+  * ``trace``   — nested, labeled, thread-aware spans exported as
+                  Chrome-trace/Perfetto JSON. One process-global tracer
+                  (``tracer()``), disabled by default: a disabled span is a
+                  shared no-op singleton, so the hot paths pay one attribute
+                  check and nothing else.
+  * ``metrics`` — typed counters/gauges/histograms with label sets, rendered
+                  as Prometheus text exposition or a JSON snapshot. Engines
+                  own their registry (``CheckpointStats`` is a *view* over
+                  it); servers expose it over HTTP.
+  * ``journal`` — append-only structured event log (failures, recoveries,
+                  escalations, resizes, tier-flush outcomes) written through
+                  the storage-tier machinery so it survives restarts and
+                  feeds MTBF fitting.
+
+Metric naming conventions: ``ckpt_*`` (create path), ``restore_*`` (recovery
+path), ``tier_*`` (storage ladder), ``journal_*`` (event log) — see
+DESIGN.md §13.
+"""
+
+from repro.obs.journal import EventJournal, fit_failure_stats
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.trace import Tracer, tracer
+
+__all__ = [
+    "Counter",
+    "EventJournal",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Tracer",
+    "fit_failure_stats",
+    "tracer",
+]

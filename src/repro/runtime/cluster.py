@@ -23,6 +23,7 @@ from typing import Literal
 
 from repro.core.checkpoint import CheckpointEngine
 from repro.core.distribution import shrink_reassignment
+from repro.obs.trace import tracer
 from repro.runtime.failures import ProcessFaultException
 from repro.utils.logging import get_logger
 
@@ -69,13 +70,22 @@ class VirtualCluster:
     # ------------------------------------------------------------------ #
     # fault signalling (ULFM analogue)
     # ------------------------------------------------------------------ #
-    def kill(self, rank: int) -> None:
+    def kill(self, rank: int, cause: str = "host_failure") -> None:
         """Host failure: the rank leaves; its in-memory snapshots are erased."""
         if rank not in self._alive:
             return
         self._alive.discard(rank)
         if self.engine is not None:
             self.engine.stores[rank].wipe()
+            # Durable failure record (DESIGN.md §13): rank, generation at the
+            # moment of death, cause — journaled through the engine's tier
+            # machinery so MTBF fitting survives restarts.
+            self.engine.journal.record(
+                "failure", rank=rank, cause=cause,
+                gen=self.engine.stats.created,
+                alive=len(self._alive), n_ranks=self.n_ranks,
+            )
+        tracer().instant("kill", rank=rank, cause=cause)
         self.revoked = True  # next communication raises (MPI_ERR_REVOKED)
         self.fault_log.append(("kill", [rank]))
         log.warning("rank %d killed (alive: %d/%d)", rank, len(self._alive), self.n_ranks)
@@ -143,6 +153,8 @@ class VirtualCluster:
         self._alive = set(range(self.n_ranks))
         self.revoked = False
         self.fault_log.append(("restart", [self.n_ranks]))
+        if self.engine is not None:
+            self.engine.journal.record("cold_restart", n_ranks=self.n_ranks)
         log.info("cluster restarted: all %d ranks rejoined", self.n_ranks)
 
     def regrow(self, n_new_ranks: int) -> None:

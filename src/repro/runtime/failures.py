@@ -107,3 +107,15 @@ class FailureInjector:
         if not self.mtbf_rank_s:
             return None
         return self.mtbf_rank_s / self.n_ranks
+
+
+def observed_failure_stats(journal) -> dict:
+    """Fit failure statistics from an engine's durable event journal
+    (DESIGN.md §13): observed count, MTBF (mean inter-burst arrival), and the
+    burst profile — the empirical counterpart of ``expected_system_mtbf_s``
+    that topology-aware policy (ROADMAP item 5) fits its schedule against.
+    Accepts an :class:`repro.obs.EventJournal` or a raw event list."""
+    from repro.obs.journal import fit_failure_stats
+
+    events = journal.events() if hasattr(journal, "events") else journal
+    return fit_failure_stats(events)

@@ -14,8 +14,11 @@ decoding makes the regenerated continuation bitwise identical.
 
 from __future__ import annotations
 
+import json
+import threading
 from dataclasses import dataclass, field
-from typing import Any
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +34,69 @@ from repro.sharding.spec import specs_to_shape_dtype
 from repro.utils.logging import get_logger
 
 log = get_logger("runtime.server")
+
+
+class MetricsServer:
+    """Tiny stdlib scrape endpoint for a :class:`repro.obs.MetricsRegistry`.
+
+    ``GET /metrics`` renders Prometheus text exposition; ``GET /metrics.json``
+    renders the same registry as a JSON snapshot. The registry is resolved
+    through ``registry_fn`` at every request — the trainer/server swaps its
+    CheckpointEngine (and with it the engine-local registry) on elastic
+    shrink, and the endpoint must follow the live engine, not a stale one.
+    """
+
+    def __init__(self, registry_fn: Callable[[], Any], port: int = 0) -> None:
+        self._registry_fn = registry_fn
+
+        class _Handler(BaseHTTPRequestHandler):
+            def do_GET(handler) -> None:  # noqa: N805 — http.server idiom
+                try:
+                    reg = registry_fn()
+                    if handler.path.rstrip("/") in ("", "/metrics"):
+                        body = reg.render_prometheus().encode()
+                        ctype = "text/plain; version=0.0.4; charset=utf-8"
+                    elif handler.path == "/metrics.json":
+                        body = json.dumps(reg.snapshot()).encode()
+                        ctype = "application/json"
+                    else:
+                        handler.send_error(404)
+                        return
+                except Exception as e:  # pragma: no cover — scrape must not kill serving
+                    handler.send_error(500, str(e))
+                    return
+                handler.send_response(200)
+                handler.send_header("Content-Type", ctype)
+                handler.send_header("Content-Length", str(len(body)))
+                handler.end_headers()
+                handler.wfile.write(body)
+
+            def log_message(handler, fmt, *args) -> None:
+                log.debug("metrics scrape: " + fmt, *args)
+
+        self._httpd = ThreadingHTTPServer(("127.0.0.1", port), _Handler)
+        self._httpd.daemon_threads = True
+        self.port: int = self._httpd.server_address[1]
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, name="metrics-server", daemon=True
+        )
+        self._thread.start()
+        log.info("metrics endpoint listening on 127.0.0.1:%d", self.port)
+
+    @property
+    def url(self) -> str:
+        return f"http://127.0.0.1:{self.port}/metrics"
+
+    def stop(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        self._thread.join(timeout=5.0)
+
+
+def start_metrics_server(registry_fn: Callable[[], Any], port: int = 0) -> MetricsServer:
+    """Serve ``registry_fn()`` on ``/metrics`` + ``/metrics.json``; ``port=0``
+    picks a free port (read it back from ``.port``)."""
+    return MetricsServer(registry_fn, port)
 
 
 @dataclass
@@ -89,6 +155,21 @@ class Server:
         self._build_engine(scfg.n_virtual_hosts)
         self.injector = injector or FailureInjector(scfg.n_virtual_hosts)
         self.n_recoveries = 0
+        self._metrics_server: MetricsServer | None = None
+
+    def start_metrics_server(self, port: int = 0) -> MetricsServer:
+        """Expose the live engine's registry (survives engine swaps) on
+        ``/metrics`` + ``/metrics.json``; returns the running endpoint."""
+        if self._metrics_server is None:
+            self._metrics_server = start_metrics_server(
+                lambda: self.engine.registry, port
+            )
+        return self._metrics_server
+
+    def stop_metrics_server(self) -> None:
+        if self._metrics_server is not None:
+            self._metrics_server.stop()
+            self._metrics_server = None
 
     def _build_engine(self, n_ranks: int) -> None:
         if getattr(self, "engine", None) is not None:

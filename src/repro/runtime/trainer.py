@@ -41,10 +41,12 @@ from repro.runtime.straggler import StragglerDetector
 from repro.sharding.axes import tree_pspecs, tree_zero1_pspecs
 from repro.sharding.mesh import abstract_mesh
 from repro.sharding.spec import specs_to_shape_dtype
-from repro.utils.logging import get_logger
+from repro.obs.trace import tracer
+from repro.utils.logging import bind, get_logger
 from repro.utils.timing import TimerRegistry
 
 log = get_logger("runtime.trainer")
+_TR = tracer()
 
 
 @dataclass
@@ -125,6 +127,7 @@ class Trainer:
         self.cluster = VirtualCluster(tcfg.n_virtual_hosts, tcfg.n_spares)
         self.engine = CheckpointEngine(tcfg.n_virtual_hosts, self._engine_cfg)
         self.cluster.attach_engine(self.engine)
+        self.timers.attach_metrics(self.engine.registry)
         self.engine.register(
             "train_state",
             ShardedStateEntity(lambda: self.state, self._set_state, self.plan),
@@ -272,13 +275,25 @@ class Trainer:
                     self.cluster.kill(r)
                 self.cluster.barrier("step")
 
-                with self.timers("train_step"):
+                with self.timers("train_step"), _TR.span("train_step", step=step):
                     batch = self.data.next()
                     self.state, metrics = self._train_step(self.state, batch)
                     jax.block_until_ready(self.state["step"])
                 self.scheduler.record_step_time(self.timers("train_step").mean)
                 self.history.append(
                     {"step": step, "loss": float(metrics["loss"])}
+                )
+                # Per-step structured record (DESIGN.md §13): DEBUG level so
+                # run logs stay quiet by default; under REPRO_LOG_JSON=1 the
+                # fields become machine-parseable JSON keys.
+                log.debug(
+                    "step", extra={"fields": {
+                        "component": "trainer", "step": step,
+                        "loss": float(metrics["loss"]),
+                        "generation": self.engine.stats.created,
+                        "alive": len(self.cluster.alive()),
+                        "step_s": self.timers("train_step").last,
+                    }},
                 )
 
                 if self._checkpoint_due(int(self.state["step"])):
@@ -469,6 +484,9 @@ class Trainer:
         self.cluster._alive = set(range(n_new))
         self.cluster.attach_engine(new_engine)
         self.engine = new_engine
+        # Re-point the timer mirror at the new engine-local registry so
+        # `timer_seconds` keeps accumulating after an elastic resize.
+        self.timers.attach_metrics(new_engine.registry)
 
     def regrow(self, n_new: int) -> None:
         """Elastic scale-up (paper §5.2.4: reintegrate resources during

@@ -20,7 +20,11 @@ class Timer:
     name: str
     total: float = 0.0
     count: int = 0
+    last: float = 0.0                  # transient (not part of the snapshot)
     _start: float | None = None
+    # Optional mirror into a metrics histogram (TimerRegistry.attach_metrics):
+    # called (name, seconds) at every stop. Transient, like ``last``.
+    _observer: object = None
 
     def start(self) -> None:
         self._start = time.perf_counter()
@@ -30,7 +34,10 @@ class Timer:
         dt = time.perf_counter() - self._start
         self.total += dt
         self.count += 1
+        self.last = dt
         self._start = None
+        if self._observer is not None:
+            self._observer(self.name, dt)
         return dt
 
     def __enter__(self) -> "Timer":
@@ -59,11 +66,28 @@ class TimerRegistry:
 
     def __init__(self) -> None:
         self._timers: dict[str, Timer] = {}
+        self._observer = None
 
     def __call__(self, name: str) -> Timer:
         if name not in self._timers:
-            self._timers[name] = Timer(name)
+            self._timers[name] = Timer(name, _observer=self._observer)
         return self._timers[name]
+
+    def attach_metrics(self, registry) -> None:
+        """Mirror every timer stop into ``timer_seconds{name=...}`` of a
+        :class:`repro.obs.MetricsRegistry` — the trainer's step/checkpoint
+        timers become Prometheus histograms with zero call-site changes."""
+        hist = registry.histogram(
+            "timer_seconds", "TimerRegistry stops, by timer name.",
+            labelnames=("name",),
+        )
+
+        def observe(name: str, dt: float) -> None:
+            hist.observe(dt, name=name)
+
+        self._observer = observe
+        for t in self._timers.values():
+            t._observer = observe
 
     def snapshot(self):
         return {k: t.snapshot() for k, t in self._timers.items()}

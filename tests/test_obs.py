@@ -1,0 +1,455 @@
+"""End-to-end checkpoint observability (ISSUE 6 / DESIGN.md §13): span
+tracer balance under mid-pipeline kills, Chrome-trace export validity,
+metrics-registry ↔ CheckpointStats agreement, the Prometheus/JSON scrape
+endpoint, the durable event journal (kill + recovery survive a cold
+restart), overlap-efficiency reconstruction from span structure, the
+report renderer, and structured JSON logging."""
+
+import json
+import logging
+import math
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core import storage
+from repro.core.checkpoint import _STATS_METRICS, CheckpointEngine, CheckpointStats, EngineConfig
+from repro.obs.journal import EventJournal, fit_failure_stats
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.trace import (
+    generation_breakdown,
+    load_trace,
+    trace_overlap_efficiency,
+    tracer,
+)
+from repro.runtime.cluster import VirtualCluster
+from repro.runtime.failures import ProcessFaultException, observed_failure_stats
+
+
+class ShardedVec:
+    def __init__(self, n, dim=256):
+        self.n = n
+        self.data = [
+            np.random.default_rng(r).standard_normal(dim).astype(np.float32)
+            for r in range(n)
+        ]
+
+    def snapshot_shards(self, n):
+        return [{"v": self.data[r].copy()} for r in range(n)]
+
+    def restore_shards(self, shards):
+        for origin, payload in shards.items():
+            self.data[origin] = np.asarray(payload["v"]).copy()
+
+
+@pytest.fixture
+def tr():
+    """The process-global tracer, enabled and clean; disabled again after."""
+    t = tracer()
+    t.reset()
+    t.enable()
+    yield t
+    t.disable()
+    t.reset()
+
+
+# --------------------------------------------------------------------------- #
+# metrics registry
+# --------------------------------------------------------------------------- #
+
+def test_registry_counter_gauge_histogram_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("c_total", "a counter")
+    c.inc()
+    c.inc(2.5)
+    assert c.value() == 3.5
+    g = reg.gauge("g", "a gauge")
+    g.set(7)
+    g.set(4.25)
+    assert g.value() == 4.25
+    h = reg.histogram("h_seconds", "a histogram")
+    for v in (0.001, 0.01, 0.01):
+        h.observe(v)
+    st = h.stats()
+    assert st["count"] == 3
+    assert math.isclose(st["sum"], 0.021)
+    # get-or-create returns the same object; type conflicts are hard errors
+    assert reg.counter("c_total") is c
+    with pytest.raises(TypeError):
+        reg.gauge("c_total")
+    with pytest.raises(TypeError):
+        reg.counter("c_total", labelnames=("x",))
+
+
+def test_registry_labels_and_prometheus_exposition():
+    reg = MetricsRegistry()
+    c = reg.counter("ev_total", "events", labelnames=("kind",))
+    c.inc(kind="failure")
+    c.inc(kind="failure")
+    c.inc(kind="recovery")
+    h = reg.histogram("lat_seconds", "latency", labelnames=("phase",),
+                      buckets=(0.1, 1.0))
+    h.observe(0.05, phase="encode")
+    h.observe(0.5, phase="encode")
+    text = reg.render_prometheus()
+    assert '# TYPE ev_total counter' in text
+    assert 'ev_total{kind="failure"} 2' in text
+    assert 'ev_total{kind="recovery"} 1' in text
+    # histogram exposition: cumulative buckets + sum + count, le= label last
+    assert 'lat_seconds_bucket{phase="encode",le="0.1"} 1' in text
+    assert 'lat_seconds_bucket{phase="encode",le="+Inf"} 2' in text
+    assert 'lat_seconds_count{phase="encode"} 2' in text
+    snap = reg.snapshot()
+    assert snap["ev_total"] == {"failure": 2.0, "recovery": 1.0}
+    assert snap["lat_seconds"]["encode"]["count"] == 2
+    # labeled child handle: same cell, no dict building per call
+    child = c.labels(kind="failure")
+    child.inc()
+    assert c.value(kind="failure") == 3
+
+
+def test_stats_view_is_bit_for_bit_over_registry():
+    """CheckpointStats is a *view*: every legacy field reads/writes a registry
+    cell of the documented name, so the flat API and the scrape endpoint can
+    never disagree — checked for every field in the mapping table."""
+    stats = CheckpointStats()
+    reg = stats.registry
+    for attr, (kind, name, typ, _help) in _STATS_METRICS.items():
+        assert getattr(stats, attr) == typ(0)
+        setattr(stats, attr, typ(3))
+        assert reg.get(name).value() == 3, name
+        if kind == "counter":
+            setattr(stats, attr, getattr(stats, attr) + 1)  # the += idiom
+            assert reg.get(name).value() == 4, name
+        assert isinstance(getattr(stats, attr), typ)
+    with pytest.raises(AttributeError):
+        stats.not_a_field = 1
+
+
+def test_engine_stats_match_registry_after_e2e_kill_and_restore():
+    n = 8
+    eng = CheckpointEngine(n, EngineConfig(parity_group=4))
+    vec = ShardedVec(n)
+    eng.register("state", vec)
+    assert eng.checkpoint({"step": 1})
+    assert eng.checkpoint({"step": 2})
+    eng.stores[3].wipe()
+    eng._alive_fn = lambda: set(range(n)) - {3}
+    meta = eng.restore()
+    assert meta["step"] == 2
+    s, reg = eng.stats, eng.registry
+    assert reg.get("ckpt_created_total").value() == s.created == 2
+    assert reg.get("restore_total").value() == s.restored == 1
+    assert reg.get("restore_last_seconds").value() == s.last_restore_s > 0
+    assert reg.get("ckpt_last_bytes_exchanged").value() == s.last_bytes_exchanged
+    # per-stage histograms populated by the drain pipeline
+    for phase in ("capture", "encode", "transfer", "verify"):
+        assert eng._h_stage.stats(phase=phase)["count"] > 0, phase
+    # the Prometheus text carries the same numbers the flat API reports
+    text = reg.render_prometheus()
+    assert f"ckpt_created_total {s.created}" in text
+    assert f"restore_total {s.restored}" in text
+    eng.close()
+
+
+def test_metrics_http_endpoint_agrees_with_stats():
+    from repro.runtime.server import start_metrics_server
+
+    n = 4
+    eng = CheckpointEngine(n, EngineConfig(parity_group=2))
+    eng.register("state", ShardedVec(n))
+    assert eng.checkpoint({"step": 1})
+    srv = start_metrics_server(lambda: eng.registry, port=0)
+    try:
+        with urllib.request.urlopen(f"http://127.0.0.1:{srv.port}/metrics") as r:
+            assert r.status == 200
+            text = r.read().decode()
+        assert f"ckpt_created_total {eng.stats.created}" in text
+        assert "# TYPE ckpt_stage_seconds histogram" in text
+        with urllib.request.urlopen(
+            f"http://127.0.0.1:{srv.port}/metrics.json"
+        ) as r:
+            snap = json.load(r)
+        assert snap["ckpt_created_total"] == eng.stats.created
+        assert snap == eng.registry.snapshot()
+        with urllib.request.urlopen(f"http://127.0.0.1:{srv.port}/nope") as r:
+            pass
+    except urllib.error.HTTPError as e:
+        assert e.code == 404
+    finally:
+        srv.stop()
+        eng.close()
+
+
+def test_timer_registry_mirrors_into_histogram():
+    from repro.utils.timing import TimerRegistry
+
+    timers = TimerRegistry()
+    with timers("warm"):
+        pass
+    reg = MetricsRegistry()
+    timers.attach_metrics(reg)
+    with timers("warm"):      # existing timer rewired
+        pass
+    with timers("fresh"):     # new timers inherit the observer
+        pass
+    h = reg.get("timer_seconds")
+    assert h.stats(name="warm")["count"] == 1
+    assert h.stats(name="fresh")["count"] == 1
+    # snapshot format unchanged: legacy checkpoints keep restoring
+    assert timers.snapshot()["warm"] == (timers("warm").total, 2)
+
+
+# --------------------------------------------------------------------------- #
+# span tracer
+# --------------------------------------------------------------------------- #
+
+def test_disabled_tracer_records_nothing():
+    t = tracer()
+    assert not t.enabled
+    with t.span("x", gen=1):
+        t.instant("y")
+    assert t.events() == []
+    assert t.open_spans() == 0
+
+
+def test_spans_balance_and_export_chrome_json(tr, tmp_path):
+    with tr.span("outer", gen=1):
+        with tr.span("inner", gen=1, chunk=0):
+            assert tr.open_spans() == 2
+        tr.instant("marker", rank=3)
+    assert tr.open_spans() == 0
+    with pytest.raises(ValueError):
+        with tr.span("broken"):
+            raise ValueError("boom")
+    assert tr.open_spans() == 0  # exception still closed the span
+    path = tmp_path / "t.json"
+    tr.write(str(path))
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    phs = {e["ph"] for e in evs}
+    assert phs == {"X", "i", "M"}
+    xs = {e["name"] for e in evs if e["ph"] == "X"}
+    assert xs == {"outer", "inner", "broken"}
+    for e in evs:
+        if e["ph"] == "X":
+            assert e["dur"] >= 0 and "ts" in e and "pid" in e and "tid" in e
+    assert any(e["ph"] == "M" and e["name"] == "thread_name" for e in evs)
+
+
+@pytest.mark.parametrize("kill_chunk", [0, 1, 2])
+def test_spans_balance_across_mid_pipeline_kill_at_every_chunk(tr, kill_chunk):
+    """A rank dying at any pipeline chunk aborts the checkpoint; every span
+    opened by the drain (including on background workers) still closes, the
+    abort is journaled, and the recorded create-path phases stay labeled."""
+    n = 8
+    state = {"chunks": 0, "armed": False}
+
+    def hook(phase):
+        if phase == "pipeline_chunk" and state["armed"]:
+            if state["chunks"] == kill_chunk:
+                state["armed"] = False
+                eng.stores[6].wipe()
+            state["chunks"] += 1
+
+    eng = CheckpointEngine(n, EngineConfig(parity_group=4, async_workers=1),
+                           fault_hook=hook)
+    vec = ShardedVec(n)
+    eng.register("state", vec)
+    assert eng.checkpoint({"step": 1})
+    state["armed"] = True
+    assert eng.checkpoint_async({"step": 2})
+    assert eng.finalize_async() is False
+    assert eng.stats.aborted == 1
+    assert tr.open_spans() == 0
+    aborts = eng.journal.events("abort")
+    assert len(aborts) == 1 and aborts[0]["gen"] == 2
+
+    eng._fault_hook = lambda phase: None
+    eng._alive_fn = lambda: set(range(n)) - {6}
+    meta = eng.restore()
+    assert meta["step"] == 1
+    assert tr.open_spans() == 0
+    names = {e["name"] for e in tr.events()}
+    assert {"capture", "encode", "transfer", "verify", "restore"} <= names
+    # every create-path span carries its engine + generation labels
+    for e in tr.events():
+        if e["name"] in ("capture", "encode", "transfer", "verify"):
+            assert e["args"]["eng"] == eng._obs_id
+            assert e["args"]["gen"] in (1, 2)
+    eng.close()
+    assert len(eng.journal.events("recovery")) == 1
+
+
+def test_overlap_efficiency_from_synthetic_trace():
+    def ev(name, dur, eng, gen):
+        return {"ph": "X", "name": name, "ts": 0.0, "dur": dur * 1e6,
+                "tid": 0, "args": {"eng": eng, "gen": gen}}
+
+    doc = {"traceEvents": [
+        # async engine 1, gen 1: blocked = capture + finalize_wait = 1.0
+        ev("capture", 0.9, 1, 1), ev("finalize_wait", 0.1, 1, 1),
+        ev("encode", 2.0, 1, 1), ev("transfer", 0.5, 1, 1),
+        ev("verify", 0.5, 1, 1), ev("handshake", 0.0, 1, 1),
+        ev("commit", 0.0, 1, 1),
+        # sync engine 2, gen 1: serialized = 5.0
+        ev("capture", 1.0, 2, 1), ev("encode", 2.5, 2, 1),
+        ev("transfer", 0.75, 2, 1), ev("verify", 0.75, 2, 1),
+    ]}
+    gens = generation_breakdown(load_trace(doc), eng=1)
+    assert math.isclose(gens[1]["blocked_s"], 1.0)
+    assert math.isclose(gens[1]["serialized_s"], 3.9)
+    # self-baseline: 1 - 1.0/3.9
+    assert math.isclose(trace_overlap_efficiency(doc, eng=1), 1 - 1.0 / 3.9)
+    # A/B baseline from the sync engine's spans: 1 - 1.0/5.0
+    assert math.isclose(
+        trace_overlap_efficiency(doc, eng=1, sync_eng=2), 0.8
+    )
+    # sync engine alone has no finalize join -> undefined
+    assert trace_overlap_efficiency(doc, eng=2) is None
+
+
+def test_report_renders_phase_breakdown(tr, tmp_path):
+    n = 4
+    eng = CheckpointEngine(n, EngineConfig(parity_group=2, async_workers=1))
+    eng.register("state", ShardedVec(n))
+    assert eng.checkpoint_async({"step": 1})
+    assert eng.finalize_async() is True
+    path = tmp_path / "trace.json"
+    tr.write(str(path))
+    eng.close()
+
+    from repro.launch.report import render
+
+    text = render(str(path), eng=eng._obs_id)
+    assert "capture" in text and "finalize_wait" in text
+    assert "overlap" in text
+    assert "gen" in text.splitlines()[0]
+
+
+# --------------------------------------------------------------------------- #
+# event journal
+# --------------------------------------------------------------------------- #
+
+def test_journal_records_kill_and_recovery_and_survives_cold_restart(tmp_path):
+    n = 4
+    cfg = EngineConfig(parity_group=2,
+                       tiers=(storage.disk(str(tmp_path / "tier"), every=1),))
+    eng = CheckpointEngine(n, cfg)
+    vec = ShardedVec(n)
+    eng.register("state", vec)
+    cluster = VirtualCluster(n)
+    cluster.attach_engine(eng)
+    assert eng.checkpoint({"step": 1})
+    eng._join_flush()
+
+    cluster.kill(2, cause="unit_test")
+    with pytest.raises(ProcessFaultException):
+        cluster.barrier()
+    cluster.stabilize("spare")
+    meta = eng.restore()
+    assert meta["step"] == 1
+    fails = eng.journal.events("failure")
+    recs = eng.journal.events("recovery")
+    assert len(fails) == 1 and fails[0]["rank"] == 2
+    assert fails[0]["cause"] == "unit_test"
+    assert len(recs) == 1 and recs[0]["failed"] == 1
+    assert eng.journal.path is not None
+    eng.close()
+
+    # "cold restart": a brand-new engine over the same tier dir replays the
+    # journal — the failure history survives process death.
+    eng2 = CheckpointEngine(n, cfg)
+    assert eng2.journal.path == eng.journal.path
+    assert len(eng2.journal.events("failure")) == 1
+    assert len(eng2.journal.events("recovery")) == 1
+    assert eng2.journal.events("failure")[0]["rank"] == 2
+    # and the tier data itself still restores (the journal file never
+    # confuses generation discovery)
+    eng2.register("state", ShardedVec(n))
+    eng2.escalate_from_tiers()
+    assert eng2.restore()["step"] == 1
+    eng2.close()
+
+
+def test_journal_skips_torn_tail_line(tmp_path):
+    path = tmp_path / "journal.jsonl"
+    j = EventJournal(str(path))
+    j.record("failure", rank=1)
+    j.record("recovery", mode="spare")
+    with open(path, "a") as f:
+        f.write('{"kind": "failure", "rank": 2')  # torn write, no newline
+    j2 = EventJournal(str(path))
+    assert len(j2) == 2
+    assert [e["kind"] for e in j2.events()] == ["failure", "recovery"]
+
+
+def test_journal_counts_into_registry_and_nonscalars_stringified():
+    reg = MetricsRegistry()
+    j = EventJournal(registry=reg)
+    j.record("failure", rank=0)
+    j.record("failure", rank=1, extra=[1, 2])
+    j.record("flush", ok=True)
+    c = reg.get("journal_events_total")
+    assert c.value(kind="failure") == 2
+    assert c.value(kind="flush") == 1
+    assert j.events("failure")[1]["extra"] == "[1, 2]"
+
+
+def test_fit_failure_stats_mtbf_and_bursts():
+    t0 = 1000.0
+    events = [{"kind": "failure", "ts": t} for t in
+              (t0, t0 + 1e-4, t0 + 10.0, t0 + 20.0, t0 + 20.0 + 2e-4)]
+    events.append({"kind": "recovery", "ts": t0 + 21.0})
+    st = fit_failure_stats(events)
+    assert st["failures"] == 5
+    assert st["bursts"] == 3
+    assert st["max_burst"] == 2
+    assert math.isclose(st["mtbf_s"], 10.0, rel_tol=1e-6)
+    # the runtime wrapper accepts a journal or a raw list
+    j = EventJournal()
+    for e in events:
+        j._events.append(e)
+    assert observed_failure_stats(j) == st
+    assert observed_failure_stats(events) == st
+    assert fit_failure_stats([])["mtbf_s"] is None
+
+
+# --------------------------------------------------------------------------- #
+# structured logging
+# --------------------------------------------------------------------------- #
+
+def test_json_logging_emits_structured_fields(monkeypatch, capsys):
+    from repro.utils import logging as rlog
+
+    monkeypatch.setenv("REPRO_LOG_JSON", "1")
+    rlog.reconfigure_for_tests()
+    try:
+        log = rlog.bind(rlog.get_logger("test.obs"), rank=3, component="test")
+        log.info("hello %s", "world", fields={"generation": 7})
+        logging.getLogger("repro").handlers[0].flush()
+        line = capsys.readouterr().err.strip().splitlines()[-1]
+        obj = json.loads(line)
+        assert obj["msg"] == "hello world"
+        assert obj["level"] == "INFO"
+        assert obj["component"] == "test.obs"
+        assert obj["rank"] == 3 and obj["generation"] == 7
+        assert isinstance(obj["ts"], float)
+    finally:
+        monkeypatch.delenv("REPRO_LOG_JSON")
+        rlog.reconfigure_for_tests()
+
+
+def test_text_logging_appends_bound_fields(monkeypatch, capsys):
+    from repro.utils import logging as rlog
+
+    monkeypatch.delenv("REPRO_LOG_JSON", raising=False)
+    rlog.reconfigure_for_tests()
+    try:
+        log = rlog.bind(rlog.get_logger("test.obs2"), rank=1)
+        log.warning("plain message")
+        err = capsys.readouterr().err
+        assert "plain message [rank=1]" in err
+    finally:
+        rlog.reconfigure_for_tests()
