@@ -99,19 +99,26 @@ def _pcie_model(eng: CheckpointEngine) -> int:
     return staged + eng.stats.last_bytes_exchanged
 
 
-def run_staging(mbytes: int = 8, repeats: int = 3) -> tuple[float, float, int]:
+def run_staging(
+    mbytes: int = 8, repeats: int = 3
+) -> tuple[float, float, float, bool, int]:
     """Double-buffered device staging (DESIGN.md §9 follow-up): drive the
     snapshot's per-chunk programs through ``staged_snapshot_fetch`` and
     compare overlapped D2H (dispatch encode of chunk g+1, then start chunk
     g's async host copy) against the sequential fetch-then-dispatch
     baseline. On a real accelerator the win approaches hiding the full DMA
     behind the encode; on this CPU container it mainly validates the
-    mechanism and its bit-identical payloads. Returns (t_seq, t_dbuf,
+    mechanism and its bit-identical payloads. The third timing drives the
+    default auto mode — the payload crossover (DESIGN.md §14) that falls
+    back to the sequential fetch when the modeled D2H bytes are too small
+    for the overlap to pay. Returns (t_seq, t_dbuf, t_auto, auto_dbuf,
     payload_bytes)."""
     import jax
     import jax.numpy as jnp
 
-    from repro.core.device_tier import build_snapshot_program, staged_snapshot_fetch
+    from repro.core.device_tier import (
+        _DBUF_MIN_BYTES, build_snapshot_program, staged_snapshot_fetch,
+    )
 
     mesh = jax.make_mesh((1,), ("data",))
     n = mbytes << 20
@@ -130,19 +137,21 @@ def run_staging(mbytes: int = 8, repeats: int = 3) -> tuple[float, float, int]:
         "bf16": jnp.asarray(rng.standard_normal(n // 4), jnp.bfloat16),
         "i8": jnp.asarray(rng.integers(-100, 100, n // 4), jnp.int8),
     }
-    times = {True: float("inf"), False: float("inf")}
+    times = {True: float("inf"), False: float("inf"), None: float("inf")}
     payloads = {}
-    for db in (True, False):
+    for db in (True, False, None):
         payloads[db] = staged_snapshot_fetch(prog, state, double_buffer=db)  # warm
         for _ in range(repeats):
             t0 = time.perf_counter()
             staged_snapshot_fetch(prog, state, double_buffer=db)
             times[db] = min(times[db], time.perf_counter() - t0)
-    # overlap must never change bytes
+    # overlap / crossover must never change bytes
     for tag in payloads[True]["parity"]:
         assert np.array_equal(payloads[True]["parity"][tag], payloads[False]["parity"][tag])
+        assert np.array_equal(payloads[None]["parity"][tag], payloads[False]["parity"][tag])
     total = sum(np.asarray(v).nbytes for v in jax.tree.leaves(payloads[True]))
-    return times[False], times[True], total
+    auto_dbuf = prog.pcie_bytes >= _DBUF_MIN_BYTES
+    return times[False], times[True], times[None], auto_dbuf, total
 
 
 def run_tier_flush(
@@ -308,9 +317,12 @@ def main(smoke: bool = False) -> list[str]:
     )
 
     # -- span-tracing overhead A/B (DESIGN.md §13 budget) ---------------------
+    # min-of-k over longer interleaved legs: the per-pair ratio at batch=4 /
+    # repeats=5 was noisy enough to read container jitter as 19% span cost —
+    # 12 pairs of 8-checkpoint legs keep one quiet pair under the 2% gate.
     trace = run_trace_overhead(
         n=8, bytes_per_rank=1 << 18 if smoke else 1 << 19,
-        repeats=5 if smoke else 8,
+        repeats=12 if smoke else 16, batch=8,
     )
     lines.append(
         f"ckpt_trace_overhead,{trace['t_on'] * 1e6:.0f},"
@@ -319,14 +331,22 @@ def main(smoke: bool = False) -> list[str]:
     )
 
     # -- double-buffered device staging (D2H overlap) -------------------------
-    t_seq, t_dbuf, staged_bytes = run_staging(mbytes=2 if smoke else 8)
+    t_seq, t_dbuf, t_auto, auto_dbuf, staged_bytes = run_staging(
+        mbytes=2 if smoke else 8
+    )
     stage_win = t_seq / max(t_dbuf, 1e-9)
+    auto_win = t_seq / max(t_auto, 1e-9)
     lines.append(
         f"ckpt_stage_d2h_seq,{t_seq * 1e6:.0f},GBps={staged_bytes / t_seq / 1e9:.2f}"
     )
     lines.append(
         f"ckpt_stage_d2h_dbuf,{t_dbuf * 1e6:.0f},"
         f"GBps={staged_bytes / t_dbuf / 1e9:.2f};overlap_win={stage_win:.2f}"
+    )
+    lines.append(
+        f"ckpt_stage_d2h_auto,{t_auto * 1e6:.0f},"
+        f"GBps={staged_bytes / t_auto / 1e9:.2f};"
+        f"mode={'dbuf' if auto_dbuf else 'seq'};auto_win={auto_win:.2f}"
     )
     RESULTS.clear()
     RESULTS.update(
@@ -344,6 +364,8 @@ def main(smoke: bool = False) -> list[str]:
             "blocked_s_async": round(t_async, 6),
             "pipeline_chunks": eng_a.stats.last_pipeline_chunks,
             "staging_overlap_win": round(stage_win, 3),
+            "staging_auto_win": round(auto_win, 3),
+            "staging_auto_mode": "dbuf" if auto_dbuf else "seq",
             "staging_bytes_fetched": staged_bytes,
             # storage-tier ladder rows (DESIGN.md §12): blocked-time overhead
             # of the background disk flush + its own write throughput

@@ -34,17 +34,18 @@ import inspect
 import json
 import sys
 import traceback
+from datetime import datetime, timezone
 
 #: async/sync speedup below this in --smoke mode fails the run (>20% regression)
 SMOKE_SPEEDUP_FLOOR = 0.8
 #: pipelined/sync recovery speedup below this in --smoke mode fails the run.
-#: Per failure pattern: the legacy sync decode received the same mul_table
-#: strength reduction as the pipelined matrix path (ROADMAP follow-up closed
-#: in PR 5), so the pipelined path's win is parallelism across groups/chunks
-#: (multi-failure bursts) plus the integrity VERIFY pass sync does not run —
-#: single-failure recovery is allowed to trail the (unverified) serial
-#: baseline, bursts must stay ahead of the regression floor.
-SMOKE_RECOVERY_FLOOR = {"single": 0.5, "burst2": 0.8}
+#: Per failure pattern: with the GF(2^8) backend engine (DESIGN.md §14) both
+#: paths decode through the same SWAR/jax matrix primitive and the adaptive
+#: planner collapses payloads that cannot pay for pipelining, so the
+#: pipelined path must now be no worse than the serial baseline on EVERY
+#: pattern — its win is parallel survivor unpacks plus parallel units/chunks
+#: across the worker pool.
+SMOKE_RECOVERY_FLOOR = {"single": 1.0, "burst2": 1.0}
 #: background tier-flush blocked-time overhead above this fails --smoke (the
 #: acceptance target is <10%; the gate matches the other tripwires' 20%
 #: headroom for CI noise)
@@ -154,6 +155,28 @@ def main() -> None:
     with open("BENCH_results.json", "w") as f:
         json.dump(out, f, indent=2)
     print(f"# wrote BENCH_results.json ({len(rows)} rows)", file=sys.stderr)
+
+    # Append-only perf trajectory: one JSON line per run (uploaded as a CI
+    # artifact alongside BENCH_results.json), so regressions are visible as
+    # a time series across commits instead of one overwritten snapshot.
+    history = {
+        "ts": datetime.now(timezone.utc).isoformat(timespec="seconds"),
+        "smoke": smoke,
+        "failed_modules": failed,
+        "gates": {
+            "async_speedup": pipeline.get("async_speedup"),
+            "tier_flush_overhead": pipeline.get("tier_flush_overhead"),
+            "trace_overhead_enabled": pipeline.get("trace_overhead_enabled"),
+            **{
+                f"recovery_speedup_{tag}": recovery.get(f"recovery_speedup_{tag}")
+                for tag in SMOKE_RECOVERY_FLOOR
+            },
+        },
+        "rows": {r["name"]: r["derived"] for r in rows},
+    }
+    with open("BENCH_history.jsonl", "a") as f:
+        f.write(json.dumps(history) + "\n")
+    print("# appended BENCH_history.jsonl", file=sys.stderr)
 
     if smoke and pipeline:
         speedup = pipeline.get("async_speedup", 0.0)

@@ -285,42 +285,28 @@ class GroupCodecBase(RedundancyCodec):
         coef = self._generator()
         rows = sorted(blobs)[:e]
         n = max(b.nbytes for b in blobs.values())
-        D = gf256.erasure_decode_matrix(k, coef, sorted(present), rows, missing)
-        # Fixed coefficients -> Jerasure-style per-coefficient product tables:
-        # each decode pass is ONE 256-entry gather + XOR instead of the
-        # log/antilog path's two gathers and an add (~5x faster per pass).
-        # (src buffer, table | None for c==1) terms per output row:
-        terms: dict[int, list[tuple[np.ndarray, np.ndarray | None]]] = {}
-        for t, i in enumerate(missing):
-            row: list[tuple[np.ndarray, np.ndarray | None]] = []
-            for s, b in present.items():
-                c = int(D[t, s])
-                if c:
-                    row.append((b.reshape(-1), None if c == 1 else gf256.mul_table(c)))
-            for j in rows:
-                c = int(D[t, k + j])
-                if c:
-                    row.append(
-                        (blobs[j].reshape(-1), None if c == 1 else gf256.mul_table(c))
-                    )
-            terms[i] = row
+        present_idx = sorted(present)
+        D = gf256.erasure_decode_matrix(k, coef, present_idx, rows, missing)
+        # Fixed coefficients -> one (e, k_present+|rows|) matrix product per
+        # byte range through gf256's pluggable backend (SWAR / jax-CPU / table,
+        # DESIGN.md §14).  Ragged survivors contribute their prefix only — the
+        # backend treats bytes past a short source as zero, a GF no-op.
+        srcs = [present[s].reshape(-1) for s in present_idx] + [
+            blobs[j].reshape(-1) for j in rows
+        ]
+        mat = tuple(
+            tuple(int(D[t, s]) for s in present_idx)
+            + tuple(int(D[t, k + j]) for j in rows)
+            for t in range(e)
+        )
         out = {i: lease(i, n) for i in missing}
+        dsts = [out[i] for i in missing]
 
         def decode_chunk(lo: int, hi: int) -> None:
             hi = min(hi, n)
             if lo >= hi:
                 return
-            for i in missing:
-                acc = out[i][lo:hi]
-                acc[:] = 0
-                for b, table in terms[i]:
-                    if lo >= b.nbytes:
-                        continue  # ragged survivors: prefix only
-                    seg = b[lo:hi]
-                    if table is None:
-                        np.bitwise_xor(acc[: seg.shape[0]], seg, out=acc[: seg.shape[0]])
-                    else:
-                        gf256.gf_addmul_table_into(acc, table, seg)
+            gf256.gf_matrix_addmul_into(dsts, srcs, mat, lo, hi)
 
         return out, decode_chunk
 

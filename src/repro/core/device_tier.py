@@ -45,6 +45,9 @@ Modes (hillclimb levers, see EXPERIMENTS §Perf):
 from __future__ import annotations
 
 import functools
+import os
+import threading
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Any
@@ -633,8 +636,17 @@ def build_snapshot_program(
 # Double-buffered device staging (create path)
 # ---------------------------------------------------------------------------
 
+#: Payload floor (modeled D2H bytes) below which the double-buffered staging
+#: path loses to the sequential fetch: per-chunk async-copy dispatch and the
+#: deferred merge pass are fixed costs, and under this payload they exceed
+#: the DMA time the overlap could hide (same crossover shape as the restore
+#: planner's sync collapse, DESIGN.md §14). Overridable for odd hosts via
+#: REPRO_D2H_DBUF_MIN_BYTES.
+_DBUF_MIN_BYTES = int(os.environ.get("REPRO_D2H_DBUF_MIN_BYTES", 32 << 20))
+
+
 def staged_snapshot_fetch(
-    prog: SnapshotProgram, state: Any, *, double_buffer: bool = True
+    prog: SnapshotProgram, state: Any, *, double_buffer: bool | None = None
 ) -> dict[str, Any]:
     """Drive the snapshot's D2H staging through the per-chunk programs:
     dispatch chunk *g+1*'s fused encode, then start chunk *g*'s asynchronous
@@ -643,11 +655,16 @@ def staged_snapshot_fetch(
     approaches max(encode, DMA) instead of their sum. ``double_buffer=False``
     fetches each chunk synchronously before dispatching the next — the A/B
     baseline the staging benchmark reports the overlap win against.
+    ``double_buffer=None`` (the default) picks per payload: overlap only when
+    the program's modeled D2H bytes clear ``_DBUF_MIN_BYTES``, else the
+    fixed per-chunk overlap costs outweigh the DMA they could hide.
 
     Returns the host (numpy) payload, merged across chunks — byte-identical
     to fetching ``prog.snapshot_fn``'s payload minus the folded checksum
     (the staged path recomputes the handshake checksum host-side).
     """
+    if double_buffer is None:
+        double_buffer = prog.pcie_bytes >= _DBUF_MIN_BYTES
     fetched: list[Any] = []
     for i, fn in enumerate(prog.snapshot_chunk_fns):
         with _TR.span("d2h_dispatch", chunk=i, double_buffer=double_buffer):
@@ -988,3 +1005,83 @@ def build_striped_restore_program(
         rs_parity=rs_parity,
         axes=axes,
     )
+
+
+# ---------------------------------------------------------------------------
+# Compiled-program cache (DESIGN.md §14) — building a snapshot / striped
+# restore program walks the whole state pytree and traces jit programs, so
+# repeated engine generations (and the dryrun/benchmark drivers) key the
+# result on (topology, state structure, codec, dtype) instead of re-tracing.
+# Thread-safe (async-worker pools build programs too) and LRU-bounded.
+# ---------------------------------------------------------------------------
+
+_PROGRAM_CACHE: OrderedDict = OrderedDict()
+_PROGRAM_CACHE_LOCK = threading.Lock()
+_PROGRAM_CACHE_MAX = 16
+_PROGRAM_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def _program_cache_key(
+    kind: str, mesh: Mesh, state_sds: Any, state_pspecs: Any, kw: dict
+) -> tuple:
+    leaves_sds, treedef = jax.tree.flatten(state_sds)
+    leaves_ps = treedef.flatten_up_to(state_pspecs)
+    return (
+        kind,
+        tuple(sorted(mesh.shape.items())),
+        tuple(int(d.id) for d in mesh.devices.flat),
+        treedef,
+        tuple((tuple(sd.shape), sd.dtype.name) for sd in leaves_sds),
+        tuple(str(ps) for ps in leaves_ps),
+        tuple(sorted(kw.items())),
+    )
+
+
+def _cached_program(kind, builder, mesh, state_sds, state_pspecs, kw):
+    key = _program_cache_key(kind, mesh, state_sds, state_pspecs, kw)
+    with _PROGRAM_CACHE_LOCK:
+        prog = _PROGRAM_CACHE.get(key)
+        if prog is not None:
+            _PROGRAM_CACHE.move_to_end(key)
+            _PROGRAM_CACHE_STATS["hits"] += 1
+            return prog
+    # Trace outside the lock: builds are slow and independent; a rare
+    # duplicate build under contention just overwrites with an equal value.
+    prog = builder(mesh, state_sds, state_pspecs, **kw)
+    with _PROGRAM_CACHE_LOCK:
+        _PROGRAM_CACHE_STATS["misses"] += 1
+        _PROGRAM_CACHE[key] = prog
+        _PROGRAM_CACHE.move_to_end(key)
+        while len(_PROGRAM_CACHE) > _PROGRAM_CACHE_MAX:
+            _PROGRAM_CACHE.popitem(last=False)
+    return prog
+
+
+def cached_snapshot_program(
+    mesh: Mesh, state_sds: Any, state_pspecs: Any, **kw: Any
+) -> SnapshotProgram:
+    """``build_snapshot_program`` through the bounded program cache."""
+    return _cached_program(
+        "snapshot", build_snapshot_program, mesh, state_sds, state_pspecs, kw
+    )
+
+
+def cached_striped_restore_program(
+    mesh: Mesh, state_sds: Any, state_pspecs: Any, **kw: Any
+) -> StripedRestoreProgram:
+    """``build_striped_restore_program`` through the bounded program cache."""
+    return _cached_program(
+        "striped_restore", build_striped_restore_program,
+        mesh, state_sds, state_pspecs, kw,
+    )
+
+
+def program_cache_stats() -> dict[str, int]:
+    with _PROGRAM_CACHE_LOCK:
+        return dict(_PROGRAM_CACHE_STATS, size=len(_PROGRAM_CACHE))
+
+
+def program_cache_clear() -> None:
+    with _PROGRAM_CACHE_LOCK:
+        _PROGRAM_CACHE.clear()
+        _PROGRAM_CACHE_STATS.update(hits=0, misses=0)

@@ -174,7 +174,7 @@ def run_snapshot_cell(
     import jax
 
     from repro.configs import get_config
-    from repro.core.device_tier import build_snapshot_program
+    from repro.core.device_tier import cached_snapshot_program
     from repro.launch.steps import build_step
     from repro.utils.hlo import analyze_hlo_collectives
 
@@ -185,7 +185,7 @@ def run_snapshot_cell(
     state_sh, _ = bundle.in_shardings
     pspecs = jax.tree.map(lambda s: s.spec, state_sh)
 
-    prog = build_snapshot_program(
+    prog = cached_snapshot_program(
         mesh, state_sds, pspecs, redundancy_axis="data", compress=compress,
         codec=codec, parity_group=parity_group, rs_parity=rs_parity,
     )
@@ -244,7 +244,7 @@ def run_restore_cell(
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.configs import get_config
-    from repro.core.device_tier import build_striped_restore_program, striped_decode_rows
+    from repro.core.device_tier import cached_striped_restore_program, striped_decode_rows
     from repro.launch.steps import build_step
     from repro.utils.hlo import analyze_hlo_collectives
 
@@ -255,7 +255,7 @@ def run_restore_cell(
     state_sh, _ = bundle.in_shardings
     pspecs = jax.tree.map(lambda s: s.spec, state_sh)
 
-    prog = build_striped_restore_program(
+    prog = cached_striped_restore_program(
         mesh, state_sds, pspecs, redundancy_axis="data",
         codec=codec, parity_group=parity_group, rs_parity=rs_parity,
     )

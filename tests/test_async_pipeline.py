@@ -492,7 +492,10 @@ def test_restore_reuses_arenas_steady_state():
     n = 8
     eng = CheckpointEngine(
         n, EngineConfig(codec="rs", parity_group=4, rs_parity=2,
-                        restore_mode="pipelined"),
+                        restore_mode="pipelined",
+                        # pin fixed chunks: the adaptive planner would collapse
+                        # this tiny payload to the sync path (no arena leases)
+                        restore_chunk_bytes=1 << 20),
     )
     vec = ShardedVec(n)
     eng.register("state", vec)
