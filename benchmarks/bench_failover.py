@@ -1,0 +1,204 @@
+"""Hot-replica failover (DESIGN.md §15): steady-state lazy-sync overhead +
+promotion vs codec-rebuild time-to-recover.
+
+Two measurements:
+
+* **Steady-state replication overhead** (the acceptance gate): a
+  serving-shaped loop — ``steps`` state-touching decode stand-ins between
+  sync commits — run twice, with and without a :class:`ReplicaTeam` doing
+  its ``catch_up`` + ``stage`` at every commit point. The lazy sync is a
+  reference capture (free) plus one host-side memcpy of the committed
+  payload per generation, so its blocked time must stay a small fraction of
+  the serving interval: the acceptance target is <= 10% over the no-replica
+  baseline, gated in ``run.py --smoke`` at 20% (the other tripwires' CI
+  headroom).
+
+* **Promotion vs codec rebuild**: the same single-rank failure recovered
+  (a) by promoting the synced shadow team — an all-survivor zero-comm
+  unpack — and (b) through the primary's rs(m=2) reconstruction. The
+  promotion stall must not exceed the rebuild (it skips the erasure decode
+  entirely); both legs assert the restored payload matches the committed
+  state.
+
+``RESULTS`` carries the machine-readable numbers run.py folds into the
+``failover`` section of BENCH_results.json.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.checkpoint import CheckpointEngine, EngineConfig
+from repro.runtime.replica import ReplicaTeam
+
+#: populated by main(); run.py serializes it into BENCH_results.json
+RESULTS: dict = {}
+
+
+class _Sessions:
+    """Fixed bytes-per-rank sharded entity standing in for live decode
+    sessions (KV caches + tokens)."""
+
+    def __init__(self, n_ranks: int, bytes_per_rank: int) -> None:
+        self.n = n_ranks
+        self.data = [
+            np.random.default_rng(r).standard_normal(bytes_per_rank // 4).astype(np.float32)
+            for r in range(n_ranks)
+        ]
+
+    def snapshot_shards(self, n):
+        return [{"blocks": self.data[r]} for r in range(n)]
+
+    def restore_shards(self, shards):
+        for origin, payload in shards.items():
+            self.data[origin] = np.asarray(payload["blocks"]).copy()
+
+    def step(self) -> None:
+        """One decode stand-in: touches every rank's full state (the memory
+        traffic a real decode step pays between commits)."""
+        for r in range(self.n):
+            self.data[r] = self.data[r] * 1.0001 + 0.5
+
+
+def _rig(n: int, bytes_per_rank: int):
+    sess = _Sessions(n, bytes_per_rank)
+
+    def factory(k: int) -> CheckpointEngine:
+        eng = CheckpointEngine(k, EngineConfig(codec="rs", parity_group=4, rs_parity=2))
+        eng.register("sessions", sess)
+        return eng
+
+    return sess, factory
+
+
+def _interval_loop(
+    sess: _Sessions, eng: CheckpointEngine, team: ReplicaTeam | None,
+    intervals: int, steps: int,
+) -> float:
+    """Total wall time of ``intervals`` serving intervals (``steps`` decode
+    stand-ins + one sync commit each); the replica leg adds the lazy-sync
+    tick (install previous generation, stage the new one) at every commit."""
+    t0 = time.perf_counter()
+    for i in range(intervals):
+        for _ in range(steps):
+            sess.step()
+        assert eng.checkpoint({"step": i})
+        if team is not None:
+            team.catch_up()
+            team.stage(eng)
+    return time.perf_counter() - t0
+
+
+def run_overhead(
+    n: int = 8, bytes_per_rank: int = 1 << 20, intervals: int = 6,
+    steps: int = 6, repeats: int = 3,
+) -> list[str]:
+    """A/B the serving-shaped loop with and without the shadow team; the
+    legs are interleaved per repeat so machine drift lands on both."""
+    rigs = {}
+    for tag in ("baseline", "replica"):
+        sess, factory = _rig(n, bytes_per_rank)
+        eng = factory(n)
+        assert eng.checkpoint({"step": -1})  # warm: jit/arena first-touch
+        team = None
+        if tag == "replica":
+            team = ReplicaTeam(n, factory)
+            team.stage(eng)
+        rigs[tag] = (sess, eng, team)
+    best = {"baseline": float("inf"), "replica": float("inf")}
+    for rep in range(repeats + 1):  # rep 0: untimed warm lap
+        for tag, (sess, eng, team) in rigs.items():
+            dt = _interval_loop(sess, eng, team, intervals, steps)
+            if rep:
+                best[tag] = min(best[tag], dt)
+    _, _, team = rigs["replica"]
+    overhead = best["replica"] / best["baseline"] - 1.0
+    assert team.state == "ready" and team.synced_gen >= 0
+    per_commit = team.blocked_sync_s / max(team.syncs, 1)
+    RESULTS.update({
+        "n_ranks": n,
+        "bytes_per_rank": bytes_per_rank,
+        "steps_per_interval": steps,
+        "blocked_s_baseline": round(best["baseline"], 6),
+        "blocked_s_replica": round(best["replica"], 6),
+        "replica_sync_overhead": round(overhead, 4),
+        "catch_up_s_per_commit": round(per_commit, 6),
+        "sync_bytes_per_commit": team.bytes_synced // max(team.syncs, 1),
+    })
+    for _, eng, tm in rigs.values():
+        eng.close()
+        if tm is not None:
+            tm.engine.close()
+    return [
+        f"failover_interval_baseline_n{n},{best['baseline'] / intervals * 1e6:.0f},"
+        f"steps={steps}",
+        f"failover_interval_replica_n{n},{best['replica'] / intervals * 1e6:.0f},"
+        f"overhead={overhead * 100:.1f}%;sync_MiB="
+        f"{RESULTS['sync_bytes_per_commit'] / 2**20:.1f}",
+    ]
+
+
+def run_promotion(n: int = 8, bytes_per_rank: int = 1 << 20, repeats: int = 3) -> list[str]:
+    """Time-to-recover a single-rank failure: shadow promotion (zero-comm
+    unpack) vs the primary's rs(m=2) reconstruction."""
+    victim = n // 2
+    best = {"promote": float("inf"), "rebuild": float("inf")}
+    for _ in range(repeats):
+        for mode in ("rebuild", "promote"):
+            sess, factory = _rig(n, bytes_per_rank)
+            eng = factory(n)
+            assert eng.checkpoint({"step": 1})
+            team = None
+            if mode == "promote":
+                team = ReplicaTeam(n, factory)
+                team.stage(eng)
+                team.catch_up()  # shadow fully synced to the committed gen
+            committed = [d.copy() for d in sess.data]
+            for d in sess.data:
+                d += 7.0  # drift past the commit so the rewind is provable
+            eng.stores[victim].wipe()
+            t0 = time.perf_counter()
+            if mode == "promote":
+                _, promoted = team.release()
+                promoted.restore()
+                dt = time.perf_counter() - t0
+                assert promoted.stats.last_restore_bytes_rebuilt == 0
+                promoted.close()
+            else:
+                eng.restore()
+                dt = time.perf_counter() - t0
+                assert eng.stats.reconstructed_restores >= 1
+            best[mode] = min(best[mode], dt)
+            for r in range(n):
+                assert np.array_equal(sess.data[r], committed[r]), (mode, r)
+            eng.close()
+    RESULTS.update({
+        "ttr_s_promote": round(best["promote"], 6),
+        "ttr_s_rebuild": round(best["rebuild"], 6),
+        "promote_speedup": round(best["rebuild"] / best["promote"], 3),
+        "bit_identical": True,
+    })
+    return [
+        f"failover_ttr_rebuild_n{n},{best['rebuild'] * 1e6:.0f},codec=rs2",
+        f"failover_ttr_promote_n{n},{best['promote'] * 1e6:.0f},"
+        f"speedup={best['rebuild'] / best['promote']:.2f}",
+    ]
+
+
+def main(smoke: bool = False) -> list[str]:
+    RESULTS.clear()
+    if smoke:
+        lines = run_overhead(n=8, bytes_per_rank=1 << 19, intervals=4, steps=6, repeats=2)
+        lines += run_promotion(n=8, bytes_per_rank=1 << 19, repeats=2)
+    else:
+        lines = run_overhead(n=16, bytes_per_rank=1 << 20, intervals=8, steps=6)
+        lines += run_promotion(n=16, bytes_per_rank=1 << 20)
+    return lines
+
+
+if __name__ == "__main__":
+    import sys
+
+    print("\n".join(main(smoke="--smoke" in sys.argv)))

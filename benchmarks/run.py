@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * bench_elastic_recovery   — N-to-M restore time + bytes moved vs lower bound
   * bench_overhead           — Fig 6   (Daly-interval overhead vs MTBF)
   * bench_fault_e2e          — Fig 8   (kill-signal fault tolerance, e2e)
+  * bench_failover           — hot-replica lazy-sync overhead + promotion TTR
   * bench_kernels            — checkpoint hot-path Pallas kernels
   * bench_codecs             — GB/s encode + decode per redundancy codec
   * bench_roofline_table     — §Roofline rows from the dry-run artifacts
@@ -53,6 +54,10 @@ SMOKE_FLUSH_OVERHEAD_CEIL = 0.2
 #: enabled-span-tracing overhead above this fails --smoke (DESIGN.md §13
 #: budget: <2% on the async create path)
 SMOKE_TRACE_OVERHEAD_CEIL = 0.02
+#: hot-replica lazy-sync overhead (serving-shaped interval loop with a shadow
+#: team vs without) above this fails --smoke — the DESIGN.md §15 acceptance
+#: target is <=10%; the gate carries the usual 2x CI-noise headroom
+SMOKE_REPLICA_OVERHEAD_CEIL = 0.2
 
 
 def _trace_out_path(argv: list[str]) -> str | None:
@@ -70,6 +75,7 @@ def main() -> None:
         bench_checkpoint_scaling,
         bench_codecs,
         bench_elastic_recovery,
+        bench_failover,
         bench_fault_e2e,
         bench_kernels,
         bench_overhead,
@@ -89,6 +95,7 @@ def main() -> None:
         bench_elastic_recovery,
         bench_overhead,
         bench_fault_e2e,
+        bench_failover,
         bench_kernels,
         bench_codecs,
         bench_roofline_table,
@@ -117,6 +124,7 @@ def main() -> None:
 
     pipeline = dict(getattr(bench_checkpoint_scaling, "RESULTS", {}) or {})
     recovery = dict(getattr(bench_recovery, "RESULTS", {}) or {})
+    failover = dict(getattr(bench_failover, "RESULTS", {}) or {})
 
     if trace_out:
         # Write the recorded span timeline (Perfetto-loadable) and cross-check
@@ -151,6 +159,7 @@ def main() -> None:
         "rows": rows,
         "checkpoint_pipeline": pipeline,
         "recovery_pipeline": recovery,
+        "failover": failover,
     }
     with open("BENCH_results.json", "w") as f:
         json.dump(out, f, indent=2)
@@ -167,6 +176,7 @@ def main() -> None:
             "async_speedup": pipeline.get("async_speedup"),
             "tier_flush_overhead": pipeline.get("tier_flush_overhead"),
             "trace_overhead_enabled": pipeline.get("trace_overhead_enabled"),
+            "replica_sync_overhead": failover.get("replica_sync_overhead"),
             **{
                 f"recovery_speedup_{tag}": recovery.get(f"recovery_speedup_{tag}")
                 for tag in SMOKE_RECOVERY_FLOOR
@@ -209,6 +219,18 @@ def main() -> None:
                 f"(> {100 * SMOKE_TRACE_OVERHEAD_CEIL:.0f}%; off "
                 f"{pipeline.get('trace_t_off_s')}s vs on "
                 f"{pipeline.get('trace_t_on_s')}s)",
+                file=sys.stderr,
+            )
+            failed += 1
+    if smoke and failover and "replica_sync_overhead" in failover:
+        overhead = failover["replica_sync_overhead"]
+        if overhead > SMOKE_REPLICA_OVERHEAD_CEIL:
+            print(
+                f"# hot-replica regression: lazy sync adds "
+                f"{100 * overhead:.0f}% to the serving interval "
+                f"(> {100 * SMOKE_REPLICA_OVERHEAD_CEIL:.0f}%; baseline "
+                f"{failover.get('blocked_s_baseline')}s vs replica "
+                f"{failover.get('blocked_s_replica')}s)",
                 file=sys.stderr,
             )
             failed += 1

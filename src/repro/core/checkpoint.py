@@ -763,6 +763,18 @@ class CheckpointEngine:
             if self.cfg.compress and codec.compressible:
                 flat, man = self._compress(flat, man)
                 pending.manifests[(m, name)] = man
+                if codec.striped:
+                    # Parity of lossy-compressed buffers only decodes against
+                    # the exact compressed bytes, so each member must PRESENT
+                    # them at restore time: store the compressed exchange set
+                    # in own_exch (every entity — even full-shard ones whose
+                    # uncompressed exchange would have aliased ``own``). The
+                    # restore paths already prefer own_exch over own.
+                    st = self.stores.get(m)
+                    payload = st.buffer.writable if st is not None and st.alive else None
+                    if payload is not None:
+                        with st.lock:
+                            payload.own_exch[name] = (flat, man)
             elif self.cfg.validate:
                 # Compressed blobs skip restore-verify (their manifest is
                 # tagged); everything else gets a capture-state reference.
@@ -1666,12 +1678,15 @@ class CheckpointEngine:
         for i in missing_idx:
             compressed = isinstance(manifests[i], tuple) and manifests[i][0] == "compressed"
             ref_sums[i] = None if compressed else ref_table.get((grp.members[i], name))
-            if compressed:
-                # Only the full-copy codec may compress, and it adopts the
-                # whole compressed flat by reference at prep — so the tiny
-                # scale/meta leaves are resolvable here and the expensive
-                # int8->f32 expansion chunk-streams through the drain's DEQ
-                # stage instead of one monolithic pass at finalize.
+            if compressed and not codec.striped:
+                # The full-copy codec adopts the whole compressed flat by
+                # reference at prep — the tiny scale/meta leaves are
+                # resolvable here and the expensive int8->f32 expansion
+                # chunk-streams through the drain's DEQ stage instead of one
+                # monolithic pass at finalize. Striped codecs resolve the
+                # rebuilt bytes only as the decode chunks run, so their
+                # scales are unreadable at prep: they decompress
+                # monolithically in _finalize_restore_unit.
                 plan = self._prep_decomp_plan(
                     manifests[i][1], np.asarray(rebuilt[i]).reshape(-1),
                     lambda key, nb, _i=i: store.lease(

@@ -86,9 +86,11 @@ class RedundancyCodec:
     name: str = "?"
     #: blobs are striped across holder groups (False: whole copies on ranks)
     striped: bool = True
-    #: engine may int8-compress the group's buffers before encode (full-copy
-    #: codecs only: parity blobs of lossy-compressed buffers would have to
-    #: store the compressed exchange set too — see EngineConfig.compress)
+    #: engine may int8-compress the group's buffers before encode. For
+    #: striped codecs the engine then also stores each member's compressed
+    #: exchange set in ``own_exch`` — parity of lossy-compressed buffers only
+    #: decodes against the exact compressed bytes, so survivors must present
+    #: them at restore (see EngineConfig.compress / DESIGN.md §15).
     compressible: bool = False
 
     def group_size(self, n_ranks: int) -> int:
@@ -257,6 +259,11 @@ class GroupCodecBase(RedundancyCodec):
     ``group`` ranks, blob b striped across neighbor group gi+1+b (wrapping,
     skipping gi itself so a group never hosts its own protection unless it
     is the only group in the world)."""
+
+    # Striped codecs compress too: the engine stores the compressed exchange
+    # set in own_exch so survivors present the exact bytes parity encoded
+    # over (the long-open PR 2–5 follow-up; shrinks lazy replica catch-ups).
+    compressible = True
 
     def __init__(self, group: int) -> None:
         assert group >= 1, group

@@ -48,7 +48,7 @@ import functools
 import os
 import threading
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from functools import partial
 from typing import Any
 
@@ -686,6 +686,53 @@ def staged_snapshot_fetch(
             else:
                 payload[key] = val
     return payload
+
+
+# ---------------------------------------------------------------------------
+# Hot-replica mirror program (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+@_traced("build_mirror_program")
+def build_mirror_program(
+    mesh: Mesh,
+    state_sds: Any,
+    state_pspecs: Any,
+    *,
+    replica_axis: str = "data",
+    validate: bool = True,
+) -> SnapshotProgram:
+    """Mirror variant of the fused snapshot program: the same per-(failure
+    axis, dtype) uint32 buckets, but routed to the hot-replica *shadow mesh*
+    instead of a parity group. ``replica_axis`` is modeled as primary half +
+    shadow half (teams of T = axis/2 coordinates); one collective permute
+    per bucket lands every primary coordinate's fused live state on its
+    shadow twin at ``i + T`` — the transport a deployed ``ReplicaTeam`` uses
+    for its lazy sync instead of the host-side payload copy the
+    single-process simulation performs (runtime/replica.py).
+
+    No parity, no own copy, no compression: the shadow receives the primary's
+    shards verbatim (the replication rung is a full copy by definition — the
+    codec ladder below it provides the erasure coding). ``snapshot_fn`` emits
+    ``{"mirror": {tag: fused buffer}}`` (+ the folded handshake checksum when
+    ``validate``), where each shadow device's slice of ``mirror[tag]`` holds
+    its primary twin's fused bucket, unpackable with the bucket's
+    ``word_offsets`` exactly like a partner payload.
+    """
+    prog = build_snapshot_program(
+        mesh, state_sds, state_pspecs,
+        redundancy_axis=replica_axis, scheme="mirror",
+        include_own_copy=False, compress=False, validate=validate,
+        codec="copy",
+    )
+    inner = prog.snapshot_fn
+
+    def mirror_fn(state):
+        payload = inner(state)
+        if "partner" in payload:
+            payload["mirror"] = payload.pop("partner")
+        return payload
+
+    return replace(prog, snapshot_fn=mirror_fn)
 
 
 # ---------------------------------------------------------------------------

@@ -70,8 +70,25 @@ def get_scheme(name: str) -> SchemeFn:
     return _SCHEMES[name]
 
 
+def mirror_schedule(n_ranks: int, rank: int) -> tuple[int, int]:
+    """Hot-replica half-rotation (DESIGN.md §15): the failure axis is split
+    into a primary half ``[0, T)`` and a shadow half ``[T, 2T)``; every
+    primary coordinate sends its fused buckets to its shadow twin at
+    ``rank + T``. The rotation is a bijection (ppermute requires one), so the
+    shadow half symmetrically "sends" to the primary half — that direction
+    carries the shadow's stale state and is simply ignored by the receiver.
+    Requires an even axis (the two teams)."""
+    assert n_ranks % 2 == 0, (
+        f"mirror scheme needs an even (primary+shadow) axis, got {n_ranks}"
+    )
+    half = n_ranks // 2
+    twin = (rank + half) % n_ranks
+    return twin, twin
+
+
 register_scheme("pairwise", pairwise_schedule)
 register_scheme("neighbor", lambda n, r: shifted_schedule(n, r, 1 if n > 1 else 0))
+register_scheme("mirror", mirror_schedule)
 
 
 def multi_copy_shifts(n_ranks: int, n_copies: int) -> list[int]:

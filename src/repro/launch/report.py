@@ -26,10 +26,16 @@ from repro.obs.trace import (
     CREATE_PHASES,
     RESTORE_PHASES,
     generation_breakdown,
+    load_instants,
     load_trace,
 )
 
 _EXTRA_PHASES = ("finalize_wait", "flush_wait", "flush", "restore")
+
+#: Instant markers and spans that participate in the failover timeline
+#: (DESIGN.md §15): detect -> promote -> rebuild -> re-enroll.
+_FAILOVER_INSTANTS = ("kill", "heartbeat_lost", "replica_promote")
+_FAILOVER_SPANS = ("replica_sync", "replica_promote_restore", "replica_reenroll")
 
 
 def _fmt_s(v: float) -> str:
@@ -38,13 +44,76 @@ def _fmt_s(v: float) -> str:
     return f"{v * 1e3:7.2f}ms"
 
 
+def failover_timeline(
+    spans: list[dict], instants: list[dict]
+) -> list[dict]:
+    """Chronological failover narrative extracted from a trace: every kill /
+    heartbeat_lost / replica_promote instant plus the replica_sync,
+    replica_promote_restore (blocking rebuild) and replica_reenroll spans,
+    normalized to ``{"t0", "dur", "event", "detail"}`` rows with ``t0``
+    relative to the first event. Empty when the trace holds no failover."""
+    rows = []
+    for ev in instants:
+        if ev["name"] not in _FAILOVER_INSTANTS:
+            continue
+        a = ev.get("args", {})
+        if ev["name"] == "kill":
+            detail = f"rank={a.get('rank')} cause={a.get('cause')}"
+            if a.get("silent"):
+                detail += " silent"
+        elif ev["name"] == "heartbeat_lost":
+            detail = f"rank={a.get('rank')} missed={a.get('missed')}"
+        else:  # replica_promote
+            detail = (f"gen={a.get('gen')} failed_primary={a.get('failed_primary')}"
+                      f" failed_shadow={a.get('failed_shadow')}")
+        rows.append({"t0": ev["t0"], "dur": 0.0, "event": ev["name"],
+                     "detail": detail})
+    for ev in spans:
+        if ev["name"] not in _FAILOVER_SPANS:
+            continue
+        a = ev.get("args", {})
+        detail = f"gen={a.get('gen')}" if a.get("gen") is not None else ""
+        rows.append({"t0": ev["t0"], "dur": ev["dur"], "event": ev["name"],
+                     "detail": detail})
+    if not rows:
+        return []
+    rows.sort(key=lambda r: r["t0"])
+    base = rows[0]["t0"]
+    for r in rows:
+        r["t0"] -= base
+    return rows
+
+
+def render_failover(rows: list[dict]) -> list[str]:
+    lines = ["", "failover timeline (t relative to first fault event):"]
+    hdr = f"{'t':>10} {'dur':>10}  event"
+    lines.append(hdr)
+    lines.append("-" * 48)
+    for r in rows:
+        dur = _fmt_s(r["dur"]) if r["dur"] > 0 else f"{'-':>10}"
+        lines.append(
+            f"{_fmt_s(r['t0']):>10} {dur:>10}  {r['event']}  {r['detail']}"
+        )
+    promotes = [r for r in rows if r["event"] == "replica_promote_restore"]
+    if promotes:
+        lines.append(
+            f"promotion stall (blocking restore on the promoted team): "
+            f"{_fmt_s(sum(r['dur'] for r in promotes))}"
+        )
+    return lines
+
+
 def render(path: str, eng: int | None = None) -> str:
     """The report text (also returned for tests / programmatic use)."""
     events = load_trace(path)
     gens = generation_breakdown(events, eng=eng)
     lines: list[str] = []
     if not gens:
-        return "no labeled checkpoint generations in trace\n"
+        lines.append("no labeled checkpoint generations in trace")
+        fo = failover_timeline(events, load_instants(path))
+        if fo:
+            lines.extend(render_failover(fo))
+        return "\n".join(lines) + "\n"
 
     phase_order = [
         p for p in (*CREATE_PHASES, *_EXTRA_PHASES, *RESTORE_PHASES)
@@ -80,6 +149,9 @@ def render(path: str, eng: int | None = None) -> str:
         f"blocking phases: {', '.join(BLOCKING_PHASES)}; "
         f"{len(events)} spans total"
     )
+    fo = failover_timeline(events, load_instants(path))
+    if fo:
+        lines.extend(render_failover(fo))
     return "\n".join(lines) + "\n"
 
 
@@ -94,8 +166,13 @@ def main() -> None:
                     help="emit the raw per-generation dict as JSON instead")
     args = ap.parse_args()
     if args.json:
-        gens = generation_breakdown(load_trace(args.trace), eng=args.eng)
-        print(json.dumps({str(k): v for k, v in gens.items()}, indent=2))
+        events = load_trace(args.trace)
+        gens = generation_breakdown(events, eng=args.eng)
+        out = {
+            "generations": {str(k): v for k, v in gens.items()},
+            "failover": failover_timeline(events, load_instants(args.trace)),
+        }
+        print(json.dumps(out, indent=2))
     else:
         print(render(args.trace, eng=args.eng), end="")
 

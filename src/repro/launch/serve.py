@@ -33,6 +33,17 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=8, help="tokens between session checkpoints")
     ap.add_argument("--kill-at", default=None,
                     help="comma list of tick:rank kill events, e.g. 10:2,17:0")
+    ap.add_argument("--silent-kill-at", default=None,
+                    help="comma list of tick:rank SILENT kills (the rank "
+                         "stops heartbeating without a fault at the barrier; "
+                         "only the heartbeat timeout detects it)")
+    ap.add_argument("--replica-team", action="store_true",
+                    help="run a hot-replica shadow team lazy-synced one "
+                         "generation behind; failures promote it instead of "
+                         "blocking on a codec rebuild (DESIGN.md §15)")
+    ap.add_argument("--heartbeat-miss", type=int, default=3,
+                    help="beats a rank may miss (x straggler grace) before "
+                         "the heartbeat monitor declares it dead")
     ap.add_argument("--codec", default="",
                     help="redundancy codec: copy | xor | rs (default: inferred)")
     ap.add_argument("--parity-group", type=int, default=0,
@@ -60,13 +71,22 @@ def main() -> None:
         raise SystemExit(f"{cfg.name} is encoder-only (no decode step)")
     model = build_model(cfg)
 
-    injector = None
-    if args.kill_at:
+    def _parse_kills(spec: str | None) -> dict[int, list[int]]:
         schedule: dict[int, list[int]] = {}
-        for ev in args.kill_at.split(","):
+        for ev in (spec or "").split(","):
+            if not ev:
+                continue
             t, r = ev.split(":")
             schedule.setdefault(int(t), []).append(int(r))
-        injector = FailureInjector(args.hosts, schedule=schedule)
+        return schedule
+
+    injector = None
+    if args.kill_at or args.silent_kill_at:
+        injector = FailureInjector(
+            args.hosts,
+            schedule=_parse_kills(args.kill_at),
+            silent_schedule=_parse_kills(args.silent_kill_at),
+        )
 
     scfg = ServerConfig(
         batch=args.batch,
@@ -74,6 +94,8 @@ def main() -> None:
         checkpoint_every_tokens=args.ckpt_every,
         n_virtual_hosts=args.hosts,
         checkpoint_mode=args.checkpoint_mode,
+        replica_team=args.replica_team,
+        heartbeat_miss_threshold=args.heartbeat_miss,
         engine=EngineConfig(
             codec=args.codec, parity_group=args.parity_group, rs_parity=args.rs_parity
         ),
@@ -90,8 +112,9 @@ def main() -> None:
             jax.random.PRNGKey(0), (args.batch, cfg.vision_tokens, cfg.frontend_stub_dim)
         )
     out = server.prefill_and_decode(prompts, args.gen, **extra)
-    log.info("generated %d tokens x %d sessions; %d recoveries",
-             args.gen, args.batch, server.n_recoveries)
+    log.info("generated %d tokens x %d sessions; %d recoveries (%d via "
+             "replica promotion)",
+             args.gen, args.batch, server.n_recoveries, server.promotions)
     for b in range(min(args.batch, 2)):
         log.info("session %d: %s", b, out[b, : args.prompt_len + args.gen].tolist())
     if args.trace_out:

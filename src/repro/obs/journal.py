@@ -39,6 +39,9 @@ KINDS = (
     "flush_queued",     # cadence point deferred into the single queue slot
     "abort",            # checkpoint aborted mid-pipeline
     "cold_restart",     # full-cluster restart from persistent tiers
+    "heartbeat_lost",   # rank missed the beat threshold (silent death)
+    "replica_sync",     # shadow team caught up to a committed generation
+    "replica_promote",  # shadow team promoted in place of the primary
 )
 
 

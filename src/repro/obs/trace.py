@@ -249,6 +249,33 @@ def load_trace(path_or_obj: Any) -> list[dict[str, Any]]:
     return out
 
 
+def load_instants(path_or_obj: Any) -> list[dict[str, Any]]:
+    """Like :func:`load_trace` but for instant markers (``ph == "i"``):
+    kill / heartbeat_lost / replica_promote / commit events. Returns dicts
+    with seconds-based ``t0`` (``dur`` is always 0)."""
+    obj = path_or_obj
+    if isinstance(obj, str):
+        with open(obj) as f:
+            obj = json.load(f)
+    if isinstance(obj, dict):
+        obj = obj.get("traceEvents", [])
+    out = []
+    for ev in obj:
+        if ev.get("ph") not in ("i", "I"):
+            continue
+        if "t0" in ev:
+            out.append(ev)
+        else:
+            out.append({
+                "name": ev["name"],
+                "t0": ev.get("ts", 0.0) / 1e6,
+                "dur": 0.0,
+                "tid": ev.get("tid", 0),
+                "args": ev.get("args", {}),
+            })
+    return out
+
+
 def generation_breakdown(
     events: list[dict[str, Any]], eng: int | None = None
 ) -> dict[Any, dict[str, Any]]:

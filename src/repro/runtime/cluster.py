@@ -70,8 +70,15 @@ class VirtualCluster:
     # ------------------------------------------------------------------ #
     # fault signalling (ULFM analogue)
     # ------------------------------------------------------------------ #
-    def kill(self, rank: int, cause: str = "host_failure") -> None:
-        """Host failure: the rank leaves; its in-memory snapshots are erased."""
+    def kill(self, rank: int, cause: str = "host_failure",
+             silent: bool = False) -> None:
+        """Host failure: the rank leaves; its in-memory snapshots are erased.
+
+        ``silent=True`` models a rank that stops responding without any
+        fault ever surfacing through the communicator (a hung kernel, a
+        switch partition): the communicator is NOT revoked, so barriers keep
+        succeeding and only the heartbeat monitor's missed-beat timeout can
+        notice the death."""
         if rank not in self._alive:
             return
         self._alive.discard(rank)
@@ -85,10 +92,12 @@ class VirtualCluster:
                 gen=self.engine.stats.created,
                 alive=len(self._alive), n_ranks=self.n_ranks,
             )
-        tracer().instant("kill", rank=rank, cause=cause)
-        self.revoked = True  # next communication raises (MPI_ERR_REVOKED)
+        tracer().instant("kill", rank=rank, cause=cause, silent=silent)
+        if not silent:
+            self.revoked = True  # next communication raises (MPI_ERR_REVOKED)
         self.fault_log.append(("kill", [rank]))
-        log.warning("rank %d killed (alive: %d/%d)", rank, len(self._alive), self.n_ranks)
+        log.warning("rank %d killed%s (alive: %d/%d)", rank,
+                    " silently" if silent else "", len(self._alive), self.n_ranks)
 
     def barrier(self, phase: str = "step") -> None:
         """A collective entry point: raises if the communicator is revoked.
@@ -179,3 +188,100 @@ class VirtualCluster:
         self.revoked = False
         self.fault_log.append(("resize", [n_new_ranks]))
         log.info("cluster resized to %d ranks", n_new_ranks)
+
+
+class HeartbeatMonitor:
+    """Timeout-based liveness: detection without a fault exception.
+
+    Every serving tick each live rank 'beats' (in production: an out-of-band
+    UDP ping per host; here: the cluster's alive set observed at the step
+    barrier). A rank whose last beat is older than
+
+        ``miss_threshold x straggler-grace``  ticks
+
+    is declared dead. The grace factor comes from
+    :meth:`repro.runtime.straggler.StragglerDetector.slowdown_percentile`:
+    the missed-beat budget stretches with the observed straggler tail, so a
+    95th-percentile-slow host is flagged slow (straggler machinery) rather
+    than dead (failover machinery) — the DESIGN.md §15 discrimination.
+
+    Liveness is exported per rank through the PR 6 metrics registry as the
+    ``cluster_rank_up`` gauge (1 = beating, 0 = declared lost), so the
+    Prometheus endpoint shows the fleet's health surface; every declaration
+    is journaled as a ``heartbeat_lost`` event.
+    """
+
+    def __init__(
+        self,
+        n_ranks: int,
+        miss_threshold: int = 3,
+        straggler: object | None = None,
+        registry: object | None = None,
+        journal: object | None = None,
+    ) -> None:
+        self.n_ranks = n_ranks
+        self.miss_threshold = miss_threshold
+        self.straggler = straggler
+        self.journal = journal
+        self._last_beat: dict[int, int] = {r: 0 for r in range(n_ranks)}
+        self._declared: set[int] = set()
+        self._gauge = None
+        if registry is not None:
+            self._gauge = registry.gauge(
+                "cluster_rank_up",
+                "Per-rank heartbeat liveness (1 = beating, 0 = lost).",
+                labelnames=("rank",),
+            )
+            for r in range(n_ranks):
+                self._gauge.set(1, rank=r)
+
+    def grace(self) -> float:
+        """Current dead-vs-straggling grace multiplier (>= 1)."""
+        if self.straggler is None:
+            return 1.0
+        return self.straggler.slowdown_percentile()
+
+    def deadline_ticks(self) -> int:
+        """Beats a rank may miss before being declared dead."""
+        import math
+
+        return max(1, math.ceil(self.miss_threshold * self.grace()))
+
+    def observe(self, beating: set[int], tick: int) -> list[int]:
+        """Record this tick's beats; return ranks newly declared dead."""
+        for r in beating:
+            self._last_beat[r] = tick
+            if r in self._declared:
+                self._declared.discard(r)  # revived (spare substitution)
+                if self._gauge is not None:
+                    self._gauge.set(1, rank=r)
+        limit = self.deadline_ticks()
+        lost = []
+        for r, last in self._last_beat.items():
+            if r in beating or r in self._declared:
+                continue
+            if tick - last >= limit:
+                self._declared.add(r)
+                lost.append(r)
+                if self._gauge is not None:
+                    self._gauge.set(0, rank=r)
+                if self.journal is not None:
+                    self.journal.record(
+                        "heartbeat_lost", rank=r, tick=tick,
+                        last_beat=last, missed=tick - last, limit=limit,
+                    )
+                tracer().instant("heartbeat_lost", rank=r, missed=tick - last)
+                log.warning(
+                    "heartbeat lost: rank %d missed %d ticks (limit %d)",
+                    r, tick - last, limit,
+                )
+        return sorted(lost)
+
+    def reset(self, alive: set[int], tick: int) -> None:
+        """Re-arm after recovery: every currently-alive rank beats now."""
+        for r in alive:
+            self._last_beat[r] = tick
+            if r in self._declared:
+                self._declared.discard(r)
+            if self._gauge is not None:
+                self._gauge.set(1, rank=r)

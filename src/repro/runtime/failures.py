@@ -49,8 +49,22 @@ class FailureInjector:
     # victim's burst_group-sized group (1 = independent failures, the default).
     burst_size: int = 1
     burst_group: int = 0
+    # Silent deaths: the rank stops heartbeating but never raises
+    # ProcessFaultException at the barrier — only the heartbeat monitor's
+    # missed-beat timeout can notice (step -> ranks).
+    silent_schedule: dict[int, list[int]] = field(default_factory=dict)
+    # Kills aimed at the *shadow* team (step -> replica-local ranks), for the
+    # replica-dies-during-catch-up orderings.
+    replica_schedule: dict[int, list[int]] = field(default_factory=dict)
+    # Detection-latency assertion: when set, note_detection() asserts every
+    # silent death is noticed within this many ticks of the kill.
+    max_detection_ticks: int | None = None
+    # Optional callback invoked as detection_hook(rank, latency_ticks) for
+    # every detected silent death (tests install custom assertions here).
+    detection_hook: object = None
     _fired: set = field(default_factory=set)
     _tick: int = 0  # wall-clock step count (monotonic across rollbacks)
+    _death_tick: dict[int, int] = field(default_factory=dict)  # rank -> tick of silent kill
 
     def schedule_group_burst(
         self, step: int, group_index: int, group_size: int, count: int,
@@ -92,6 +106,49 @@ class FailureInjector:
             for r in np.nonzero(draws < p)[0]:
                 kills.extend(self._widen_burst(int(r)))
         return sorted(set(kills))
+
+    def silent_kills_at_step(self, step: int) -> list[int]:
+        """Ranks that go silent at ``step``: they keep the process alive as
+        far as the barrier is concerned but stop heartbeating, so only the
+        timeout path detects them. Records the kill tick so the detection
+        latency can be asserted by :meth:`note_detection`."""
+        kills = []
+        for r in self.silent_schedule.get(step, []):
+            key = ("silent", step, r)
+            if key not in self._fired:
+                self._fired.add(key)
+                kills.append(r)
+                self._death_tick[r] = self._tick
+        return sorted(set(kills))
+
+    def replica_kills_at_step(self, step: int) -> list[int]:
+        """Kills aimed at the shadow team's (replica-local) ranks."""
+        kills = []
+        for r in self.replica_schedule.get(step, []):
+            key = ("replica", step, r)
+            if key not in self._fired:
+                self._fired.add(key)
+                kills.append(r)
+        return sorted(set(kills))
+
+    def note_detection(self, rank: int) -> int | None:
+        """Called by the runtime when the heartbeat monitor declares ``rank``
+        dead. Returns the detection latency in ticks for silently-killed ranks
+        (None for ranks the injector didn't silence), asserting it against
+        ``max_detection_ticks`` and invoking ``detection_hook`` if configured.
+        """
+        death = self._death_tick.pop(rank, None)
+        if death is None:
+            return None
+        latency = self._tick - death
+        if self.max_detection_ticks is not None:
+            assert latency <= self.max_detection_ticks, (
+                f"silent death of rank {rank} took {latency} ticks to detect "
+                f"(> {self.max_detection_ticks})"
+            )
+        if self.detection_hook is not None:
+            self.detection_hook(rank, latency)
+        return latency
 
     def kills_at_checkpoint(self, ckpt_index: int) -> list[int]:
         kills = []

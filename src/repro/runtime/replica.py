@@ -1,0 +1,199 @@
+"""Hot-replica teams — the resilience rung ABOVE the codec ladder.
+
+TeaMPI-style team replication (arXiv 2005.12091; FTHP-MPI, arXiv 2504.09989)
+applied to the serving fleet: a *shadow team* — a second VirtualCluster with
+its own CheckpointEngine over the same entity set — trails the primary by
+exactly one committed checkpoint generation. On primary failure the server
+*promotes* the shadow instead of blocking on a codec rebuild: the promoted
+engine already holds a fully-committed generation on every member, so
+recovery degenerates to the zero-communication survivor unpack and traffic
+keeps flowing while the old team is rebuilt off the critical path and
+re-enrolled as the new shadow.
+
+Lazy sync (the TeaMPI trick that keeps steady-state overhead near zero): the
+primary's commit point *stages* a cheap reference capture of the just-swapped
+read-only generation (:func:`repro.core.storage.capture_snapshot` — the same
+immutable view the background tier flush rides), and the NEXT commit point
+installs the previous capture into the shadow stores. The shadow therefore
+converges one generation behind the primary, and the bytes it copies are the
+parity stripes + exchange subsets already resident in ``HostStore`` — no
+second encode, no device traffic. (On real hardware the transport is the
+fused-bucket mirror program — ``core.device_tier.build_mirror_program``
+routes the same uint32 buckets to the shadow mesh's twin coordinates through
+one collective permute; this host-side copy is its single-process stand-in.)
+
+The promotion ladder composes downward instead of replacing anything:
+
+  replica promote        — shadow fully synced: zero-comm unpack, no stall
+  └─ codec rebuild       — a shadow member died (e.g. during catch-up): its
+                           shard reconstructs from the copied parity stripes
+     └─ tier escalation  — the copied generation is beyond codec tolerance:
+                           the promoted engine falls down the storage ladder
+
+so a burst that takes out primary AND shadow ranks still recovers
+bit-identically through the existing machinery (DESIGN.md §15).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.checkpoint import CheckpointEngine
+from repro.core.hoststore import HostStore, StorePayload
+from repro.core.storage import TierSnapshot, capture_snapshot
+from repro.obs.trace import tracer
+from repro.runtime.cluster import VirtualCluster
+from repro.utils.logging import get_logger
+
+log = get_logger("runtime.replica")
+
+#: Promotion state machine (DESIGN.md §15): enrolled -> syncing -> ready
+#: -> promoted; re_enroll() returns a promoted/stale team to "enrolled".
+STATES = ("enrolled", "syncing", "ready", "promoted")
+
+
+class ReplicaTeam:
+    """A shadow cluster + engine mirroring a primary engine's generations.
+
+    ``engine_factory(n_ranks)`` must return a :class:`CheckpointEngine` with
+    the same entities registered as the primary's — promotion restores
+    through those entity hooks, exactly like a normal recovery.
+    """
+
+    def __init__(
+        self,
+        n_ranks: int,
+        engine_factory: Callable[[int], CheckpointEngine],
+        n_spares: int = 0,
+        fault_hook: Callable[[int], None] | None = None,
+    ) -> None:
+        self.n_ranks = n_ranks
+        self.n_spares = n_spares
+        self._factory = engine_factory
+        # fault_hook(rank) fires before each member's install during catch-up
+        # so tests can kill a shadow rank mid-sync (the nasty ordering).
+        self._fault_hook = fault_hook or (lambda rank: None)
+        self.state = "enrolled"
+        self.synced_gen = -1          # primary commit counter last installed
+        self.syncs = 0
+        self.promotions = 0
+        self.bytes_synced = 0
+        self.blocked_sync_s = 0.0     # primary-visible lazy-sync stall
+        self.rebuild_s = 0.0          # off-critical-path re-enroll cost
+        self._staged: TierSnapshot | None = None
+        self._build()
+
+    def _build(self) -> None:
+        self.cluster = VirtualCluster(self.n_ranks, self.n_spares)
+        self.engine = self._factory(self.n_ranks)
+        self.cluster.attach_engine(self.engine)
+
+    # ------------------------------------------------------------------ #
+    # lazy sync: stage at commit g, install at commit g+1
+    # ------------------------------------------------------------------ #
+    def stage(self, primary_engine: CheckpointEngine) -> None:
+        """Capture the primary's just-committed generation by reference (no
+        copies — the TierSnapshot pins the read-only payload objects, so the
+        double-buffer's next swap cannot scribble over them)."""
+        self._staged = capture_snapshot(primary_engine)
+
+    def catch_up(self) -> bool:
+        """Install the previously staged generation into the shadow stores.
+        Returns True when a sync happened (False: nothing staged, or already
+        at that generation). Dead shadow members are skipped — their shards
+        come back through the codec path at promotion time."""
+        snap = self._staged
+        if snap is None or snap.created <= self.synced_gen or not snap.payloads:
+            return False
+        self.state = "syncing"
+        t0 = time.perf_counter()
+        total = 0
+        with tracer().span("replica_sync", gen=snap.created):
+            for r, src in sorted(snap.payloads.items()):
+                self._fault_hook(r)
+                st = self.engine.stores.get(r)
+                if st is None or not st.alive:
+                    continue
+                total += self._install(st, src)
+        self.synced_gen = snap.created
+        self.syncs += 1
+        dt = time.perf_counter() - t0
+        self.blocked_sync_s += dt
+        self.bytes_synced += total
+        self.state = "ready"
+        self.engine.journal.record(
+            "replica_sync", gen=snap.created, bytes=total, duration_s=dt,
+            members=len(snap.payloads), step=snap.step,
+        )
+        return True
+
+    def _install(self, st: HostStore, src: StorePayload) -> int:
+        """Deep-copy one member's payload through the shadow store's arena
+        leases (allocation-free at steady state, same discipline as the
+        primary's create path), then commit it with the double-buffer swap."""
+        new = StorePayload()
+        nbytes = 0
+
+        def copy_blob(key: Any, blob: np.ndarray) -> np.ndarray:
+            nonlocal nbytes
+            flat = np.ascontiguousarray(blob).view(np.uint8).reshape(-1)
+            dst = st.lease(key, flat.nbytes)
+            np.copyto(dst, flat)
+            nbytes += flat.nbytes
+            if blob.dtype != np.uint8 or blob.ndim != 1:
+                return dst.view(blob.dtype).reshape(blob.shape)
+            return dst
+
+        for name, (flat, man) in src.own.items():
+            new.own[name] = (copy_blob(("r_own", name), flat), man)
+        for name, (flat, man) in src.own_exch.items():
+            new.own_exch[name] = (copy_blob(("r_exch", name), flat), man)
+        for gi, stripes in src.parity.items():
+            dst_g = {}
+            for key, blob in stripes.items():
+                dst_g[key] = copy_blob(("r_parity", gi, key), blob)
+            new.parity[gi] = dst_g
+        # Manifests/checksums/coords are immutable once committed; sharing
+        # the references is safe and keeps the sync payload pure data bytes.
+        new.meta = dict(src.meta)
+        st.buffer.write(new)
+        st.buffer.swap()
+        return nbytes
+
+    # ------------------------------------------------------------------ #
+    # promotion / re-enrollment
+    # ------------------------------------------------------------------ #
+    @property
+    def can_promote(self) -> bool:
+        return self.state == "ready" and self.engine.has_valid_checkpoint
+
+    def release(self) -> tuple[VirtualCluster, CheckpointEngine]:
+        """Hand the shadow's cluster + engine to the caller for promotion.
+        The team object stays around to be re-enrolled over the old team's
+        (rebuilt) resources."""
+        assert self.can_promote, "promotion without a synced generation"
+        self.state = "promoted"
+        self.promotions += 1
+        self._staged = None
+        return self.cluster, self.engine
+
+    def re_enroll(self, old_engine: CheckpointEngine | None = None) -> None:
+        """Rebuild the (former-primary) team as the new shadow: fresh cluster
+        + engine from the factory — the simulation analogue of restarting the
+        dead team's hosts — starting empty at generation -1; the next primary
+        commit point lazy-syncs it back to ready. Runs off the serving
+        critical path (the promoted engine is already answering traffic)."""
+        t0 = time.perf_counter()
+        with tracer().span("replica_reenroll"):
+            if old_engine is not None:
+                old_engine.close()
+            self._build()
+        self.synced_gen = -1
+        self._staged = None
+        self.state = "enrolled"
+        self.rebuild_s += time.perf_counter() - t0
+        log.info("old team rebuilt and re-enrolled as shadow (%d ranks)",
+                 self.n_ranks)

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import json
 import threading
+import time
 from dataclasses import dataclass, field
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Callable
@@ -25,9 +26,12 @@ import jax.numpy as jnp
 import numpy as np
 from repro.core.checkpoint import CheckpointEngine, EngineConfig
 from repro.models.model import Model
-from repro.runtime.cluster import VirtualCluster
+from repro.obs.trace import tracer
+from repro.runtime.cluster import HeartbeatMonitor, VirtualCluster
 from repro.runtime.failures import FailureInjector, ProcessFaultException
+from repro.runtime.replica import ReplicaTeam
 from repro.runtime.state import ShardPlan, ShardedStateEntity
+from repro.runtime.straggler import StragglerDetector
 from repro.sharding.axes import rules_for_shape, tree_pspecs
 from repro.sharding.mesh import abstract_mesh
 from repro.sharding.spec import specs_to_shape_dtype
@@ -115,6 +119,15 @@ class ServerConfig:
     # the encode/transfer/verify pipeline with the next decode steps,
     # committing at the following boundary (DESIGN.md §9).
     checkpoint_mode: str = "sync"     # sync | async
+    # Hot-replica team (DESIGN.md §15): a shadow cluster + engine lazy-synced
+    # one committed generation behind the primary; on primary failure it is
+    # *promoted* (zero-comm unpack) instead of blocking on a codec rebuild.
+    replica_team: bool = False
+    # Heartbeat liveness (DESIGN.md §15): timeout detection per serving tick,
+    # the only path that notices silent deaths (no fault at the barrier).
+    # A rank is declared dead after miss_threshold x straggler-grace ticks.
+    heartbeat: bool = True
+    heartbeat_miss_threshold: int = 3
     engine: EngineConfig = field(default_factory=EngineConfig)
 
 
@@ -155,7 +168,18 @@ class Server:
         self._build_engine(scfg.n_virtual_hosts)
         self.injector = injector or FailureInjector(scfg.n_virtual_hosts)
         self.n_recoveries = 0
+        self.promotions = 0
         self._metrics_server: MetricsServer | None = None
+        self.straggler = StragglerDetector(scfg.n_virtual_hosts)
+        self._hb_tick = 0  # monotonic serving tick feeding the heartbeat
+        self.heartbeat = self._new_heartbeat() if scfg.heartbeat else None
+        # Shadow team: its engine comes from the same factory, so promotion
+        # restores through the identical entity hooks.
+        self.replica = (
+            ReplicaTeam(scfg.n_virtual_hosts, self._new_engine,
+                        n_spares=scfg.n_spares)
+            if scfg.replica_team else None
+        )
 
     def start_metrics_server(self, port: int = 0) -> MetricsServer:
         """Expose the live engine's registry (survives engine swaps) on
@@ -171,14 +195,30 @@ class Server:
             self._metrics_server.stop()
             self._metrics_server = None
 
+    def _new_engine(self, n_ranks: int) -> CheckpointEngine:
+        """Engine factory shared by the primary and the shadow team: both
+        register the same live-session entity, so whichever engine restores
+        resolves the in-flight sessions against itself."""
+        eng = CheckpointEngine(n_ranks, self.scfg.engine)
+        eng.register(
+            "sessions",
+            ShardedStateEntity(lambda: self.sessions, self._set_sessions, self.plan),
+        )
+        return eng
+
     def _build_engine(self, n_ranks: int) -> None:
         if getattr(self, "engine", None) is not None:
             self.engine.close()  # join + release the old pipeline worker
-        self.engine = CheckpointEngine(n_ranks, self.scfg.engine)
+        self.engine = self._new_engine(n_ranks)
         self.cluster.attach_engine(self.engine)
-        self.engine.register(
-            "sessions",
-            ShardedStateEntity(lambda: self.sessions, self._set_sessions, self.plan),
+
+    def _new_heartbeat(self) -> HeartbeatMonitor:
+        return HeartbeatMonitor(
+            self.cluster.n_ranks,
+            miss_threshold=self.scfg.heartbeat_miss_threshold,
+            straggler=self.straggler,
+            registry=self.engine.registry,
+            journal=self.engine.journal,
         )
 
     def _set_sessions(self, np_sessions: dict[str, Any]) -> None:
@@ -217,11 +257,27 @@ class Server:
                     raise ProcessFaultException(
                         sorted(self.cluster.failed), "checkpoint"
                     )
+                if pending and self.replica is not None:
+                    self._replica_tick()
                 # staged tier flush starts here, behind the next decode steps
                 self.engine.kick_tier_flush()
                 for r in self.injector.kills_at_step(ticks):
                     self.cluster.kill(r)
+                for r in self.injector.silent_kills_at_step(ticks):
+                    self.cluster.kill(r, cause="silent_death", silent=True)
+                if self.replica is not None:
+                    for r in self.injector.replica_kills_at_step(ticks):
+                        self.replica.cluster.kill(r, cause="replica_host_failure")
                 ticks += 1
+                self._hb_tick += 1
+                if self.heartbeat is not None:
+                    lost = self.heartbeat.observe(
+                        self.cluster.alive(), self._hb_tick
+                    )
+                    if lost:
+                        for r in lost:
+                            self.injector.note_detection(r)
+                        raise ProcessFaultException(lost, "heartbeat")
                 self.cluster.barrier("decode")
 
                 pos = int(self.sessions["pos"])
@@ -238,6 +294,8 @@ class Server:
                         ok = self.engine.checkpoint_async({"pos": pos + 1})
                     else:
                         ok = self.engine.checkpoint({"pos": pos + 1})
+                        if ok and self.replica is not None:
+                            self._replica_tick()
                     if not ok:
                         raise ProcessFaultException(sorted(self.cluster.failed), "checkpoint")
             except ProcessFaultException as e:
@@ -246,11 +304,14 @@ class Server:
                 produced = self._produced()
         # Commit a still-in-flight overlapped checkpoint before handing the
         # tokens back, so the final session state is protected.
-        if self.engine.finalize_async() is False:
+        final = self.engine.finalize_async()
+        if final is False:
             log.warning(
                 "final session checkpoint aborted (rank died during the "
                 "trailing pipeline); sessions re-protect on the next decode"
             )
+        elif final and self.replica is not None:
+            self._replica_tick()
         return np.asarray(self.sessions["tokens"])
 
     def _produced(self) -> int:
@@ -260,10 +321,71 @@ class Server:
         self._prompt_len = prompts.shape[1]
         self.prefill(prompts, **extra)
         # First checkpoint right after prefill (the serving baseline state).
-        self.engine.checkpoint({"pos": int(self.sessions["pos"])})
+        if self.engine.checkpoint({"pos": int(self.sessions["pos"])}):
+            if self.replica is not None:
+                self._replica_tick()
         return self.decode(n_tokens)
 
+    def _replica_tick(self) -> None:
+        """Lazy-sync step at every commit point: install the generation
+        staged at the PREVIOUS commit into the shadow stores, then stage the
+        generation that just committed. The shadow thus trails the primary
+        by exactly one committed generation (DESIGN.md §15)."""
+        self.replica.catch_up()
+        self.replica.stage(self.engine)
+
     def recover(self) -> None:
+        """Recovery entry: the replication rung sits ABOVE the codec ladder —
+        a synced shadow team is promoted (no blocking rebuild) and only teams
+        without a promotable shadow fall into the restore machinery."""
+        if self.replica is not None and self.replica.can_promote:
+            self._promote_replica()
+        else:
+            self._recover_current()
+        if self.heartbeat is not None:
+            # Rebuild against the (possibly promoted/resized) engine so the
+            # liveness gauge lands in the live registry, and re-arm beats.
+            self.heartbeat = self._new_heartbeat()
+            self.heartbeat.reset(self.cluster.alive(), self._hb_tick)
+
+    def _promote_replica(self) -> None:
+        """Zero-downtime failover: swap the shadow team in as the serving
+        cluster + engine, roll sessions back to its synced generation (an
+        all-survivor zero-comm unpack when the shadow is intact; a codec
+        rebuild for members that died during catch-up; tier escalation
+        beyond tolerance), then rebuild the old team off the critical path
+        and re-enroll it as the new shadow."""
+        t0 = time.perf_counter()
+        failed_primary = sorted(self.cluster.failed)
+        old_engine = self.engine
+        old_engine.discard_pending()  # stop in-flight pipeline workers
+        self.cluster, self.engine = self.replica.release()
+        failed_shadow = sorted(self.cluster.failed)
+        gen = self.replica.synced_gen
+        tracer().instant(
+            "replica_promote", gen=gen,
+            failed_primary=len(failed_primary), failed_shadow=len(failed_shadow),
+        )
+        with tracer().span("replica_promote_restore", gen=gen):
+            self._recover_current()
+        stall = time.perf_counter() - t0
+        self.promotions += 1
+        self.engine.journal.record(
+            "replica_promote", gen=gen, duration_s=stall,
+            failed_primary=len(failed_primary),
+            failed_shadow=len(failed_shadow),
+            zero_comm=not failed_shadow,
+        )
+        log.info(
+            "replica promoted at gen %d in %.3fs (primary lost %d rank(s); "
+            "shadow lost %d)", gen, stall, len(failed_primary),
+            len(failed_shadow),
+        )
+        # Old team: rebuilt in the background and re-enrolled as the shadow;
+        # it lazy-syncs back to ready at the next commit point.
+        self.replica.re_enroll(old_engine)
+
+    def _recover_current(self) -> None:
         if not self.engine.has_valid_checkpoint:
             if not self.engine.has_tier_data():
                 raise RuntimeError("no valid session checkpoint")
@@ -272,8 +394,11 @@ class Server:
             # the persistent tier ladder inside restore (DESIGN.md §12).
             log.warning("no in-memory session checkpoint; escalating to the tier ladder")
             self.cluster.restart_all()
-        elastic = self.scfg.recovery_policy == "elastic" or (
-            self.cluster.spares_left < len(self.cluster.failed)
+        # With no failed ranks (a clean replica promotion) there is nothing
+        # to shrink around: stabilize is a no-op and restore is zero-comm.
+        elastic = bool(self.cluster.failed) and (
+            self.scfg.recovery_policy == "elastic"
+            or self.cluster.spares_left < len(self.cluster.failed)
         )
         if elastic:
             # Shrink onto the survivors: repartition the session checkpoint

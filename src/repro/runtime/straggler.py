@@ -71,6 +71,21 @@ class StragglerDetector:
         self._step_times.pop(rank, None)
         self._flag_counts.pop(rank, None)
 
+    def slowdown_percentile(self, pct: float = 95.0) -> float:
+        """Observed per-rank slowdown (EWMA step time over the cluster median)
+        at the given percentile. The heartbeat monitor multiplies its
+        missed-beat threshold by this grace factor so a rank that is merely
+        ``pct``-percentile slow is treated as a straggler, not a corpse —
+        the dead/straggling discrimination DESIGN.md §15 tunes."""
+        times = list(self._step_times.values())
+        if not times:
+            return 1.0
+        med = float(np.median(times))
+        if med <= 0:
+            return 1.0
+        ratios = [t / med for t in times]
+        return max(1.0, float(np.percentile(ratios, pct)))
+
 
 def worth_evicting(
     slowdown: float,

@@ -499,3 +499,40 @@ def test_ragged_fallback_warns_once_per_key_and_pcie_accounting_exact():
         """
     )
     assert "OK" in _run(code)
+
+
+def test_mirror_program_routes_primary_buckets_to_shadow_twins():
+    """Hot-replica transport (DESIGN.md §15): build_mirror_program emits the
+    same fused uint32 buckets but routes them through the half-rotation to
+    the shadow team — each shadow coordinate's slice of ``mirror[tag]`` is
+    its primary twin's bucket, verbatim (no parity, no own copy), with the
+    handshake checksum folded into the same single-permute program."""
+    code = textwrap.dedent(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.core.device_tier import build_mirror_program
+        from repro.utils.hlo import analyze_hlo_collectives
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        sds = {"w": jax.ShapeDtypeStruct((8, 6), jnp.float32),
+               "rep": jax.ShapeDtypeStruct((5,), jnp.float32)}
+        ps = {"w": P("data", "model"), "rep": P()}
+        prog = build_mirror_program(mesh, sds, ps)
+        w = jnp.arange(48, dtype=jnp.float32).reshape(8, 6)
+        state = {"w": jax.device_put(w, NamedSharding(mesh, P("data", "model"))),
+                 "rep": jnp.ones((5,), jnp.float32)}
+        payload = jax.jit(prog.snapshot_fn)(state)
+        assert "mirror" in payload and "partner" not in payload
+        assert "own" not in payload and "parity" not in payload
+        # oracle: per-coordinate fused bucket, rotated by the team size T=2
+        mw = np.asarray(payload["mirror"]["data:float32"]).view(np.float32).reshape(4, 2, 6)
+        own = np.ascontiguousarray(np.asarray(w).reshape(4, 2, 2, 3).swapaxes(1, 2)).reshape(4, 2, 6)
+        assert np.array_equal(mw, np.roll(own, 2, axis=0))
+        assert payload["checksum"].shape == (2,)
+        txt = jax.jit(prog.snapshot_fn).lower(state).compile().as_text()
+        coll = analyze_hlo_collectives(txt)
+        assert coll.count_by_kind.get("collective-permute", 0) == 1, coll.count_by_kind
+        print("OK")
+        """
+    )
+    assert "OK" in _run(code)

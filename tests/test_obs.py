@@ -326,6 +326,37 @@ def test_report_renders_phase_breakdown(tr, tmp_path):
     assert "capture" in text and "finalize_wait" in text
     assert "overlap" in text
     assert "gen" in text.splitlines()[0]
+    assert "failover" not in text  # no failover events in a clean trace
+
+
+def test_report_renders_failover_timeline(tr, tmp_path):
+    """kill/heartbeat_lost/replica_promote instants + the sync/restore/
+    re-enroll spans render as a chronological detect -> promote -> rebuild
+    -> re-enroll narrative with the promotion stall totalled."""
+    tr.instant("kill", rank=2, cause="silent_death", silent=True)
+    tr.instant("heartbeat_lost", rank=2, missed=3)
+    tr.instant("replica_promote", gen=4, failed_primary=1, failed_shadow=0)
+    with tr.span("replica_promote_restore", gen=4):
+        pass
+    with tr.span("replica_reenroll"):
+        pass
+    with tr.span("replica_sync", gen=5):
+        pass
+    path = tmp_path / "fo.json"
+    tr.write(str(path))
+
+    from repro.launch.report import failover_timeline, render
+    from repro.obs.trace import load_instants, load_trace
+
+    rows = failover_timeline(load_trace(str(path)), load_instants(str(path)))
+    assert [r["event"] for r in rows] == [
+        "kill", "heartbeat_lost", "replica_promote",
+        "replica_promote_restore", "replica_reenroll", "replica_sync",
+    ]
+    assert rows[0]["t0"] == 0.0 and "rank=2" in rows[0]["detail"]
+    text = render(str(path))
+    assert "failover timeline" in text
+    assert "promotion stall" in text and "heartbeat_lost" in text
 
 
 # --------------------------------------------------------------------------- #

@@ -1,0 +1,260 @@
+"""Hot-replica teams (DESIGN.md §15): heartbeat detection of silent deaths,
+lazy-sync / promotion orderings down the codec ladder, and the striped-codec
+compressed exchange that shrinks catch-up payloads."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import CONFIGS
+from repro.core.checkpoint import CheckpointEngine, EngineConfig
+from repro.models import build_model
+from repro.runtime.cluster import HeartbeatMonitor
+from repro.runtime.failures import FailureInjector
+from repro.runtime.server import Server, ServerConfig
+
+
+# --------------------------------------------------------------------------- #
+# HeartbeatMonitor (unit)
+# --------------------------------------------------------------------------- #
+
+def test_heartbeat_declares_dead_after_missed_beats():
+    hb = HeartbeatMonitor(4, miss_threshold=3)
+    for t in range(1, 4):
+        assert hb.observe({0, 1, 2, 3}, t) == []
+    # rank 2 goes silent at t=4; limit is 3 ticks with no straggler grace
+    assert hb.observe({0, 1, 3}, 4) == []
+    assert hb.observe({0, 1, 3}, 5) == []
+    assert hb.observe({0, 1, 3}, 6) == [2]
+    # declared ranks are not re-announced
+    assert hb.observe({0, 1, 3}, 7) == []
+
+
+def test_heartbeat_straggler_grace_stretches_deadline():
+    class Straggler:
+        def slowdown_percentile(self, pct=95.0):
+            return 2.0
+
+    hb = HeartbeatMonitor(2, miss_threshold=3, straggler=Straggler())
+    assert hb.deadline_ticks() == 6
+    for t in range(1, 3):
+        hb.observe({0, 1}, t)
+    # 5 missed ticks: still within the stretched budget (slow, not dead)
+    for t in range(3, 8):
+        assert hb.observe({0}, t) == []
+    assert hb.observe({0}, 8) == [1]
+
+
+def test_heartbeat_revive_and_reset_rearm():
+    hb = HeartbeatMonitor(2, miss_threshold=2)
+    hb.observe({0, 1}, 1)
+    assert hb.observe({0}, 3) == [1]
+    # a beating declared rank (spare substitution) is revived...
+    assert hb.observe({0, 1}, 4) == []
+    assert hb.observe({0}, 6) == [1]
+    # ...and reset() re-arms every alive rank after a recovery
+    hb.reset({0, 1}, 10)
+    assert hb.observe({0, 1}, 11) == []
+    assert hb.observe({0}, 12) == []
+    assert hb.observe({0}, 13) == [1]
+
+
+# --------------------------------------------------------------------------- #
+# Striped codecs + compression: the exchange subset travels compressed
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("codec", ["xor", "rs"])
+def test_striped_codec_compressed_exchange_roundtrip(codec):
+    n = 4
+    base = EngineConfig(codec=codec, parity_group=2, rs_parity=2)
+    plain = CheckpointEngine(n, base)
+    sizes = {}
+    for label, cfg in (
+        ("plain", base),
+        ("compressed", EngineConfig(codec=codec, parity_group=2, rs_parity=2,
+                                    compress=True)),
+    ):
+        eng = CheckpointEngine(n, cfg)
+        # big enough that the int8 quantizer's tile padding (block x
+        # rows-per-tile elements) is amortized and compression really shrinks
+        vec_data = [np.arange(16384, dtype=np.float32) + 1000 * r for r in range(n)]
+
+        class Vec:
+            def snapshot_shards(self, k):
+                return [{"v": vec_data[r].copy(), "origin": np.int64(r)}
+                        for r in range(k)]
+
+            def restore_shards(self, shards):
+                for origin, payload in shards.items():
+                    vec_data[origin] = np.asarray(payload["v"]).copy()
+
+        eng.register("state", Vec())
+        assert eng.checkpoint({"step": 1})
+        sizes[label] = eng.stats.last_bytes_exchanged
+        if label == "plain":
+            eng.close()
+            continue
+        # every member holds its exchange subset compressed in own_exch
+        for st in eng.stores.values():
+            ro = st.buffer.read_only
+            assert "state" in ro.own_exch
+            _, man = ro.own_exch["state"]
+            assert man is not None and man[0] == "compressed", man
+        orig = [d.copy() for d in vec_data]
+        for d in vec_data:
+            d += 999.0
+        eng.stores[1].wipe()
+        eng.restore()
+        assert eng.stats.reconstructed_restores >= 1
+        for r in range(n):
+            if r == 1:  # rebuilt from parity over compressed bytes: lossy
+                rel = np.abs(vec_data[r] - orig[r]).max() / np.abs(orig[r]).max()
+                assert rel < 0.02
+            else:       # survivors unpack their exact own copy
+                assert np.array_equal(vec_data[r], orig[r]), r
+        eng.close()
+    assert sizes["compressed"] < sizes["plain"], sizes
+    plain.close()
+
+
+# --------------------------------------------------------------------------- #
+# Serving failover drills (nasty orderings)
+# --------------------------------------------------------------------------- #
+
+RS = EngineConfig(codec="rs", parity_group=2, rs_parity=2)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = CONFIGS["gemma2-2b"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    prompts = np.random.default_rng(0).integers(0, cfg.vocab_size, (4, 8), dtype=np.int32)
+    return cfg, model, params, prompts
+
+
+def _serve(model, params, prompts, injector=None, **cfg_kw):
+    s = Server(
+        model,
+        ServerConfig(batch=4, max_seq=40, checkpoint_every_tokens=6, **cfg_kw),
+        params=params,
+        injector=injector,
+    )
+    out = s.prefill_and_decode(prompts, 24)
+    return s, out
+
+
+def test_whole_primary_team_lost_promotion_is_zero_comm(setup):
+    """Every primary rank dies in one burst mid-serving: the shadow team is
+    promoted with a zero-communication unpack (no codec rebuild at all),
+    traffic continues, and the old team re-enrolls as the new shadow."""
+    cfg, model, params, prompts = setup
+    _, ref = _serve(model, params, prompts)
+    inj = FailureInjector(4, schedule={13: [0, 1, 2, 3]})
+    s, out = _serve(model, params, prompts, injector=inj,
+                    replica_team=True, engine=RS)
+    assert np.array_equal(ref, out)
+    assert s.promotions == 1 and s.n_recoveries == 1
+    assert s.engine.stats.last_restore_bytes_rebuilt == 0
+    ev = s.engine.journal.events("replica_promote")
+    assert len(ev) == 1 and ev[0]["zero_comm"] and ev[0]["failed_primary"] == 4
+    # old team rebuilt off the critical path and lazy-synced back to ready
+    assert s.replica.state == "ready" and s.replica.syncs >= 1
+
+
+def test_primary_dies_mid_checkpoint_replica_one_gen_behind(setup):
+    """The commit handshake aborts (rank dies between capture and commit),
+    so the primary never finishes generation G; the shadow holds G-1 and
+    promotion rolls sessions back one full generation. Greedy decode must
+    regenerate the continuation bit-identically."""
+    cfg, model, params, prompts = setup
+    _, ref = _serve(model, params, prompts)
+    s = Server(
+        model,
+        ServerConfig(batch=4, max_seq=40, checkpoint_every_tokens=6,
+                     replica_team=True, engine=RS),
+        params=params,
+    )
+    fired = {"done": False}
+
+    def hook(phase):
+        if phase == "after_create" and s.engine.stats.created >= 2 and not fired["done"]:
+            fired["done"] = True
+            s.cluster.kill(2)
+
+    s.engine._fault_hook = hook
+    out = s.prefill_and_decode(prompts, 24)
+    assert fired["done"]
+    assert np.array_equal(ref, out)
+    assert s.promotions == 1
+    assert s.engine.stats.last_restore_bytes_rebuilt == 0  # shadow was intact
+
+
+def test_replica_member_dies_during_catch_up_codec_rebuilds_it(setup):
+    """A shadow rank dies mid-catch-up (between two member installs): the
+    sync skips it, promotion swaps the shadow in with one failed member, and
+    the restore reconstructs that shard from the freshly copied parity
+    stripes — the rung below on the ladder."""
+    cfg, model, params, prompts = setup
+    _, ref = _serve(model, params, prompts)
+    inj = FailureInjector(4, schedule={13: [0]})
+    s = Server(
+        model,
+        ServerConfig(batch=4, max_seq=40, checkpoint_every_tokens=6,
+                     replica_team=True, engine=RS),
+        params=params,
+        injector=inj,
+    )
+    fired = {"done": False}
+
+    def mid_sync_kill(member):
+        # fire once, between member 0's install and member 1's
+        if member == 1 and s.replica.syncs >= 1 and not fired["done"]:
+            fired["done"] = True
+            s.replica.cluster.kill(1, cause="replica_host_failure")
+
+    s.replica._fault_hook = mid_sync_kill
+    out = s.prefill_and_decode(prompts, 24)
+    assert fired["done"]
+    assert np.array_equal(ref, out)
+    assert s.promotions == 1
+    ev = s.engine.journal.events("replica_promote")
+    assert len(ev) == 1 and not ev[0]["zero_comm"] and ev[0]["failed_shadow"] == 1
+    assert s.engine.stats.reconstructed_restores >= 1
+
+
+def test_primary_and_replica_ranks_die_in_one_burst(setup):
+    """Correlated burst takes a primary rank AND a shadow rank in the same
+    tick: promotion still wins (the shadow holds a committed generation on
+    its survivors) and the dead shadow member comes back through the codec
+    path, bit-identically."""
+    cfg, model, params, prompts = setup
+    _, ref = _serve(model, params, prompts)
+    inj = FailureInjector(4, schedule={13: [2]}, replica_schedule={13: [1]})
+    s, out = _serve(model, params, prompts, injector=inj,
+                    replica_team=True, engine=RS)
+    assert np.array_equal(ref, out)
+    assert s.promotions == 1 and s.n_recoveries == 1
+    ev = s.engine.journal.events("replica_promote")
+    assert len(ev) == 1 and ev[0]["failed_primary"] == 1 and ev[0]["failed_shadow"] == 1
+    assert s.engine.stats.reconstructed_restores >= 1
+
+
+def test_silent_death_detected_by_heartbeat_within_budget(setup):
+    """A silently-dead rank (no fault at the barrier) is only caught by the
+    heartbeat timeout; the injector asserts the detection latency and the
+    journal carries the heartbeat_lost event."""
+    cfg, model, params, prompts = setup
+    _, ref = _serve(model, params, prompts)
+    detected = []
+    inj = FailureInjector(
+        4, silent_schedule={9: [2]}, max_detection_ticks=8,
+        detection_hook=lambda rank, latency: detected.append((rank, latency)),
+    )
+    s, out = _serve(model, params, prompts, injector=inj)
+    assert np.array_equal(ref, out)
+    assert s.n_recoveries == 1
+    assert detected and detected[0][0] == 2
+    assert detected[0][1] <= 8
+    lost = s.engine.journal.events("heartbeat_lost")
+    assert lost and lost[0]["rank"] == 2
