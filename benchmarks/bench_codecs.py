@@ -22,7 +22,12 @@ import numpy as np
 
 from benchmarks.roofline import HBM_BW
 from repro.core import gf256, parity
-from repro.core.codec import CopyCodec, RSCodec, XorCodec
+from repro.core.codec import CopyCodec, LRCCodec, RSCodec, XorCodec
+
+#: repair-locality section (DESIGN.md §16), filled by main(): single-failure
+#: repair reads for LRC vs global RS at equal tolerance. run.py --smoke gates
+#: on lrc_repair_read_bytes <= (k_local+1)/(k+m) * rs_repair_read_bytes.
+RESULTS: dict = {}
 
 
 def _time(fn, repeats: int = 3) -> float:
@@ -51,6 +56,7 @@ def main(smoke: bool = False) -> list[str]:
         "xor": XorCodec(k),
         "rs_m2": RSCodec(k, 2),
         "rs_m3": RSCodec(k, 3),
+        "lrc_l2_g2": LRCCodec(k, 2, 2),
     }
     tag = "smoke" if smoke else f"{k}x{nbytes >> 20}MiB"
     for name, codec in codecs.items():
@@ -98,6 +104,49 @@ def main(smoke: bool = False) -> list[str]:
             assert np.array_equal(out2[i][:nbytes], bufs[i]), (name, i)
         t = _time(chunked)
         lines.append(_line(f"codec_{name}_decode_into_t{len(missing)}_{tag}", t, total))
+
+    # Repair locality (DESIGN.md §16): single-failure repair under LRC reads
+    # only the local subgroup (k_local-1 survivors + one local parity) where
+    # global RS reads k-1 survivors + one blob. Measured through decode_into
+    # — the engine's chunked host path, which carries the read accounting —
+    # at equal tolerance m=2 over k=6 (k_local=3: the acceptance ratio is
+    # (k_local+1)/(k+m) = 0.5).
+    k6, l6, m6 = 6, 2, 2
+    bufs6 = [r.integers(0, 256, size=nbytes, dtype=np.uint8) for _ in range(k6)]
+    repair = {}
+    for name, codec in (("lrc", LRCCodec(k6, l6, m6)), ("rs", RSCodec(k6, m6))):
+        blobs6 = dict(enumerate(codec.encode(bufs6, codec.n_blobs(k6))))
+        present6 = {i: bufs6[i] for i in range(k6) if i != 2}
+        arenas6: dict[int, np.ndarray] = {}
+
+        def lease6(i, nb):
+            buf = arenas6.get(i)
+            if buf is None or buf.nbytes < nb:
+                buf = np.empty(nb, np.uint8)
+                arenas6[i] = buf
+            return buf[:nb]
+
+        def repair_one():
+            rebuilt, chunk = codec.decode_into(present6, blobs6, [2], lease6)
+            chunk(0, max(b.nbytes for b in blobs6.values()))
+            return rebuilt
+
+        out6 = repair_one()
+        assert np.array_equal(out6[2][:nbytes], bufs6[2]), name
+        t = _time(repair_one)
+        repair[f"{name}_repair_reads"] = codec.last_decode_reads
+        repair[f"{name}_repair_read_bytes"] = codec.last_decode_read_bytes
+        lines.append(
+            f"codec_{name}_repair1_k{k6}m{m6}_{tag},{t * 1e6:.0f},"
+            f"reads={codec.last_decode_reads}"
+            f"_read_MiB={codec.last_decode_read_bytes / 2**20:.2f}"
+        )
+    repair.update(k=k6, m=m6, k_local=-(-k6 // l6))
+    repair["lrc_repair_ratio"] = round(
+        repair["lrc_repair_read_bytes"] / max(repair["rs_repair_read_bytes"], 1), 3
+    )
+    RESULTS.clear()
+    RESULTS.update(repair)
 
     # Pallas GF(2^8) kernel (interpret mode on CPU; roofline as derived)
     import jax.numpy as jnp

@@ -58,6 +58,10 @@ SMOKE_TRACE_OVERHEAD_CEIL = 0.02
 #: team vs without) above this fails --smoke — the DESIGN.md §15 acceptance
 #: target is <=10%; the gate carries the usual 2x CI-noise headroom
 SMOKE_REPLICA_OVERHEAD_CEIL = 0.2
+#: LRC single-failure repair must read at most (k_local+1)/(k+m) of the
+#: bytes global RS reads at equal tolerance (DESIGN.md §16 repair locality —
+#: the whole point of local reconstruction codes). The ceiling is computed
+#: from bench_codecs.RESULTS' k/m/k_local, not hardcoded here.
 
 
 def _trace_out_path(argv: list[str]) -> str | None:
@@ -125,6 +129,7 @@ def main() -> None:
     pipeline = dict(getattr(bench_checkpoint_scaling, "RESULTS", {}) or {})
     recovery = dict(getattr(bench_recovery, "RESULTS", {}) or {})
     failover = dict(getattr(bench_failover, "RESULTS", {}) or {})
+    locality = dict(getattr(bench_codecs, "RESULTS", {}) or {})
 
     if trace_out:
         # Write the recorded span timeline (Perfetto-loadable) and cross-check
@@ -160,6 +165,7 @@ def main() -> None:
         "checkpoint_pipeline": pipeline,
         "recovery_pipeline": recovery,
         "failover": failover,
+        "codec_locality": locality,
     }
     with open("BENCH_results.json", "w") as f:
         json.dump(out, f, indent=2)
@@ -177,6 +183,7 @@ def main() -> None:
             "tier_flush_overhead": pipeline.get("tier_flush_overhead"),
             "trace_overhead_enabled": pipeline.get("trace_overhead_enabled"),
             "replica_sync_overhead": failover.get("replica_sync_overhead"),
+            "lrc_repair_ratio": locality.get("lrc_repair_ratio"),
             **{
                 f"recovery_speedup_{tag}": recovery.get(f"recovery_speedup_{tag}")
                 for tag in SMOKE_RECOVERY_FLOOR
@@ -231,6 +238,20 @@ def main() -> None:
                 f"(> {100 * SMOKE_REPLICA_OVERHEAD_CEIL:.0f}%; baseline "
                 f"{failover.get('blocked_s_baseline')}s vs replica "
                 f"{failover.get('blocked_s_replica')}s)",
+                file=sys.stderr,
+            )
+            failed += 1
+    if smoke and locality:
+        lrc_b = locality.get("lrc_repair_read_bytes", 0)
+        rs_b = locality.get("rs_repair_read_bytes", 0)
+        ceil = (locality.get("k_local", 0) + 1) / max(
+            locality.get("k", 1) + locality.get("m", 0), 1
+        )
+        if not rs_b or lrc_b > ceil * rs_b:
+            print(
+                f"# LRC repair-locality regression: single-failure repair "
+                f"read {lrc_b} bytes vs RS {rs_b} (ratio "
+                f"{lrc_b / max(rs_b, 1):.2f} > (k_local+1)/(k+m) = {ceil:.2f})",
                 file=sys.stderr,
             )
             failed += 1

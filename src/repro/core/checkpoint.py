@@ -135,6 +135,17 @@ class EngineConfig:
     # otherwise the full-copy scheme — so existing configs are bit-identical.
     codec: str = ""
     rs_parity: int = 2             # m parity blobs per group for codec="rs"
+    # Local groups for codec="lrc" (Azure-style local reconstruction,
+    # DESIGN.md §16): l local XOR parities over subgroups of ceil(k/l)
+    # members plus rs_parity global Cauchy parities. Single-failure repair
+    # reads only its subgroup; tolerance stays rs_parity.
+    lrc_locals: int = 2
+    # Failure-domain topology (core/topology.py, DESIGN.md §16): when set,
+    # parity groups are placed so no group has two members in one domain at
+    # topology.placement_level — a whole-rack loss costs each group at most
+    # one member. None keeps the legacy contiguous rank-order groups
+    # bit-identical.
+    topology: object = None
     # Background workers draining the phase-B pipeline of an explicit
     # ``checkpoint_async`` (0 = drain synchronously inside finalize_async;
     # the blocking ``checkpoint`` path never spawns a thread either way).
@@ -449,8 +460,95 @@ class CheckpointEngine:
         # All redundancy math + placement dispatches through the codec
         # (DESIGN.md §8); the engine itself is scheme-agnostic.
         self.codec = codec_mod.make_codec(cfg)
+        # Per-entity codec overrides (DESIGN.md §16): the adaptive protection
+        # policy upgrades hot entities (e.g. optimizer state) to a stronger
+        # or cheaper-to-repair codec at the SAME group size — every override
+        # shares the engine's group layout, so only the blob math differs.
+        # Restores resolve codecs from the captured payload's codec record,
+        # so a policy change between capture and restore cannot desync.
+        self.entity_codecs: dict[str, codec_mod.RedundancyCodec] = {}
+        self._spec_codecs: dict[str, codec_mod.RedundancyCodec] = {}
+        # Failure-domain topology (DESIGN.md §16): sized to this world;
+        # resized alongside the engine by the elastic path.
+        self.topology = (
+            cfg.topology.resized(n_ranks) if cfg.topology is not None else None
+        )
+        self._groups_cache: tuple[tuple, list] | None = None
+        # Commit-point hooks (the adaptive policy re-evaluates here).
+        self._commit_hooks: list = []
         if cfg.gf_backend:
             gf256.set_backend(cfg.gf_backend)
+
+    # ------------------------------------------------------------------ #
+    # per-entity protection (adaptive policy surface, DESIGN.md §16)
+    # ------------------------------------------------------------------ #
+    def set_entity_codec(self, name: str, codec: str, m: int | None = None) -> None:
+        """Override the redundancy codec for one entity from the NEXT
+        checkpoint on. The override keeps the engine's group size (layout,
+        placement, and recovery plans stay shared); only blob count and
+        decode math change. ``m`` sets rs_parity for "rs"/"lrc"."""
+        import dataclasses as _dc
+
+        base = self.cfg
+        cand = _dc.replace(
+            base,
+            codec=codec,
+            rs_parity=m if m is not None else base.rs_parity,
+        )
+        new = codec_mod.make_codec(cand)
+        assert new.group_size(self.n_ranks) == self.codec.group_size(self.n_ranks), (
+            f"entity codec {codec!r} changes the group size; per-entity "
+            f"overrides must keep the engine layout"
+        )
+        self.entity_codecs[name] = new
+
+    def clear_entity_codec(self, name: str) -> None:
+        self.entity_codecs.pop(name, None)
+
+    def _codec_for(self, name: str) -> codec_mod.RedundancyCodec:
+        return self.entity_codecs.get(name, self.codec)
+
+    def _codec_spec(self, c: codec_mod.RedundancyCodec) -> str:
+        """Compact codec descriptor recorded per entity in every payload
+        (restore resolves codecs from this, never from live policy state)."""
+        m = getattr(c, "m", getattr(c, "global_parity", 0))
+        l = getattr(c, "local", 0)
+        return f"{c.name}:{m}:{l}"
+
+    def _codec_from_spec(self, spec: str) -> codec_mod.RedundancyCodec:
+        import dataclasses as _dc
+
+        name, m, l = spec.split(":")
+        if self._codec_spec(self.codec) == spec:
+            return self.codec
+        cached = self._spec_codecs.get(spec)
+        if cached is None:
+            cand = _dc.replace(
+                self.cfg,
+                codec=name,
+                rs_parity=max(int(m), 1),
+                lrc_locals=int(l) if int(l) else self.cfg.lrc_locals,
+            )
+            cached = self._spec_codecs[spec] = codec_mod.make_codec(cand)
+        return cached
+
+    def _restore_codec(self, name: str) -> codec_mod.RedundancyCodec:
+        """Codec for restoring entity ``name``: resolved from the codec
+        record captured WITH the payload (any valid store carries it), so a
+        policy override between capture and restore decodes with the codec
+        that actually encoded. Falls back to the live override map for
+        pre-§16 payloads."""
+        for st in self.stores.values():
+            if st.alive and st.buffer.valid:
+                spec = st.buffer.read_only.meta.get("codecs", {}).get(name)
+                if spec:
+                    return self._codec_from_spec(spec)
+        return self._codec_for(name)
+
+    def add_commit_hook(self, fn) -> None:
+        """``fn(engine)`` runs after every successful commit (pointer swap +
+        tier-flush scheduling) — the adaptive policy's re-evaluation point."""
+        self._commit_hooks.append(fn)
 
     # ------------------------------------------------------------------ #
     # registration
@@ -619,15 +717,25 @@ class CheckpointEngine:
         # the commit because the swap always follows the drain.
         exch_sums: dict[tuple[int, str], Any] = {}
 
+        # Per-entity codec record (DESIGN.md §16): replicated with every
+        # store's meta like the manifests, so restore decodes with the codec
+        # that encoded even if the policy has since changed its mind.
+        codec_specs = {
+            name: self._codec_spec(self._codec_for(name)) for name in packed
+        }
         for r in alive0:
             payload = StorePayload(meta=dict(meta or {}))
             if coords_tables:
                 payload.meta["coords"] = dict(coords_tables)
             payload.meta["manifests"] = manifests
+            payload.meta["codecs"] = codec_specs
             for name, rows in packed.items():
                 flat, man = rows[r]
                 payload.own[name] = (flat, man)
-                if self.codec.striped and packed_partner[name] is not packed[name]:
+                if (
+                    self._codec_for(name).striped
+                    and packed_partner[name] is not packed[name]
+                ):
                     payload.own_exch[name] = packed_partner[name][r]
                 if self.cfg.validate:
                     payload.meta.setdefault("checksums", {})[name] = np_checksum(flat)
@@ -652,17 +760,20 @@ class CheckpointEngine:
 
     def _pipeline_units(self, packed) -> list[tuple]:
         """One work unit per (parity group, entity): the granularity at which
-        encode, stripe transfer, and verification are pipelined."""
-        codec = self.codec
+        encode, stripe transfer, and verification are pipelined. Placement is
+        per entity — policy overrides change blob counts (rs m, lrc l+g)
+        while the shared group layout keeps holders aligned."""
         groups = self._groups()
         units = []
         for gi, grp in enumerate(groups):
-            placements = codec.placement(groups, gi, self.n_ranks)
-            if not placements:
-                continue
             for name in packed:
                 if name in self._replicated:
                     continue  # equal on all ranks: no redundancy needed
+                placements = self._codec_for(name).placement(
+                    groups, gi, self.n_ranks
+                )
+                if not placements:
+                    continue
                 units.append((gi, grp, placements, name))
         return units
 
@@ -756,7 +867,7 @@ class CheckpointEngine:
         entity) belongs to exactly one unit, so multi-worker shards never
         write the same key."""
         gi, grp, placements, name = unit
-        codec = self.codec
+        codec = self._codec_for(name)
         bufs = []
         for m in grp.members:
             flat, man = pending.packed[name][m]
@@ -800,7 +911,7 @@ class CheckpointEngine:
         and retires together with the rest of the snapshot."""
         gi, grp, placements, name = unit
         total = 0
-        by_ref = not self.codec.striped
+        by_ref = not self._codec_for(name).striped
         for b, (blob, holders) in enumerate(zip(blobs, placements)):
             blob = np.asarray(blob).reshape(-1)
             if by_ref:
@@ -913,6 +1024,11 @@ class CheckpointEngine:
             len(pending.alive0), 1
         )
         self._maybe_flush_tiers()
+        # Commit-point hooks: the adaptive protection policy re-evaluates
+        # here (DESIGN.md §16) — after the swap, so a policy flip can never
+        # tear a snapshot, and its overrides apply from the NEXT capture.
+        for hook in self._commit_hooks:
+            hook(self)
         return True
 
     # ------------------------------------------------------------------ #
@@ -1135,7 +1251,27 @@ class CheckpointEngine:
             self._pool = None
 
     def _groups(self) -> list[dist.ParityGroup]:
-        return dist.parity_groups(self.n_ranks, self.codec.group_size(self.n_ranks))
+        """The engine's group layout. No topology: the legacy contiguous
+        rank-order partition, bit-identical to every pre-§16 config. With a
+        topology: domain-aware placement (no group holds two members of one
+        failure domain), cached per (world, k, topology) since the greedy
+        packer is O(n log n) and every capture/restore asks."""
+        k = self.codec.group_size(self.n_ranks)
+        if self.topology is None:
+            return dist.parity_groups(self.n_ranks, k)
+        key = (self.n_ranks, k, self.topology.labels, self.topology.placement_level)
+        if self._groups_cache is None or self._groups_cache[0] != key:
+            groups = dist.domain_parity_groups(self.n_ranks, k, self.topology)
+            self._groups_cache = (key, groups, dist.rank_group_map(groups))
+        return self._groups_cache[1]
+
+    def _group_of(self, rank: int) -> int:
+        """Group index of ``rank`` under the engine layout — replaces the
+        ``rank // k`` identity, which only holds for contiguous groups."""
+        if self.topology is None:
+            return dist.group_of(rank, self.codec.group_size(self.n_ranks))
+        self._groups()
+        return self._groups_cache[2][rank]
 
     def _compress(self, flat, man):
         # Compress per-leaf floats through the manifest (int8 blockwise); raw
@@ -1212,12 +1348,21 @@ class CheckpointEngine:
         meta = self.checkpoint_step()
         self.stats.restored += 1
         self.stats.last_restore_s = time.perf_counter() - t0
+        # Domain labels on the failure set (DESIGN.md §16): lets
+        # fit_failure_stats cluster recoveries by rack/pod, the signal the
+        # adaptive protection policy reads.
+        domains = (
+            ",".join(sorted({self.topology.domain_label(r) for r in failed}))
+            if self.topology is not None and failed
+            else ""
+        )
         self.journal.record(
             "recovery", mode=self.cfg.restore_mode, failed=len(failed),
             n_ranks=self.n_ranks, duration_s=self.stats.last_restore_s,
             bytes_rebuilt=self.stats.last_restore_bytes_rebuilt,
             escalations=self.stats.tier_escalations,
             step=meta.get("step") if isinstance(meta, dict) else None,
+            domains=domains,
         )
         return meta
 
@@ -1305,7 +1450,6 @@ class CheckpointEngine:
         self, alive: set[int], failed: set[int]
     ) -> dict[str, dict[int, Any]]:
         t0 = time.perf_counter()
-        codec = self.codec
         groups = self._groups()
         shards: dict[str, dict[int, Any]] = {n: {} for n in self._entities}
         partials: dict[str, dict[int, Any]] = {n: {} for n in self._entities}
@@ -1354,7 +1498,7 @@ class CheckpointEngine:
                     local_jobs.append((name, origin, flat, man))
                     self.stats.zero_comm_restores += 1
                 else:
-                    gi = dist.group_of(origin, codec.group_size(self.n_ranks))
+                    gi = self._group_of(origin)
                     if (gi, name) not in seen_units:
                         seen_units.add((gi, name))
                         u = cached_units.get((gi, name)) if cached_units else None
@@ -1590,7 +1734,7 @@ class CheckpointEngine:
         surviving shards/stripes (so a rank dying mid-restore cannot pull
         bytes out from under the drain), arena-leased blob + output buffers
         on the recovering host, and the codec's precomputed chunk decoder."""
-        codec = self.codec
+        codec = self._restore_codec(name)
         grp = groups[gi]
 
         def _has_data(m: int) -> bool:
@@ -1626,6 +1770,16 @@ class CheckpointEngine:
                 continue
             ro = self.stores[m].buffer.read_only
             present[i] = ro.own_exch.get(name, ro.own[name])[0]
+
+        # Repair locality (DESIGN.md §16): ask the codec which surviving
+        # blobs its decode will actually solve through and drop the rest
+        # BEFORE leasing/transferring them — an LRC single-failure repair
+        # then moves one local parity, not the whole blob set. None = all.
+        needed = codec.blobs_needed(
+            sorted(present), sorted(stripe_srcs), missing_idx
+        )
+        if needed is not None:
+            stripe_srcs = {b: s for b, s in stripe_srcs.items() if b in needed}
 
         # Blob + output buffers live in the recovering host's staging-bank
         # arenas (never the read-only bank — the same generation-parity
@@ -1867,7 +2021,7 @@ class CheckpointEngine:
                         f"reconstructed shard failed checksum validation: "
                         f"rank {origin} entity {u.name!r} (group {u.gi})"
                     )
-            if self.codec.striped:
+            if self._restore_codec(u.name).striped:
                 self.stats.reconstructed_restores += 1
             else:
                 self.stats.adopted_restores += 1
@@ -1994,6 +2148,11 @@ class CheckpointEngine:
         # checkpointing immediately (trainer/server do).
         self.n_ranks = new_n_ranks
         self.stores = {r: HostStore(r) for r in range(new_n_ranks)}
+        if self.topology is not None:
+            # The failure-domain map resizes with the world (regular shapes
+            # re-derive; _groups re-packs for the new rank space on next use).
+            self.topology = self.topology.resized(new_n_ranks)
+            self._groups_cache = None
         self.last_elastic_report = report
         self.stats.restored += 1
         self.stats.last_restore_s = time.perf_counter() - t0
@@ -2020,7 +2179,7 @@ class CheckpointEngine:
         if origin in alive and self.stores[origin].buffer.valid:
             return origin
         groups = self._groups()
-        gi = dist.group_of(origin, self.codec.group_size(self.n_ranks))
+        gi = self._group_of(origin)
         return self.codec.rebuilder(groups, gi, origin, alive)
 
     def _stored_coords(self, name: str):
@@ -2062,9 +2221,9 @@ class CheckpointEngine:
         # redundancy blobs and ask the codec to decode the missing ones.
         # Full-copy codecs take the same path — singleton group, present={},
         # decode adopts any surviving whole-copy blob (communication!).
-        codec = self.codec
+        codec = self._restore_codec(name)
         groups = self._groups()
-        gi = dist.group_of(origin, codec.group_size(self.n_ranks))
+        gi = self._group_of(origin)
         grp = groups[gi]
 
         def _has_data(m: int) -> bool:
@@ -2081,7 +2240,7 @@ class CheckpointEngine:
                     f"group {gi} lost {len(missing_idx)} members; "
                     f"codec {codec.name!r} tolerates {codec.tolerance()}"
                 )
-            blobs: dict[int, np.ndarray] = {}
+            stripe_sets: dict[int, list[np.ndarray]] = {}
             for b, holders in enumerate(codec.placement(groups, gi, self.n_ranks)):
                 stripes: list[np.ndarray] | None = []
                 for j, member in enumerate(holders):
@@ -2095,13 +2254,24 @@ class CheckpointEngine:
                         break
                     stripes.append(stripe)
                 if stripes is not None:
-                    # Single-stripe blobs (whole copies) adopt by reference —
-                    # no memcpy, mirroring the distribute path.
-                    blobs[b] = (
-                        stripes[0]
-                        if len(stripes) == 1
-                        else parity_mod.join_stripes(stripes)
-                    )
+                    stripe_sets[b] = stripes
+            # Repair locality (DESIGN.md §16): join only the blobs the
+            # codec's row selection will read (None = all survive the cut).
+            needed = codec.blobs_needed(
+                [i for i in range(len(grp.members)) if i not in missing_idx],
+                sorted(stripe_sets),
+                missing_idx,
+            )
+            if needed is not None:
+                stripe_sets = {
+                    b: s for b, s in stripe_sets.items() if b in needed
+                }
+            # Single-stripe blobs (whole copies) adopt by reference —
+            # no memcpy, mirroring the distribute path.
+            blobs: dict[int, np.ndarray] = {
+                b: (s[0] if len(s) == 1 else parity_mod.join_stripes(s))
+                for b, s in stripe_sets.items()
+            }
             present: dict[int, np.ndarray] = {}
             for i, m in enumerate(grp.members):
                 if i in missing_idx:
@@ -2160,8 +2330,13 @@ class CheckpointEngine:
             },
             "exchange_bytes": sum(k["exchange"] for k in by_kind.values()),
             # Redundancy bytes per data byte the codec promises (copies: R;
-            # xor: 1/g; rs: m/g) — compare against the measured split above.
+            # xor: 1/g; rs: m/g; lrc: (l+g)/g) — compare against the
+            # measured split above.
             "redundancy_overhead": self.codec.memory_overhead(group, self.n_ranks),
+            "topology": repr(self.topology) if self.topology is not None else None,
+            "entity_codecs": {
+                n: self._codec_spec(c) for n, c in sorted(self.entity_codecs.items())
+            },
         }
 
 

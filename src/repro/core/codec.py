@@ -29,6 +29,13 @@ Provided codecs:
     Tolerates **any m concurrent losses per group** while the holder
     groups are intact — the multi-failure gap Agullo et al.
     (arXiv:2010.13342) flag for exascale failure rates.
+  * ``lrc``  — Azure-style local reconstruction code (Huang et al., ATC'12):
+    l local XOR parities over subgroups of k_local = ceil(k/l) members plus
+    g global Cauchy parities over the whole group. Guaranteed tolerance g
+    (any e <= g losses solve through the globals), but the COMMON repair —
+    one lost member — reads only its local subgroup (k_local sources + one
+    local parity) instead of the whole group, the repair-locality win that
+    makes single-failure recovery cheap at rack scale (DESIGN.md §16).
 
 Group-local shard indices are used throughout ``encode``/``decode``; the
 engine maps them to ranks via the group list from ``core.distribution``.
@@ -158,6 +165,14 @@ class RedundancyCodec:
         to the eager allocating path."""
         return type(self).decode is not base.decode
 
+    def blobs_needed(
+        self, present_idx: list[int], blob_idx: list[int], missing: list[int]
+    ) -> set[int] | None:
+        """Blob indices the decode will actually read, or None for "all of
+        them" (the engine then transfers every surviving blob, the pre-§16
+        behavior). Group codecs narrow this via their row selection."""
+        return None
+
     def rebuilder(
         self, groups: list[dist.ParityGroup], gi: int, origin: int, alive: set[int]
     ) -> int | None:
@@ -277,11 +292,36 @@ class GroupCodecBase(RedundancyCodec):
         shared by ``erasure_decode_matrix`` precomputation on both tiers."""
         raise NotImplementedError
 
+    def _decode_rows(
+        self, blob_idx: list[int], missing: list[int], present_idx: list[int]
+    ) -> list[int]:
+        """Which surviving blob rows the decode solves through. Default: the
+        first ``len(missing)`` survivors (any e rows of an MDS generator
+        invert). LRC overrides this with read-cost-ordered row selection —
+        it is the single source of repair locality, shared by the decode
+        itself, the engine's blob-TRANSFER skip (``blobs_needed``), and the
+        device restore program's row precompute."""
+        return blob_idx[: len(missing)]
+
+    def blobs_needed(
+        self, present_idx: list[int], blob_idx: list[int], missing: list[int]
+    ) -> set[int] | None:
+        """Blob indices the decode will actually read — the engine skips the
+        TRANSFER of every other blob's stripes (repair locality in bytes
+        moved, not just bytes XORed). Falls back to "all" when no row set
+        solves the losses, so the decode path raises the real error."""
+        if not missing:
+            return set()
+        try:
+            return set(self._decode_rows(sorted(blob_idx), missing, present_idx))
+        except CodecDecodeError:
+            return None
+
     def _matrix_decode_into(self, present, blobs, missing, lease):
         """Chunked decode through the precomputed erasure-solve matrix
         (gf256.erasure_decode_matrix): the e×e Gaussian elimination happens
         ONCE on the tiny coefficient submatrix, then every byte range is a
-        plain coefficient matmul over [survivors ‖ intact blobs] — chunkable
+        plain coefficient matmul over [survivors ‖ chosen blobs] — chunkable
         for the restore pipeline, accumulating into leased arenas, and
         bit-identical to the syndromes+solve ``decode`` (the GF solution is
         unique)."""
@@ -290,22 +330,33 @@ class GroupCodecBase(RedundancyCodec):
             return {}, (lambda lo, hi: None)
         k = self.group
         coef = self._generator()
-        rows = sorted(blobs)[:e]
+        rows = self._decode_rows(sorted(blobs), missing, sorted(present))
         n = max(b.nbytes for b in blobs.values())
         present_idx = sorted(present)
         D = gf256.erasure_decode_matrix(k, coef, present_idx, rows, missing)
-        # Fixed coefficients -> one (e, k_present+|rows|) matrix product per
+        # Survivors whose solve coefficient is zero for EVERY target are never
+        # touched — adding 0·src is a GF no-op, so eliding them is
+        # bit-identical and turns LRC's local-row selection into real read
+        # locality (a local repair reads its subgroup, not the whole group).
+        src_idx = [
+            s for s in present_idx if any(int(D[t, s]) for t in range(e))
+        ]
+        # Fixed coefficients -> one (e, |src_idx|+|rows|) matrix product per
         # byte range through gf256's pluggable backend (SWAR / jax-CPU / table,
         # DESIGN.md §14).  Ragged survivors contribute their prefix only — the
         # backend treats bytes past a short source as zero, a GF no-op.
-        srcs = [present[s].reshape(-1) for s in present_idx] + [
+        srcs = [present[s].reshape(-1) for s in src_idx] + [
             blobs[j].reshape(-1) for j in rows
         ]
         mat = tuple(
-            tuple(int(D[t, s]) for s in present_idx)
+            tuple(int(D[t, s]) for s in src_idx)
             + tuple(int(D[t, k + j]) for j in rows)
             for t in range(e)
         )
+        # Repair-read accounting for the bench smoke gate (padded-size units:
+        # every read source costs one shard-length scan).
+        self.last_decode_reads = len(srcs)
+        self.last_decode_read_bytes = len(srcs) * n
         out = {i: lease(i, n) for i in missing}
         dsts = [out[i] for i in missing]
 
@@ -433,6 +484,145 @@ class RSCodec(GroupCodecBase):
         return self._matrix_decode_into(present, blobs, missing, lease)
 
 
+def lrc_generator(group: int, local: int, global_parity: int) -> np.ndarray:
+    """The Azure-LRC generator matrix shared by :class:`LRCCodec` and the
+    device tier's fused encode/restore programs (both must produce
+    bit-identical blobs): ``local`` 0/1 indicator rows over contiguous
+    subgroups of ``ceil(group/local)`` columns, stacked over
+    ``global_parity`` Cauchy rows spanning all columns."""
+    local = min(local, group)
+    k_local = -(-group // local)
+    gen = np.zeros((local + global_parity, group), np.uint8)
+    for j in range(local):
+        gen[j, j * k_local : min((j + 1) * k_local, group)] = 1
+    gen[local:] = gf256.cauchy_matrix(global_parity, group)
+    return gen
+
+
+class LRCCodec(GroupCodecBase):
+    """Azure-style local reconstruction code (DESIGN.md §16).
+
+    Generator rows, top to bottom, over a group of k:
+
+      * rows 0..l-1  — local XOR parities: row j is the 0/1 indicator of
+        subgroup j's columns [j·k_local, min((j+1)·k_local, k)),
+        k_local = ceil(k/l);
+      * rows l..l+g-1 — global Cauchy parities over all k columns (the same
+        construction as ``rs``, so any e <= g square submatrix inverts).
+
+    Guaranteed tolerance is g — the globals alone cover any e <= g losses —
+    while the row-selection hook makes the common single-failure repair
+    solve through ONE local parity and read only k_local sources instead of
+    k. Beyond-tolerance spread failures (up to l+g, at most one per
+    subgroup plus globals) still decode opportunistically when an invertible
+    row combination survives; the engine's plan never schedules them, but
+    direct codec users get the extra reach for free.
+    """
+
+    name = "lrc"
+
+    def __init__(self, group: int, local: int = 2, global_parity: int = 2) -> None:
+        super().__init__(group)
+        assert local >= 1 and global_parity >= 1, (local, global_parity)
+        assert group + global_parity <= 255, (group, global_parity)
+        self.local = min(local, group)  # l > k would mint empty subgroups
+        self.global_parity = global_parity
+        self.k_local = -(-group // self.local)
+        self.coef = lrc_generator(group, self.local, global_parity)
+
+    def n_blobs(self, group_size: int) -> int:
+        return self.local + self.global_parity
+
+    def tolerance(self) -> int:
+        return self.global_parity
+
+    def memory_overhead(self, group_size, n_ranks):
+        # Ragged groups shed subgroups too: a short group's local rows past
+        # its member count are all-zero (rs_encode slices coef[:, :k']), so
+        # the stored overhead stays (l' + g)/k' with l' = ceil(k'/k_local).
+        k = max(min(group_size, self.group), 1)
+        l_eff = -(-k // self.k_local)
+        return (l_eff + self.global_parity) / k
+
+    def encode(self, bufs, n_out):
+        assert n_out == self.n_blobs(len(bufs))
+        return gf256.rs_encode(bufs, n_out, self.coef)
+
+    def encode_into(self, bufs, n_out, lease):
+        if type(self).encode is not LRCCodec.encode:
+            # Subclass with a custom encode: honor it (allocating path).
+            return self.encode(bufs, n_out)
+        assert n_out == self.n_blobs(len(bufs))
+        n = gf256.padded_len(bufs)
+        out = [lease(b, n) for b in range(n_out)]
+        return gf256.rs_encode(bufs, n_out, self.coef, out=out)
+
+    def _generator(self):
+        return self.coef
+
+    def _row_support(self, j: int) -> set[int]:
+        return {int(s) for s in np.nonzero(self.coef[j])[0]}
+
+    def _decode_rows(self, blob_idx, missing, present_idx):
+        """Cheapest invertible row combination: candidates of size e ordered
+        by repair-read cost (how many surviving sources the union of their
+        supports touches; local rows have k_local-wide supports, globals
+        k-wide), first one whose e×e coefficient submatrix inverts in
+        GF(2^8) wins. e <= l+g keeps the search trivially small
+        (C(l+g, e) combinations, each an e×e inversion)."""
+        from itertools import combinations
+
+        e = len(missing)
+        mset = set(missing)
+        pset = set(present_idx)
+        scored = sorted(
+            (
+                (len(set().union(*(self._row_support(j) for j in rows)) & pset), rows)
+                for rows in combinations(sorted(blob_idx), e)
+            ),
+            key=lambda cr: (cr[0], cr[1]),
+        )
+        for _cost, rows in scored:
+            sub = self.coef[np.ix_(list(rows), list(missing))]
+            try:
+                gf256.gf_matrix_inverse(sub)
+            except ValueError:
+                continue
+            return list(rows)
+        raise CodecDecodeError(
+            f"lrc(k={self.group},l={self.local},g={self.global_parity}): no "
+            f"invertible row set among surviving blobs {sorted(blob_idx)} "
+            f"for losses {sorted(missing)}"
+        )
+
+    def decode(self, present, blobs, missing):
+        if not missing:
+            return {}
+        if len(blobs) < len(missing):
+            raise CodecDecodeError(
+                f"need {len(missing)} redundancy blobs to rebuild "
+                f"{len(missing)} shards, only {len(blobs)} survive"
+            )
+        out, chunk = self._matrix_decode_into(
+            present, blobs, missing, lambda i, n: np.zeros(n, np.uint8)
+        )
+        chunk(0, max(b.nbytes for b in blobs.values()))
+        return out
+
+    def decode_chunked(self):
+        return not self._decode_overridden(LRCCodec)
+
+    def decode_into(self, present, blobs, missing, lease):
+        if self._decode_overridden(LRCCodec):
+            return super().decode_into(present, blobs, missing, lease)
+        if missing and len(blobs) < len(missing):
+            raise CodecDecodeError(
+                f"need {len(missing)} redundancy blobs to rebuild "
+                f"{len(missing)} shards, only {len(blobs)} survive"
+            )
+        return self._matrix_decode_into(present, blobs, missing, lease)
+
+
 # ---------------------------------------------------------------------------
 # registry (user-extensible, mirrors distribution.register_scheme)
 # ---------------------------------------------------------------------------
@@ -477,6 +667,14 @@ register_codec("xor", lambda cfg: XorCodec(_require_group(cfg, "xor")))
 register_codec(
     "rs", lambda cfg: RSCodec(_require_group(cfg, "rs"), getattr(cfg, "rs_parity", 2))
 )
+register_codec(
+    "lrc",
+    lambda cfg: LRCCodec(
+        _require_group(cfg, "lrc"),
+        getattr(cfg, "lrc_locals", 2),
+        getattr(cfg, "rs_parity", 2),
+    ),
+)
 
 
 # ---------------------------------------------------------------------------
@@ -484,7 +682,10 @@ register_codec(
 # ---------------------------------------------------------------------------
 
 def codec_recovery_plan(
-    n_prev: int, failed: set[int], codec: RedundancyCodec
+    n_prev: int,
+    failed: set[int],
+    codec: RedundancyCodec,
+    groups: list[dist.ParityGroup] | None = None,
 ) -> dict[int, int]:
     """origin_prev_rank -> new dense rank that restores its blocks, for any
     codec. Raises distribution.DataLostError when the failure set exceeds a
@@ -495,16 +696,22 @@ def codec_recovery_plan(
     so include such ranks in ``failed`` when planning against a partially
     revived world — with that, ``parity_recovery_plan`` (XOR) and the
     engine agree, all dispatching through the same codec calls.
+
+    ``groups`` overrides the default contiguous partition — the engine
+    passes its (possibly domain-aware, non-contiguous) group layout so the
+    plan and the data agree on who protects whom.
     """
     reassign = dist.shrink_reassignment(n_prev, failed)
     alive = {r for r in range(n_prev) if r not in failed}
-    groups = dist.parity_groups(n_prev, codec.group_size(n_prev))
+    if groups is None:
+        groups = dist.parity_groups(n_prev, codec.group_size(n_prev))
+    gi_of = dist.rank_group_map(groups)
     plan: dict[int, int] = {}
     for origin in range(n_prev):
         if origin not in failed:
             plan[origin] = reassign[origin]
             continue
-        gi = dist.group_of(origin, codec.group_size(n_prev))
+        gi = gi_of[origin]
         grp = groups[gi]
         missing = [m for m in grp.members if m in failed]
         if len(missing) > codec.tolerance():

@@ -19,14 +19,21 @@ host DMA**:
 
   * ``codec="copy"``  — the fused buffer ppermutes to the scheme partner
                         (Algorithm 1); the whole partner copy crosses PCIe.
-  * ``codec="xor"/"rs"`` — a ring of ``g-1`` ppermutes collects the parity
-                        group's buffers, the Pallas XOR / GF(2^8) kernel
-                        (kernels/xor_parity.py, kernels/rs_encode.py) encodes
-                        the m parity blobs on device, blob *b* routes to
-                        neighbor group ``gi+1+b`` (mirroring the host codec's
-                        placement), and each holder keeps only its 1/g
-                        stripe — so only **own shard + m/g parity stripes**
-                        cross PCIe instead of whole partner copies.
+  * ``codec="xor"/"rs"/"lrc"`` — a ring of ``g-1`` ppermutes collects the
+                        parity group's buffers, the Pallas XOR / GF(2^8)
+                        kernel (kernels/xor_parity.py, kernels/rs_encode.py)
+                        encodes the parity blobs on device (for ``lrc`` the
+                        generator is the shared ``codec.lrc_generator`` —
+                        local XOR rows + global Cauchy rows, bit-identical
+                        to the host codec), blob *b* routes to neighbor
+                        group ``gi+1+b`` (mirroring the host codec's
+                        placement), and each holder keeps only its stripe —
+                        so only **own shard + parity stripes** cross PCIe
+                        instead of whole partner copies. On ragged worlds
+                        (``g ∤ axis``) the short group's members each hold
+                        ``ceil(g/k')`` round-robin stripes instead of one —
+                        the true ragged stripe layout (DESIGN.md §16) that
+                        replaced the old whole-blob fallback.
 
 Only *uniquely-owned* leaves are exchanged: a leaf whose PartitionSpec uses
 the redundancy axis has exactly one owner per shard (ZeRO-1 optimizer state,
@@ -76,10 +83,6 @@ def _traced(phase: str):
                 return fn(*args, **kwargs)
         return wrapper
     return deco
-
-#: (axis, size, g) combos already warned about taking the full-blob fallback
-_RAGGED_WARNED: set[tuple[str, int, int]] = set()
-
 
 def _full_rank(pspec: P, ndim: int) -> tuple:
     entries = list(pspec) + [None] * (ndim - len(pspec))
@@ -207,21 +210,25 @@ def build_snapshot_program(
     include_own_copy: bool = True,
     compress: bool = False,
     validate: bool = True,
-    codec: str = "copy",       # "copy" | "xor" | "rs": on-device redundancy
+    codec: str = "copy",       # "copy" | "xor" | "rs" | "lrc": on-device redundancy
     parity_group: int = 0,     # group size g (k) for the striped codecs
-    rs_parity: int = 2,        # m parity blobs per group for codec="rs"
-    # Whole blobs on every group member instead of routed 1/g stripes. The
-    # stripe path needs parity_group to divide every bucket's failure axis;
-    # None (default) auto-falls back to full blobs on such ragged worlds
-    # (logged once per (axis, size, g)); False raises on them.
+    rs_parity: int = 2,        # m parity blobs (global parities for "lrc")
+    lrc_locals: int = 2,       # local XOR rows for codec="lrc"
+    # Whole blobs on every group member instead of routed stripes (an
+    # explicit opt-in: more PCIe, no routing hop). None/False take the
+    # stripe path, which handles ragged worlds (g ∤ axis) natively via the
+    # round-robin ragged stripe layout.
     emit_full_blobs: bool | None = None,
 ) -> SnapshotProgram:
     fail_axes = (redundancy_axis,) if redundancy_axis != "data" else ("data", "pod")
-    striped = codec in ("xor", "rs")
+    striped = codec in ("xor", "rs", "lrc")
     if striped:
         assert parity_group >= 1, "striped codecs need parity_group (the group size)"
         assert not compress, "compress applies to the full-copy codec only"
-    n_parity = {"copy": 0, "xor": 1, "rs": rs_parity}[codec]
+    n_parity = {
+        "copy": 0, "xor": 1, "rs": rs_parity,
+        "lrc": min(lrc_locals, max(parity_group, 1)) + rs_parity,
+    }[codec]
 
     leaves_sds, treedef = jax.tree.flatten(state_sds)
     leaves_ps = treedef.flatten_up_to(state_pspecs)
@@ -277,38 +284,20 @@ def build_snapshot_program(
             )
         )
 
-    # -- ragged worlds: stripe placement needs g | axis size ------------------
-    if striped:
-        ragged = [
-            (b.axis, mesh.shape[b.axis])
-            for b in buckets
-            if mesh.shape[b.axis] % parity_group
-        ]
-        if emit_full_blobs is None:
-            emit_full_blobs = bool(ragged)
-            for axis, size in ragged:
-                key = (axis, size, parity_group)
-                if key not in _RAGGED_WARNED:
-                    _RAGGED_WARNED.add(key)
-                    log.warning(
-                        "parity_group %d does not divide axis %r (%d): the "
-                        "snapshot program falls back to emit_full_blobs — "
-                        "every group member keeps whole parity blobs, so "
-                        "%dx more parity bytes cross PCIe than the stripe "
-                        "path would move",
-                        parity_group, axis, size, parity_group,
-                    )
-        elif not emit_full_blobs and ragged:
-            axis, size = ragged[0]
-            raise ValueError(
-                f"on-device stripe placement needs parity_group "
-                f"({parity_group}) to divide axis {axis!r} ({size}); pass "
-                f"emit_full_blobs=True (or leave it None to auto-fall back) "
-                f"to emit whole parity blobs on ragged worlds, or use the "
-                f"host-tier codec path"
-            )
-    else:
-        emit_full_blobs = bool(emit_full_blobs)
+    emit_full_blobs = bool(emit_full_blobs)
+
+    # -- ragged stripe layout (DESIGN.md §16) ---------------------------------
+    # Stripes have uniform width sw = words/g (bucket words are padded to a
+    # multiple of g). A holder group of k_h members hosts the g stripes of
+    # each blob it holds round-robin: member p keeps stripes {s : s ≡ p
+    # (mod k_h)}, i.e. up to S = ceil(g/k_min) slots each. Divisible worlds
+    # have k_h = g everywhere, S = 1, and collapse to the legacy one-stripe
+    # layout bit-for-bit.
+    def _stripe_slots(axis: str) -> int:
+        if not striped:
+            return 1
+        groups = dist.parity_groups(mesh.shape[axis], parity_group)
+        return max(-(-parity_group // len(grp.members)) for grp in groups)
 
     def _bucket_global_bytes(b: FusedBucket) -> int:
         k = 1
@@ -322,13 +311,25 @@ def build_snapshot_program(
     )
     fused_bytes = sum(_bucket_global_bytes(b) for b in buckets)
     if striped:
-        # ring collection (g-1 hops) + blob routing (m hops, stripe path
-        # only — full blobs stay where they were encoded), all fused-width
-        route_hops = 0 if emit_full_blobs else n_parity
-        exchanged_bytes = (parity_group - 1 + route_hops) * fused_bytes
-        pcie_payload = n_parity * fused_bytes
-        if not emit_full_blobs:  # holders keep 1/g stripes, not whole blobs
-            pcie_payload //= max(parity_group, 1)
+        # ring collection (g-1 hops) + blob routing (m hops × S multicast
+        # rounds, stripe path only — full blobs stay where they were
+        # encoded), all fused-width
+        exchanged_bytes = sum(
+            (
+                parity_group - 1
+                + (0 if emit_full_blobs else n_parity * _stripe_slots(b.axis))
+            )
+            * _bucket_global_bytes(b)
+            for b in buckets
+        )
+        if emit_full_blobs:
+            pcie_payload = n_parity * fused_bytes
+        else:  # holders keep S stripe slots of width words/g each
+            pcie_payload = sum(
+                n_parity * _bucket_global_bytes(b) * _stripe_slots(b.axis)
+                // max(parity_group, 1)
+                for b in buckets
+            )
     else:
         exchanged_bytes = fused_bytes
         pcie_payload = fused_bytes if not compress else fused_bytes // 4
@@ -350,21 +351,26 @@ def build_snapshot_program(
                 pairs.append((grp.members[(q + 1) % k], m))
         return pairs
 
-    def _route_pairs(axis: str, g: int, b: int) -> list[tuple[int, int]]:
-        """Send group gi's blob b to its holder group (the shared
-        distribution.blob_holder_group rule — the device mirror of
-        GroupCodecBase.placement). Ragged positions with no counterpart in
-        the holder group drop out of the permutation (their stripe share is
-        unhosted; the stripe path requires g | size)."""
+    def _route_pairs(axis: str, g: int, b: int, rnd: int) -> list[tuple[int, int]]:
+        """Round ``rnd`` of sending group gi's blob b to its holder group
+        (the shared distribution.blob_holder_group rule — the device mirror
+        of GroupCodecBase.placement). Every holder member must receive the
+        full blob, but ppermute sources must be unique, so a short origin
+        group reaches a larger holder group in ceil(k_h/k_o) rounds: round
+        rnd covers holder positions p = rnd·k_o + i (so receiver p selects
+        round p // k_o). Divisible worlds need exactly one round — the
+        legacy single hop."""
         size = mesh.shape[axis]
         groups = dist.parity_groups(size, g)
         ng = len(groups)
         pairs = []
         for gi, grp in enumerate(groups):
             holder = groups[dist.blob_holder_group(ng, gi, b)]
-            for q, m in enumerate(grp.members):
-                if q < len(holder.members):
-                    pairs.append((m, holder.members[q]))
+            k_o = len(grp.members)
+            for i in range(k_o):
+                p = rnd * k_o + i
+                if p < len(holder.members):
+                    pairs.append((grp.members[i], holder.members[p]))
         return pairs
 
     # -- the ONE fused program ------------------------------------------------
@@ -435,26 +441,63 @@ def build_snapshot_program(
                 canonical = jnp.where(
                     (jnp.arange(g) < k_local)[:, None], canonical, jnp.uint32(0)
                 )
-                # Pallas encode: XOR chain or GF(2^8) Cauchy matmul
+                # Pallas encode: XOR chain or GF(2^8) matmul. The zero rows
+                # past a ragged group's k_local make the full-width generator
+                # bit-identical to the host's coef[:, :k'] slice (0·x = 0).
                 if codec == "xor":
                     blobs = kops.xor_reduce(canonical)[None, :]  # (1, words)
                 else:
-                    from repro.core import gf256
+                    if codec == "lrc":
+                        from repro.core.codec import lrc_generator
 
-                    coefs = tuple(
-                        tuple(int(c) for c in row)
-                        for row in gf256.cauchy_matrix(rs_parity, g)
-                    )
+                        gen = lrc_generator(g, lrc_locals, rs_parity)
+                    else:
+                        from repro.core import gf256
+
+                        gen = gf256.cauchy_matrix(rs_parity, g)
+                    coefs = tuple(tuple(int(c) for c in row) for row in gen)
                     blobs = kops.gf256_matmul(canonical, coefs)  # (m, words)
                 if emit_full_blobs:
                     out.setdefault("parity_full", {})[bucket.tag] = blobs
                     continue
-                # route blob b to its holder group, keep this rank's 1/g stripe
+                # Route each blob to its holder group; every holder member
+                # receives the whole blob (in ceil(k_h/k_o) unique-source
+                # permute rounds — see _route_pairs) and keeps its
+                # round-robin stripe slots s = pos + j·k_mine (j < S),
+                # masked past g. Divisible worlds: one round, S = 1,
+                # s = pos — the legacy single stripe.
                 sw = bucket.words // g
+                n_slots = _stripe_slots(axis)
+                ng = -(-size // g)
                 stripes = []
                 for b in range(n_parity):
-                    routed = jax.lax.ppermute(blobs[b], axis, _route_pairs(axis, g, b))
-                    stripes.append(jax.lax.dynamic_slice(routed, (pos * sw,), (sw,)))
+                    rounds = []
+                    for rnd in range(n_slots):
+                        pr = _route_pairs(axis, g, b, rnd)
+                        rounds.append(
+                            jax.lax.ppermute(blobs[b], axis, pr)
+                            if pr else jnp.zeros_like(blobs[b])
+                        )
+                    # my ORIGIN group (whose blob I hold) sets my round —
+                    # the inverse of blob_holder_group's skip-self shift
+                    # c = b mod (ng-1): holder h = o + 1 + c (mod ng)
+                    o = (gi - 1 - b % max(ng - 1, 1)) % ng
+                    k_o = jnp.maximum(
+                        jnp.where(o < n_full_groups, g, size - n_full_groups * g), 1
+                    )
+                    routed = jax.lax.dynamic_slice(
+                        jnp.stack(rounds),
+                        (jnp.minimum(pos // k_o, n_slots - 1), 0),
+                        (1, bucket.words),
+                    )[0]
+                    slots_out = []
+                    for j in range(n_slots):
+                        s = pos + j * k_local
+                        piece = jax.lax.dynamic_slice(
+                            routed, (jnp.minimum(s, g - 1) * sw,), (sw,)
+                        )
+                        slots_out.append(jnp.where(s < g, piece, jnp.uint32(0)))
+                    stripes.append(jnp.concatenate(slots_out))
                 out.setdefault("parity", {})[bucket.tag] = jnp.stack(stripes)
             if with_checksum:
                 out["checksum"] = checksum_acc
@@ -761,6 +804,8 @@ class StripedRestoreProgram:
     parity_group: int
     rs_parity: int
     axes: tuple[str, ...]      # failure axes needing decode_rows/mask entries
+    n_parity: int              # stripe rows per device (codec blobs)
+    stripe_words: tuple[tuple[str, int], ...]  # tag -> per-device stripe words
 
 
 def striped_decode_rows(
@@ -769,6 +814,7 @@ def striped_decode_rows(
     codec: str,
     rs_parity: int,
     failed: set[int] | tuple[int, ...],
+    lrc_locals: int = 2,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Host precompute for the device restore program: per failure-axis
     coordinate, ONE decode row over the ``g + m`` canonical input slots
@@ -776,25 +822,43 @@ def striped_decode_rows(
 
     Survivors get their one-hot identity row (the program then passes their
     own fused buffer through); each failed coordinate gets its row of
-    ``gf256.erasure_decode_matrix`` — the e×e Cauchy-submatrix inversion
-    folded with the generator, computed here by Gaussian elimination once
-    per failure group. Returns ``(rows (size, g+m) uint32, mask (size,)
-    uint32)``; raises ``ValueError`` when the failure set exceeds the
-    codec's tolerance or destroys the blobs needed to cover it (mirroring
-    ``codec_recovery_plan``).
+    ``gf256.erasure_decode_matrix`` — the e×e submatrix inversion folded
+    with the generator, computed here by Gaussian elimination once per
+    failure group. For ``codec="lrc"`` the generator is the shared
+    Azure-LRC construction and row selection runs the codec's own
+    cheapest-invertible-combination search, so a single failure solves
+    through ONE local parity row (the zero data coefficients then cost
+    nothing on device — 0·x byte passes). Ragged worlds are first-class:
+    the short last group simply contributes fewer present columns, exactly
+    like the host codec's ``coef[:, :k']`` slice.
+
+    Returns ``(rows (size, g+m) uint32, mask (ng·g,) uint32)`` — the mask is
+    padded to whole groups (zeros past ``axis_size``) so the device program
+    can slice per-group windows; raises ``ValueError`` when the failure set
+    exceeds the codec's tolerance or destroys the blobs needed to cover it
+    (mirroring ``codec_recovery_plan``).
     """
     from repro.core import gf256
 
-    assert codec in ("xor", "rs"), codec
+    assert codec in ("xor", "rs", "lrc"), codec
     g = parity_group
-    m = 1 if codec == "xor" else rs_parity
-    assert axis_size % g == 0, (axis_size, g)
-    coef = np.ones((1, g), np.uint8) if codec == "xor" else gf256.cauchy_matrix(m, g)
+    helper = None
+    if codec == "xor":
+        coef = np.ones((1, g), np.uint8)
+    elif codec == "rs":
+        coef = gf256.cauchy_matrix(rs_parity, g)
+    else:
+        from repro.core import codec as codec_mod
+
+        helper = codec_mod.LRCCodec(g, lrc_locals, rs_parity)
+        coef = helper.coef
+    m = coef.shape[0]
     failed = set(failed)
     groups = dist.parity_groups(axis_size, g)
     ng = len(groups)
     rows = np.zeros((axis_size, g + m), np.uint8)
-    mask = np.ones(axis_size, np.uint32)
+    mask = np.zeros(ng * g, np.uint32)
+    mask[:axis_size] = 1
     for r in failed:
         mask[r] = 0
     for gi, grp in enumerate(groups):
@@ -804,10 +868,11 @@ def striped_decode_rows(
             rows[grp.members[q], q] = 1
         if not missing:
             continue
-        if len(missing) > m:
+        tolerance = rs_parity if codec == "lrc" else m
+        if codec != "lrc" and len(missing) > tolerance:
             raise ValueError(
                 f"group {gi} lost {len(missing)} members; "
-                f"codec {codec!r} tolerates {m}"
+                f"codec {codec!r} tolerates {tolerance}"
             )
         # A blob is usable iff every holder of its stripes survives.
         usable = [
@@ -817,14 +882,21 @@ def striped_decode_rows(
                 for h in groups[dist.blob_holder_group(ng, gi, b)].members
             )
         ]
-        if len(usable) < len(missing):
-            raise ValueError(
-                f"group {gi}: {len(missing)} losses but only {len(usable)} "
-                f"intact redundancy blobs (codec {codec!r})"
-            )
-        D = gf256.erasure_decode_matrix(
-            g, coef, present, usable[: len(missing)], missing
-        )
+        if codec == "lrc":
+            from repro.core import codec as codec_mod
+
+            try:
+                sel = helper._decode_rows(sorted(usable), missing, present)
+            except codec_mod.CodecDecodeError as exc:
+                raise ValueError(str(exc)) from exc
+        else:
+            if len(usable) < len(missing):
+                raise ValueError(
+                    f"group {gi}: {len(missing)} losses but only "
+                    f"{len(usable)} intact redundancy blobs (codec {codec!r})"
+                )
+            sel = usable[: len(missing)]
+        D = gf256.erasure_decode_matrix(g, coef, present, sel, missing)
         for t, q in enumerate(missing):
             rows[grp.members[q]] = D[t]
     return rows.astype(np.uint32), mask
@@ -840,25 +912,29 @@ def build_striped_restore_program(
     codec: str = "xor",
     parity_group: int = 1,
     rs_parity: int = 2,
+    lrc_locals: int = 2,
 ) -> StripedRestoreProgram:
-    """The fused inverse of the striped snapshot program (DESIGN.md §10).
+    """The fused inverse of the striped snapshot program (DESIGN.md §10/§16).
 
     Survivors H2D-upload their own shards and the parity stripes they hold;
-    everything else happens on device inside ONE ``shard_map``: stripes
-    inverse-route back to their origin group, a ring pass reassembles each
-    blob, a second ring collects the group's (mask-zeroed) data buffers, and
-    every coordinate applies its runtime decode row with the GF(2^8) Pallas
+    everything else happens on device inside ONE ``shard_map``: a ring pass
+    inside each holder group reassembles every blob from its round-robin
+    stripes, one permute routes the blob home to its origin group, a second
+    ring collects the group's (mask-zeroed) data buffers, and every
+    coordinate applies its runtime decode row with the GF(2^8) Pallas
     kernels — so PCIe carries stripes instead of fully decoded partner
     copies and the reconstruction FLOPs move off the host. Bit-identical to
-    host ``codec.decode`` (the erasure solution is unique).
-
-    Constraints match the snapshot stripe path: ``parity_group`` must divide
-    every bucket's failure axis (ragged worlds snapshot via
-    ``emit_full_blobs`` and restore host-side).
+    host ``codec.decode`` (the erasure solution is unique). Ragged worlds
+    (g ∤ axis) and the LRC codec are first-class: the short group holds
+    extra stripe slots, and an LRC single-failure decode row has zero
+    coefficients outside its local subgroup.
     """
-    assert codec in ("xor", "rs"), codec
+    assert codec in ("xor", "rs", "lrc"), codec
     assert parity_group >= 1
-    n_parity = 1 if codec == "xor" else rs_parity
+    n_parity = {
+        "xor": 1, "rs": rs_parity,
+        "lrc": min(lrc_locals, parity_group) + rs_parity,
+    }[codec]
     g = parity_group
 
     # Same bucketing as the snapshot program (must agree exactly: the parity
@@ -867,7 +943,7 @@ def build_striped_restore_program(
         mesh, state_sds, state_pspecs,
         redundancy_axis=redundancy_axis, include_own_copy=False,
         validate=False, codec=codec, parity_group=parity_group,
-        rs_parity=rs_parity, emit_full_blobs=False,
+        rs_parity=rs_parity, lrc_locals=lrc_locals, emit_full_blobs=False,
     )
     buckets = snap.buckets
     leaves_sds, treedef = jax.tree.flatten(state_sds)
@@ -892,15 +968,28 @@ def build_striped_restore_program(
                 pairs.append((grp.members[(q + 1) % k], member))
         return pairs
 
-    def _route_pairs(axis: str, b: int) -> list[tuple[int, int]]:
+    def _home_pairs(axis: str, b: int, rnd: int) -> list[tuple[int, int]]:
+        """Round ``rnd`` of routing each origin group's reassembled blob b
+        home. Every origin member needs the blob, ppermute sources must be
+        unique, so a short holder group reaches a larger origin group in
+        ceil(k_o/k_h) rounds: round rnd covers origin positions
+        q = rnd·k_h + i (receiver q selects round q // k_h). Divisible
+        worlds: one round."""
         size = mesh.shape[axis]
         groups = dist.parity_groups(size, g)
         pairs = []
         for gi, grp in enumerate(groups):
             holder = groups[dist.blob_holder_group(len(groups), gi, b)]
-            for q, member in enumerate(grp.members):
-                pairs.append((member, holder.members[q]))
+            k_h = len(holder.members)
+            for i in range(k_h):
+                q = rnd * k_h + i
+                if q < len(grp.members):
+                    pairs.append((holder.members[i], grp.members[q]))
         return pairs
+
+    def _stripe_slots(axis: str) -> int:
+        groups = dist.parity_groups(mesh.shape[axis], g)
+        return max(-(-g // len(grp.members)) for grp in groups)
 
     def _restore_local(*flat_args):
         from repro.kernels import ops as kops
@@ -920,28 +1009,66 @@ def build_striped_restore_program(
             axis = bucket.axis
             rows_arr = rows_by_axis[axis]
             mask_arr = mask_by_axis[axis]
+            size = mesh.shape[axis]
+            n_full = size // g
             idx = jax.lax.axis_index(axis)
             gi = idx // g
             pos = idx % g
             sw = bucket.words // g
+            # This coordinate's own group size (the last group may be short).
+            k_mine = jnp.maximum(
+                jnp.where(gi < n_full, g, size - n_full * g), 1
+            )
+            ring = _ring_pairs(axis)
 
-            # -- reassemble this group's m blobs from the routed stripes ------
+            # -- reassemble the m blobs this group HOLDS, then route home -----
             blob_rows = []
             for b in range(n_parity):
-                # inverse route: holder member q sends stripe q back to
-                # origin-group member q
-                mine = jax.lax.ppermute(
-                    parity_local[b], axis, dist.inverse_perm(_route_pairs(axis, b))
-                )
+                # 1. ring-collect my (holder-)group's stripe buffers: slot t
+                #    holds member (pos+t) mod k_mine's round-robin stripes.
+                mine = parity_local[b]                      # (S·sw,)
                 slots = [mine]
                 cur = mine
-                ring = _ring_pairs(axis)
                 for _t in range(1, g):
                     cur = jax.lax.ppermute(cur, axis, ring)
                     slots.append(cur)
-                stacked = jnp.stack(slots)                 # (g, sw)
-                order = (jnp.arange(g) - pos) % g          # canonical stripe order
-                blob_rows.append(jnp.take(stacked, order, axis=0).reshape(-1))
+                stacked = jnp.stack(slots)                  # (g, S·sw)
+                order = (jnp.arange(g) - pos) % k_mine
+                canon = jnp.take(stacked, order, axis=0)    # row c = member c
+                # 2. splice the full blob: stripe s lives at member s mod
+                #    k_mine, slot s // k_mine (divisible worlds: member s,
+                #    slot 0 — the legacy layout).
+                pieces = []
+                for s in range(g):
+                    row = jax.lax.dynamic_slice(
+                        canon, (s % k_mine, (s // k_mine) * sw), (1, sw)
+                    )
+                    pieces.append(row[0])
+                full = jnp.concatenate(pieces)              # (words,)
+                # 3. route home (ceil(k_o/k_h) unique-source rounds): after
+                #    _home_pairs every coordinate holds blob b of its OWN
+                #    group; my blob-b HOLDER group's size sets my round.
+                n_slots = _stripe_slots(axis)
+                ng = -(-size // g)
+                rounds = []
+                for rnd in range(n_slots):
+                    pr = _home_pairs(axis, b, rnd)
+                    rounds.append(
+                        jax.lax.ppermute(full, axis, pr)
+                        if pr else jnp.zeros_like(full)
+                    )
+                # blob_holder_group's skip-self shift: h = gi + 1 + c (mod ng)
+                h = (gi + 1 + b % max(ng - 1, 1)) % ng
+                k_h = jnp.maximum(
+                    jnp.where(h < n_full, g, size - n_full * g), 1
+                )
+                blob_rows.append(
+                    jax.lax.dynamic_slice(
+                        jnp.stack(rounds),
+                        (jnp.minimum(pos // k_h, n_slots - 1), 0),
+                        (1, bucket.words),
+                    )[0]
+                )
 
             # -- ring-collect the group's (mask-zeroed) data buffers ----------
             parts = [_to_u32_local(by_leaf[i]) for i in bucket.leaf_idx]
@@ -951,13 +1078,15 @@ def build_striped_restore_program(
             buf = buf * jax.lax.dynamic_slice(mask_arr, (idx,), (1,))[0]
             slots = [buf]
             cur = buf
-            ring = _ring_pairs(axis)
             for _t in range(1, g):
                 cur = jax.lax.ppermute(cur, axis, ring)
                 slots.append(cur)
             stacked = jnp.stack(slots)
-            order = (jnp.arange(g) - pos) % g
+            order = (jnp.arange(g) - pos) % k_mine
             canonical = jnp.take(stacked, order, axis=0)   # (g, words)
+            canonical = jnp.where(
+                (jnp.arange(g) < k_mine)[:, None], canonical, jnp.uint32(0)
+            )
             group_mask = jax.lax.dynamic_slice(mask_arr, (gi * g,), (g,))
             canonical = canonical * group_mask[:, None]
 
@@ -983,6 +1112,29 @@ def build_striped_restore_program(
                 outs.append(leaf)
         return tuple(outs)
 
+    # One program, compiled once: decode_rows / survivor_mask are runtime
+    # inputs, so the same executable serves EVERY failure combination — the
+    # jit wrapper must therefore live at build time (a per-call shard_map
+    # would re-trace the whole program for each restore).
+    _in_specs = (
+        tuple(
+            P(*_full_rank(leaves_ps[i], len(leaves_sds[i].shape)))
+            for b in buckets for i in b.leaf_idx
+        )
+        + tuple(
+            P(None, b.axes) if b.axes else P(None, None) for b in buckets
+        )
+        + tuple(P(None) for _ in axes) * 2
+    )
+    _out_specs = tuple(
+        P(*_full_rank(leaves_ps[i], len(leaves_sds[i].shape)))
+        for b in buckets for i in b.leaf_idx
+    )
+    _restore_prog = jax.jit(shard_map(
+        _restore_local, mesh=mesh, in_specs=_in_specs, out_specs=_out_specs,
+        check_rep=False,
+    ))
+
     def restore_fn(state, parity, decode_rows, survivor_mask):
         """state: the (survivor) state pytree — failed coordinates' shards
         may hold garbage, the mask zeroes them before reconstruction.
@@ -992,24 +1144,7 @@ def build_striped_restore_program(
         Returns {leaf index -> reconstructed full leaf} like
         ``SnapshotProgram.restore_fn``."""
         leaves = treedef.flatten_up_to(state)
-        in_specs = (
-            tuple(
-                P(*_full_rank(leaves_ps[i], len(leaves_sds[i].shape)))
-                for b in buckets for i in b.leaf_idx
-            )
-            + tuple(
-                P(None, b.axes) if b.axes else P(None, None) for b in buckets
-            )
-            + tuple(P(None) for _ in axes) * 2
-        )
-        out_specs = tuple(
-            P(*_full_rank(leaves_ps[i], len(leaves_sds[i].shape)))
-            for b in buckets for i in b.leaf_idx
-        )
-        fn = shard_map(
-            _restore_local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_rep=False,
-        )
+        fn = _restore_prog
         args = []
         for b in buckets:
             for i in b.leaf_idx:
@@ -1041,7 +1176,18 @@ def build_striped_restore_program(
         b.words * 4 * int(np.prod([mesh.shape[a] for a in b.axes] or [1]))
         for b in buckets
     )
-    stripes_bytes = n_parity * fused // max(g, 1)
+    stripes_bytes = sum(
+        n_parity
+        * b.words * 4
+        * int(np.prod([mesh.shape[a] for a in b.axes] or [1]))
+        * _stripe_slots(b.axis)
+        // max(g, 1)
+        for b in buckets
+    )
+    stripe_words = tuple(
+        (b.tag, _stripe_slots(b.axis) * (b.words // max(g, 1)))
+        for b in buckets
+    )
     return StripedRestoreProgram(
         restore_fn=restore_fn,
         buckets=buckets,
@@ -1051,6 +1197,8 @@ def build_striped_restore_program(
         parity_group=parity_group,
         rs_parity=rs_parity,
         axes=axes,
+        n_parity=n_parity,
+        stripe_words=stripe_words,
     )
 
 

@@ -559,7 +559,11 @@ def solve_gf(A: np.ndarray, rhs: list[np.ndarray]) -> list[np.ndarray]:
     A = A.astype(np.uint8).copy()
     rhs = [r.copy() for r in rhs]
     for col in range(e):
-        piv = next(r for r in range(col, e) if A[r, col])
+        piv = next((r for r in range(col, e) if A[r, col]), -1)
+        if piv < 0:
+            # Singular: LRC row selection probes candidate row sets with
+            # gf_matrix_inverse and skips the non-invertible ones.
+            raise ValueError(f"singular GF(2^8) system (pivot column {col})")
         if piv != col:
             A[[col, piv]] = A[[piv, col]]
             rhs[col], rhs[piv] = rhs[piv], rhs[col]

@@ -557,8 +557,19 @@ class DiskTier(StorageTier):
             return True
         from repro.core import codec as codec_mod
 
+        # Domain-aware engines lay groups out non-contiguously: hand the plan
+        # the engine's layout whenever the flushed world matches (a mismatch
+        # goes through the elastic path, which replans at the new size).
+        groups = (
+            engine._groups()
+            if getattr(engine, "topology", None) is not None
+            and manifest["n_ranks"] == engine.n_ranks
+            else None
+        )
         try:
-            codec_mod.codec_recovery_plan(manifest["n_ranks"], missing, engine.codec)
+            codec_mod.codec_recovery_plan(
+                manifest["n_ranks"], missing, engine.codec, groups=groups
+            )
             return True
         except dist.DataLostError:
             return False
@@ -741,9 +752,7 @@ def _migrate_legacy_layout(
       their manifests replicated into meta so codec decode can unpack the
       bytes.
     """
-    groups = dist.parity_groups(
-        engine.n_ranks, engine.codec.group_size(engine.n_ranks)
-    )
+    groups = engine._groups()
     placements = {
         gi: engine.codec.placement(groups, gi, engine.n_ranks)
         for gi in range(len(groups))

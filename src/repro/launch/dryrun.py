@@ -259,7 +259,7 @@ def run_restore_cell(
         mesh, state_sds, pspecs, redundancy_axis="data",
         codec=codec, parity_group=parity_group, rs_parity=rs_parity,
     )
-    n_parity = 1 if codec == "xor" else rs_parity
+    n_parity = prog.n_parity
     rec: dict[str, Any] = {
         "arch": arch,
         "shape": f"restore_{codec}{parity_group}",
@@ -287,9 +287,10 @@ def run_restore_cell(
             k *= mesh.shape[a]
         return k
 
+    stripe_words = dict(prog.stripe_words)
     parity_sds = {
         b.tag: jax.ShapeDtypeStruct(
-            (n_parity, (b.words // parity_group) * _axes_prod(b.axes)), jnp.uint32
+            (n_parity, stripe_words[b.tag] * _axes_prod(b.axes)), jnp.uint32
         )
         for b in prog.buckets
     }

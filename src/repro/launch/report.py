@@ -103,16 +103,83 @@ def render_failover(rows: list[dict]) -> list[str]:
     return lines
 
 
-def render(path: str, eng: int | None = None) -> str:
+def policy_timeline(events: list[dict]) -> list[dict]:
+    """Adaptive-protection narrative from journal events (DESIGN.md §16):
+    every ``policy`` record — codec flips chosen by
+    :class:`repro.core.policy.ProtectionPolicy` and heartbeat-threshold
+    retunes — normalized to ``{"t0", "target", "detail"}`` rows with ``t0``
+    relative to the first journal event."""
+    evs = [e for e in events if e.get("kind") == "policy"]
+    if not evs:
+        return []
+    base = min(
+        (e["ts"] for e in events if isinstance(e.get("ts"), (int, float))),
+        default=0.0,
+    )
+    rows = []
+    for e in evs:
+        if e.get("target") == "codec":
+            detail = (
+                f"entity={e.get('entity')} -> {e.get('codec')} m={e.get('m')} "
+                f"({e.get('reason', '')})"
+            )
+        elif e.get("target") == "heartbeat":
+            detail = (
+                f"miss_threshold={e.get('miss_threshold')} "
+                f"(base={e.get('base')}, mtbf={e.get('mtbf_s'):.3g}s)"
+            )
+        else:
+            detail = " ".join(
+                f"{k}={v}" for k, v in e.items() if k not in ("kind", "ts", "target")
+            )
+        rows.append({
+            "t0": (e.get("ts") or base) - base,
+            "target": e.get("target", "?"),
+            "detail": detail,
+        })
+    return rows
+
+
+def render_policy(rows: list[dict]) -> list[str]:
+    lines = ["", "adaptive protection decisions (journal 'policy' events):"]
+    lines.append(f"{'t':>10}  {'target':<10} decision")
+    lines.append("-" * 48)
+    for r in rows:
+        lines.append(f"{_fmt_s(r['t0']):>10}  {r['target']:<10} {r['detail']}")
+    return lines
+
+
+def load_journal(path: str) -> list[dict]:
+    """Parse a ``--journal-out`` JSON-lines file (torn tails tolerated)."""
+    events = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                ev = json.loads(line)
+            except ValueError:
+                continue
+            if isinstance(ev, dict) and "kind" in ev:
+                events.append(ev)
+    return events
+
+
+def render(path: str, eng: int | None = None,
+           journal: str | None = None) -> str:
     """The report text (also returned for tests / programmatic use)."""
     events = load_trace(path)
     gens = generation_breakdown(events, eng=eng)
     lines: list[str] = []
+    jrows = policy_timeline(load_journal(journal)) if journal else []
     if not gens:
         lines.append("no labeled checkpoint generations in trace")
         fo = failover_timeline(events, load_instants(path))
         if fo:
             lines.extend(render_failover(fo))
+        if jrows:
+            lines.extend(render_policy(jrows))
         return "\n".join(lines) + "\n"
 
     phase_order = [
@@ -152,6 +219,8 @@ def render(path: str, eng: int | None = None) -> str:
     fo = failover_timeline(events, load_instants(path))
     if fo:
         lines.extend(render_failover(fo))
+    if jrows:
+        lines.extend(render_policy(jrows))
     return "\n".join(lines) + "\n"
 
 
@@ -162,6 +231,9 @@ def main() -> None:
     ap.add_argument("trace", help="Chrome-trace JSON written by --trace-out")
     ap.add_argument("--eng", type=int, default=None,
                     help="filter to one engine's spans (the 'eng' label)")
+    ap.add_argument("--journal", default=None,
+                    help="journal JSON-lines file (--journal-out); adds the "
+                         "adaptive-protection decision section")
     ap.add_argument("--json", action="store_true",
                     help="emit the raw per-generation dict as JSON instead")
     args = ap.parse_args()
@@ -171,10 +243,14 @@ def main() -> None:
         out = {
             "generations": {str(k): v for k, v in gens.items()},
             "failover": failover_timeline(events, load_instants(args.trace)),
+            "policy": (
+                policy_timeline(load_journal(args.journal))
+                if args.journal else []
+            ),
         }
         print(json.dumps(out, indent=2))
     else:
-        print(render(args.trace, eng=args.eng), end="")
+        print(render(args.trace, eng=args.eng, journal=args.journal), end="")
 
 
 if __name__ == "__main__":

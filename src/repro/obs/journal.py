@@ -42,6 +42,7 @@ KINDS = (
     "heartbeat_lost",   # rank missed the beat threshold (silent death)
     "replica_sync",     # shadow team caught up to a committed generation
     "replica_promote",  # shadow team promoted in place of the primary
+    "policy",           # adaptive protection policy decision (DESIGN.md §16)
 )
 
 
@@ -118,34 +119,64 @@ class EventJournal:
 
 def fit_failure_stats(events: Iterable[dict[str, Any]]) -> dict[str, Any]:
     """Fit simple failure statistics from journal events: count, observed
-    MTBF (mean inter-arrival of ``failure`` events), and the burst profile
-    (failures sharing one arrival instant — simultaneous group kills).
+    MTBF (mean inter-arrival of ``failure`` events), the burst profile
+    (failures sharing one arrival instant — simultaneous group kills), and
+    the domain clustering the failure events carry (``domain`` labels from
+    ``VirtualCluster.kill``, DESIGN.md §16):
+
+      * ``burst_sizes``     — every burst's size (the tail the adaptive
+        policy solves tolerance against);
+      * ``by_domain``       — failure count per domain label;
+      * ``domain_bursts``   — bursts whose members share ONE domain (the
+        correlated whole-rack signature), vs ``bursts`` total;
+      * ``max_domain_burst`` — largest single-domain burst observed.
 
     This is the durable input ROADMAP item 5's topology-aware policy needs;
     with only 0/1 failures the MTBF is ``None`` (not enough arrivals).
     """
-    times = sorted(
-        e["ts"] for e in events
-        if e.get("kind") == "failure" and isinstance(e.get("ts"), (int, float))
+    evs = sorted(
+        (
+            (e["ts"], e.get("domain") or "")
+            for e in events
+            if e.get("kind") == "failure" and isinstance(e.get("ts"), (int, float))
+        ),
+        key=lambda td: td[0],
     )
+    times = [t for t, _ in evs]
     n = len(times)
-    out: dict[str, Any] = {"failures": n, "mtbf_s": None, "bursts": 0,
-                           "max_burst": 0}
+    out: dict[str, Any] = {
+        "failures": n, "mtbf_s": None, "bursts": 0, "max_burst": 0,
+        "burst_sizes": [], "by_domain": {}, "domain_bursts": 0,
+        "max_domain_burst": 0,
+    }
     if not n:
         return out
+    for _, dom in evs:
+        if dom:
+            out["by_domain"][dom] = out["by_domain"].get(dom, 0) + 1
     # Cluster arrivals closer than 1ms into one burst (group kills land
     # within the same stabilize window).
     bursts: list[int] = []
-    size = 1
-    for prev, cur in zip(times, times[1:]):
-        if cur - prev < 1e-3:
+    burst_doms: list[set[str]] = []
+    size, doms = 1, {evs[0][1]} if evs[0][1] else set()
+    for prev, cur in zip(evs, evs[1:]):
+        if cur[0] - prev[0] < 1e-3:
             size += 1
+            if cur[1]:
+                doms.add(cur[1])
         else:
             bursts.append(size)
-            size = 1
+            burst_doms.append(doms)
+            size, doms = 1, {cur[1]} if cur[1] else set()
     bursts.append(size)
+    burst_doms.append(doms)
     out["bursts"] = len(bursts)
     out["max_burst"] = max(bursts)
+    out["burst_sizes"] = bursts
+    for b, ds in zip(bursts, burst_doms):
+        if b > 1 and len(ds) == 1 and ds:
+            out["domain_bursts"] += 1
+            out["max_domain_burst"] = max(out["max_domain_burst"], b)
     if len(bursts) > 1:
         first_arrivals = []
         i = 0

@@ -46,7 +46,9 @@ class StabilizationReport:
 
 
 class VirtualCluster:
-    def __init__(self, n_ranks: int, n_spares: int = 0) -> None:
+    def __init__(
+        self, n_ranks: int, n_spares: int = 0, topology: object | None = None
+    ) -> None:
         self.n_ranks = n_ranks
         self.n_spares = n_spares
         self._alive: set[int] = set(range(n_ranks))
@@ -54,11 +56,34 @@ class VirtualCluster:
         self.revoked = False
         self.fault_log: list[tuple[str, list[int]]] = []
         self.engine: CheckpointEngine | None = None
+        # Failure-domain topology (core/topology.py, DESIGN.md §16): labels
+        # every kill's journal record with the rank's domain, the clustering
+        # key fit_failure_stats groups correlated bursts by.
+        self.topology = (
+            topology.resized(n_ranks) if topology is not None else None
+        )
 
     # ------------------------------------------------------------------ #
     def attach_engine(self, engine: CheckpointEngine) -> None:
         self.engine = engine
         engine._alive_fn = self.alive  # engine liveness = cluster liveness
+        # One topology serves both: an engine built with cfg.topology shares
+        # it with the cluster (and vice versa), so placement and failure
+        # labels can never disagree about which rack a rank is in.
+        if self.topology is None and engine.topology is not None:
+            self.topology = engine.topology
+        elif self.topology is not None and engine.topology is None:
+            engine.topology = self.topology.resized(engine.n_ranks)
+            engine._groups_cache = None
+
+    def domain_ranks(self, domain_index: int, level: str | None = None) -> list[int]:
+        """Alive-or-dead member ranks of one failure domain (burst targets)."""
+        if self.topology is None:
+            return []
+        return [
+            r for r in range(self.n_ranks)
+            if self.topology.domain_of(r, level) == domain_index
+        ]
 
     def alive(self) -> set[int]:
         return set(self._alive)
@@ -91,6 +116,11 @@ class VirtualCluster:
                 "failure", rank=rank, cause=cause,
                 gen=self.engine.stats.created,
                 alive=len(self._alive), n_ranks=self.n_ranks,
+                domain=(
+                    self.topology.domain_label(rank)
+                    if self.topology is not None and rank < self.topology.n_ranks
+                    else ""
+                ),
             )
         tracer().instant("kill", rank=rank, cause=cause, silent=silent)
         if not silent:
@@ -221,6 +251,10 @@ class HeartbeatMonitor:
     ) -> None:
         self.n_ranks = n_ranks
         self.miss_threshold = miss_threshold
+        # The construction-time threshold is the tuning FLOOR: fitted-MTBF
+        # tuning may stretch patience on a quiet cluster, never sharpen it
+        # below what the operator configured (DESIGN.md §16).
+        self._base_miss_threshold = miss_threshold
         self.straggler = straggler
         self.journal = journal
         self._last_beat: dict[int, int] = {r: 0 for r in range(n_ranks)}
@@ -246,6 +280,48 @@ class HeartbeatMonitor:
         import math
 
         return max(1, math.ceil(self.miss_threshold * self.grace()))
+
+    def tune_from_journal(
+        self,
+        journal: object | None = None,
+        tick_seconds: float = 1.0,
+        frac: float = 0.01,
+        cap_factor: int = 8,
+    ) -> int:
+        """Drive the miss threshold from the journal's fitted MTBF.
+
+        A quiet cluster (large MTBF) can afford more patience before
+        declaring a silent rank dead — false declarations trigger a full
+        stabilize/restore cycle, which on a healthy fleet costs more than
+        the extra detection latency. The threshold becomes
+
+            ``clamp(base, round(mtbf_ticks * frac), base * cap_factor)``
+
+        so the construction-time value stays the floor (tuning never makes
+        detection *hastier* than configured) and the cap bounds worst-case
+        detection latency on a near-idle journal. With no journal, no
+        fitted MTBF (fewer than two bursts), or a degenerate tick length,
+        the threshold reverts to the static base.
+        """
+        src = journal if journal is not None else self.journal
+        events = src.events() if hasattr(src, "events") else (src or [])
+        from repro.obs.journal import fit_failure_stats
+
+        stats = fit_failure_stats(events)
+        mtbf = stats.get("mtbf_s")
+        base = self._base_miss_threshold
+        if not mtbf or mtbf <= 0 or tick_seconds <= 0:
+            self.miss_threshold = base
+            return base
+        mtbf_ticks = mtbf / tick_seconds
+        tuned = int(round(mtbf_ticks * frac))
+        self.miss_threshold = max(base, min(base * cap_factor, tuned))
+        if self.journal is not None:
+            self.journal.record(
+                "policy", target="heartbeat", miss_threshold=self.miss_threshold,
+                base=base, mtbf_s=mtbf, tick_seconds=tick_seconds,
+            )
+        return self.miss_threshold
 
     def observe(self, beating: set[int], tick: int) -> list[int]:
         """Record this tick's beats; return ranks newly declared dead."""

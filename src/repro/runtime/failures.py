@@ -81,6 +81,26 @@ class FailureInjector:
         target.setdefault(step, []).extend(doomed)
         return doomed
 
+    def schedule_domain_burst(
+        self, step: int, topology, domain_index: int,
+        level: str | None = None, kind: str = "step",
+    ) -> list[int]:
+        """Schedule the loss of one *entire* failure domain (a whole rack's
+        power feed, a pod's shared switch): every rank whose
+        ``topology.domain_of(rank, level)`` equals ``domain_index`` dies at
+        ``step`` simultaneously. This is the correlated event domain-aware
+        parity placement (DESIGN.md §16) exists to survive — with at most
+        one group member per domain, a whole-domain burst costs each group
+        exactly one shard. Returns the doomed ranks."""
+        doomed = [
+            r for r in range(min(self.n_ranks, topology.n_ranks))
+            if topology.domain_of(r, level) == domain_index
+        ]
+        assert doomed, (domain_index, level)
+        target = self.schedule if kind == "step" else self.checkpoint_schedule
+        target.setdefault(step, []).extend(doomed)
+        return doomed
+
     def _widen_burst(self, rank: int) -> list[int]:
         """Expand an MTBF kill into its correlated within-group burst."""
         if self.burst_size <= 1:

@@ -82,3 +82,40 @@ def hosts_of_mesh(mesh: Mesh, host_chips: int = 8) -> dict[int, list[int]]:
     for d in mesh.devices.flat:
         out.setdefault(d.id // host_chips, []).append(d.id)
     return out
+
+
+def topology_of_mesh(
+    mesh: Mesh,
+    n_ranks: int | None = None,
+    host_chips: int = 8,
+    hosts_per_rack: int = 4,
+    racks_per_pod: int = 4,
+    placement_level: str = "rack",
+):
+    """Derive a :class:`repro.core.topology.ClusterTopology` for the engine's
+    rank space from the physical mesh. One engine rank = one data-axis
+    coordinate; its host is read off the mesh's device ordering (first device
+    of each data slice, ``hosts_of_mesh`` convention), and the rack/pod
+    levels follow the ``regular()`` contiguous packing above that. The
+    result is what ``EngineConfig.topology`` / ``VirtualCluster(topology=)``
+    expect for domain-aware parity placement (DESIGN.md §16)."""
+    from repro.core.topology import ClusterTopology
+
+    if n_ranks is None:
+        n_ranks = mesh_axis_size(mesh, data_axes(mesh)) or 1
+    devs = [d.id for d in mesh.devices.flat]
+    # Devices per engine rank under row-major ordering with the data axes
+    # leading (launch.mesh convention): a contiguous block per rank.
+    per_rank = max(len(devs) // max(n_ranks, 1), 1)
+    labels = []
+    for r in range(n_ranks):
+        lead = devs[min(r * per_rank, len(devs) - 1)]
+        host = lead // host_chips
+        rack = host // hosts_per_rack
+        pod = rack // racks_per_pod
+        labels.append((host, rack, pod))
+    return ClusterTopology(
+        labels=tuple(labels),
+        placement_level=placement_level,
+        name=f"mesh[{','.join(f'{k}={v}' for k, v in mesh.shape.items())}]",
+    )

@@ -321,18 +321,21 @@ _STRIPED_RESTORE = textwrap.dedent(
             out[k] = jax.device_put(jnp.asarray(a, val.dtype), NamedSharding(mesh, ps[k]))
         return out
 
-    def check(codec, g, mpar):
+    def check(codec, g, mpar, ll=2):
         snap = build_snapshot_program(
             mesh, sds, ps, validate=False, include_own_copy=False,
-            codec=codec, parity_group=g, rs_parity=mpar)
+            codec=codec, parity_group=g, rs_parity=mpar, lrc_locals=ll)
         payload = jax.jit(snap.snapshot_fn)(state)
         rest = build_striped_restore_program(
-            mesh, sds, ps, codec=codec, parity_group=g, rs_parity=mpar)
+            mesh, sds, ps, codec=codec, parity_group=g, rs_parity=mpar,
+            lrc_locals=ll)
         tol = 1 if codec == "xor" else mpar
+        n_ok = 0
         for nfail in range(0, tol + 1):
             for failed in itertools.combinations(range(4), nfail):
                 try:
-                    rows, mask = striped_decode_rows(4, g, codec, mpar, set(failed))
+                    rows, mask = striped_decode_rows(
+                        4, g, codec, mpar, set(failed), lrc_locals=ll)
                 except ValueError:
                     continue  # burst exceeds this group's tolerance/blobs
                 bad = corrupt(failed)
@@ -344,6 +347,8 @@ _STRIPED_RESTORE = textwrap.dedent(
                     assert got.dtype == orig.dtype, (codec, failed, idx)
                     assert np.array_equal(got.view(np.uint8), orig.view(np.uint8)), \
                         (codec, failed, idx)
+                n_ok += 1
+        assert n_ok > 1, (codec, g, mpar, n_ok)  # at least no-fail + singles
     """
 )
 
@@ -362,6 +367,24 @@ def test_device_striped_restore_rs_all_failure_combos():
     precompute accepts restores bit-identically, including garbage uploads
     on the failed coordinates (the survivor mask zeroes them)."""
     assert "OK" in _run(_STRIPED_RESTORE + 'check("rs", 2, 2)\nprint("OK")\n')
+
+
+def test_device_striped_restore_ragged_world():
+    """g=3 on a 4-wide axis (groups {0,1,2},{3}): the ragged round-robin
+    stripe layout — NOT a full-blob fallback — encodes, routes, and restores
+    every accepted failure combo bit-identically (DESIGN.md §16)."""
+    assert "OK" in _run(_STRIPED_RESTORE + 'check("rs", 3, 2)\nprint("OK")\n')
+
+
+def test_device_striped_restore_lrc():
+    """The LRC codec runs through the SAME fused stripe/restore machinery:
+    local+global blobs (n_parity = l+g rows), decode rows selected by the
+    codec's own cheapest-invertible search, bit-identical recovery —
+    including the ragged g=3 world."""
+    assert "OK" in _run(
+        _STRIPED_RESTORE
+        + 'check("lrc", 2, 1)\ncheck("lrc", 3, 2)\nprint("OK")\n'
+    )
 
 
 def test_staged_snapshot_fetch_double_buffered_bit_identical():
@@ -398,11 +421,11 @@ def test_staged_snapshot_fetch_double_buffered_bit_identical():
     assert "OK" in _run(code)
 
 
-def test_ragged_world_full_blob_fallback_and_error():
-    """parity_group not dividing the axis: the default auto-falls back to
-    whole blobs (logged once), emit_full_blobs=False raises a clear error
-    naming the fallback, and the fallback payload still matches the host
-    codec oracle."""
+def test_ragged_world_takes_stripe_path_not_fallback():
+    """parity_group not dividing the axis (g=3 on 4): the default now takes
+    the TRUE ragged stripe path — the payload carries round-robin stripe
+    slots, not whole blobs — and full blobs remain an explicit opt-in
+    (emit_full_blobs=True)."""
     code = textwrap.dedent(
         """
         import jax, jax.numpy as jnp, numpy as np
@@ -413,88 +436,61 @@ def test_ragged_world_full_blob_fallback_and_error():
         ps = {"w": P("data", "model")}
         w = jnp.asarray(np.random.default_rng(1).standard_normal((8, 4)), jnp.float32)
         state = {"w": jax.device_put(w, NamedSharding(mesh, ps["w"]))}
-        # g=3 does not divide 4: default -> auto full-blob fallback
+        # g=3 does not divide 4: stripes anyway (groups {0,1,2},{3}; S=3)
         prog = build_snapshot_program(mesh, sds, ps, validate=False,
                                       include_own_copy=False, codec="xor", parity_group=3)
         payload = jax.jit(prog.snapshot_fn)(state)
-        assert "parity_full" in payload and "parity" not in payload
-        # pcie accounting reflects whole blobs (g x the stripe path)
-        strided = build_snapshot_program(mesh, sds, ps, validate=False,
-                                         include_own_copy=False, codec="xor", parity_group=2)
-        assert prog.pcie_bytes > strided.pcie_bytes
-        # explicit False on a ragged world is a clear error, not an assert
-        try:
-            build_snapshot_program(mesh, sds, ps, validate=False, codec="xor",
-                                   parity_group=3, emit_full_blobs=False)
-            raise SystemExit("expected ValueError")
-        except ValueError as e:
-            assert "emit_full_blobs" in str(e), e
+        assert "parity" in payload and "parity_full" not in payload
+        # per-device stripe buffer: n_parity rows of S*(words/g) words each,
+        # S = 3 (the short group {3} has k=1 -> ceil(3/1) slots)
+        bkt = prog.buckets[0]
+        per = np.asarray(payload["parity"][bkt.tag])
+        assert per.size == 4 * 2 * 1 * 3 * (bkt.words // 3), per.shape
+        # full blobs stay available as the explicit opt-in
+        full = build_snapshot_program(mesh, sds, ps, validate=False,
+                                      include_own_copy=False, codec="xor",
+                                      parity_group=3, emit_full_blobs=True)
+        pf = jax.jit(full.snapshot_fn)(state)
+        assert "parity_full" in pf and "parity" not in pf
         print("OK")
         """
     )
     assert "OK" in _run(code)
 
 
-def test_ragged_fallback_warns_once_per_key_and_pcie_accounting_exact():
-    """The auto full-blob fallback logs exactly ONCE per (axis, size, g)
-    key — repeated builds stay silent, a different g warns again — and the
-    full-blob program's ``pcie_bytes`` equals the measured payload exactly:
-    own copies + the m whole parity blobs every group member keeps."""
+def test_stripe_pcie_accounting_exact_divisible_ragged_and_full_blob():
+    """``pcie_bytes`` equals the measured payload exactly — own copies
+    (unpadded leaves) + the stripe slots every device keeps — on a dividing
+    world (S=1), a ragged world (S>1), AND the explicit full-blob opt-in
+    (m whole parity blobs per group member)."""
     code = textwrap.dedent(
         """
-        import logging
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P, NamedSharding
-        from repro.core import device_tier
         from repro.core.device_tier import build_snapshot_program
-
-        records = []
-        class Capture(logging.Handler):
-            def emit(self, rec):
-                records.append(rec.getMessage())
-        device_tier.log.addHandler(Capture())
-        device_tier.log.setLevel(logging.WARNING)
 
         mesh = jax.make_mesh((4, 2), ("data", "model"))
         sds = {"w": jax.ShapeDtypeStruct((8, 4), jnp.float32),
                "b": jax.ShapeDtypeStruct((8,), jnp.float32)}
         ps = {"w": P("data", "model"), "b": P("data")}
-        build = lambda g: build_snapshot_program(
-            mesh, sds, ps, validate=False, include_own_copy=True,
-            codec="rs", parity_group=g, rs_parity=2)
-
-        prog = build(3)       # 3 does not divide 4 -> fallback, warns
-        build(3)              # same (axis, size, g) key -> silent
-        build(3)
-        warned = [m for m in records if "emit_full_blobs" in m]
-        assert len(warned) == 1, warned
-        build(5)              # different g -> its own one-time warning
-        warned = [m for m in records if "emit_full_blobs" in m]
-        assert len(warned) == 2, warned
-
-        # full-blob PCIe accounting matches the actual payload bytes:
-        # own copies (unpadded leaves) + m whole blobs per group member
         rng = np.random.default_rng(0)
         state = {k: jax.device_put(
                      jnp.asarray(rng.standard_normal(sds[k].shape), jnp.float32),
                      NamedSharding(mesh, ps[k]))
                  for k in sds}
-        payload = jax.jit(prog.snapshot_fn)(state)
-        own = sum(np.asarray(x).nbytes for x in jax.tree.leaves(payload["own"]))
-        axes_prod = {"data": 4}
-        parity = 0
-        for b in prog.buckets:
-            blobs = np.asarray(payload["parity_full"][b.tag])
-            parity += blobs.nbytes
-        assert prog.pcie_bytes == own + parity, (prog.pcie_bytes, own, parity)
-        # and the stripe-path accounting on a dividing world is 1/g of it
-        strided = build_snapshot_program(
-            mesh, sds, ps, validate=False, include_own_copy=True,
-            codec="rs", parity_group=2, rs_parity=2)
-        assert "parity" not in payload  # ragged build stayed full-blob
-        sp = jax.jit(strided.snapshot_fn)(state)
-        sparity = sum(np.asarray(sp["parity"][b.tag]).nbytes for b in strided.buckets)
-        assert strided.pcie_bytes == own + sparity, (strided.pcie_bytes, own, sparity)
+        for g, full_blobs in ((2, False), (3, False), (3, True)):
+            prog = build_snapshot_program(
+                mesh, sds, ps, validate=False, include_own_copy=True,
+                codec="rs", parity_group=g, rs_parity=2,
+                emit_full_blobs=full_blobs)
+            payload = jax.jit(prog.snapshot_fn)(state)
+            own = sum(np.asarray(x).nbytes for x in jax.tree.leaves(payload["own"]))
+            key = "parity_full" if full_blobs else "parity"
+            assert key in payload and len(payload) == 2, sorted(payload)
+            parity = sum(np.asarray(payload[key][b.tag]).nbytes
+                         for b in prog.buckets)
+            assert prog.pcie_bytes == own + parity, (
+                g, full_blobs, prog.pcie_bytes, own, parity)
         print("OK")
         """
     )

@@ -1,0 +1,528 @@
+"""Failure-domain-aware protection (DESIGN.md §16): the topology model,
+the domain-aware placement property (no parity group ever holds two members
+of one failure domain — ragged worlds and resizes included), LRC engine
+roundtrips under every failure combo up to tolerance, repair locality
+(single-failure LRC reads strictly fewer bytes than global RS), elastic
+N-to-M after a whole-rack burst, the adaptive protection policy, and the
+journal-tuned heartbeat threshold."""
+
+import itertools
+import warnings
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.checkpoint import CheckpointEngine, EngineConfig
+from repro.core.codec import LRCCodec, RSCodec, lrc_generator, make_codec
+from repro.core.distribution import (
+    DataLostError,
+    balanced_parity_groups,
+    domain_parity_groups,
+    placement_conflicts,
+    rank_group_map,
+)
+from repro.core.policy import ProtectionPolicy
+from repro.core.topology import LEVELS, ClusterTopology
+
+settings.register_profile("topo", deadline=None, max_examples=40)
+settings.load_profile("topo")
+
+
+# ---------------------------------------------------------------------------
+# topology model
+# ---------------------------------------------------------------------------
+
+def test_regular_topology_shape_and_queries():
+    # 2 ranks/host, 2 hosts/rack, 2 racks/pod: per_rack=4, per_pod=8
+    topo = ClusterTopology.regular(
+        16, ranks_per_host=2, hosts_per_rack=2, racks_per_pod=2
+    )
+    assert topo.n_ranks == 16
+    assert topo.domain_of(0, "host") == 0 and topo.domain_of(2, "host") == 1
+    assert topo.domain_of(3, "rack") == 0 and topo.domain_of(4, "rack") == 1
+    assert topo.domain_of(7, "pod") == 0 and topo.domain_of(8, "pod") == 1
+    assert topo.domain_label(5) == "rack:1"  # placement level defaults to rack
+    racks = topo.domains("rack")
+    assert [d.ranks for d in racks] == [
+        (0, 1, 2, 3), (4, 5, 6, 7), (8, 9, 10, 11), (12, 13, 14, 15)
+    ]
+    assert racks[1].label == "rack:1"
+    assert topo.max_domain_size("rack") == 4
+    assert topo.max_domain_size("host") == 2
+    assert "racks=4" in repr(topo)
+
+
+def test_regular_topology_resize_rederives_layout():
+    topo = ClusterTopology.regular(8, hosts_per_rack=2)  # racks of 2
+    grown = topo.resized(12)
+    assert grown.n_ranks == 12
+    # same fixed cluster shape: rank r's rack is r // 2 at every world size
+    for r in range(12):
+        assert grown.domain_of(r, "rack") == r // 2
+    assert topo.resized(8) is topo
+
+
+def test_irregular_topology_resize_truncates_and_extends_conservatively():
+    topo = ClusterTopology.from_labels(
+        [(0, 0, 0), (1, 0, 0), (2, 1, 0), (3, 1, 0)]
+    )
+    assert topo.resized(2).labels == ((0, 0, 0), (1, 0, 0))
+    grown = topo.resized(6)
+    # extended ranks land in fresh domains at EVERY level: a grown world
+    # never accidentally co-locates new ranks with existing ones.
+    old_racks = {lab[1] for lab in topo.labels}
+    for r in (4, 5):
+        assert grown.labels[r][1] not in old_racks
+    assert grown.labels[4] != grown.labels[5]
+
+
+# ---------------------------------------------------------------------------
+# domain-aware placement: the never-co-located property
+# ---------------------------------------------------------------------------
+
+@given(
+    n=st.integers(min_value=2, max_value=40),
+    k=st.integers(min_value=2, max_value=6),
+    per_host=st.integers(min_value=1, max_value=3),
+    hosts_per_rack=st.integers(min_value=1, max_value=3),
+)
+def test_domain_placement_property(n, k, per_host, hosts_per_rack):
+    """For every feasible (world, group size, rack shape) — ragged worlds
+    included — domain-aware groups partition the ranks, stay balanced, and
+    never put two members of one rack into the same parity group."""
+    topo = ClusterTopology.regular(
+        n, ranks_per_host=per_host, hosts_per_rack=hosts_per_rack
+    )
+    n_groups = -(-n // k)
+    if topo.max_domain_size("rack") > n_groups:
+        return  # infeasible shape: covered by the best-effort test below
+    groups = domain_parity_groups(n, k, topo)
+    ranks = sorted(r for g in groups for r in g.members)
+    assert ranks == list(range(n))
+    sizes = sorted(len(g.members) for g in groups)
+    assert sizes[-1] - sizes[0] <= 1  # balanced: ragged tail is spread
+    assert placement_conflicts(groups, topo) == []
+    # the property survives an elastic resize of the same topology
+    m = max(2, n - 2)
+    resized = topo.resized(m)
+    if resized.max_domain_size("rack") <= -(-m // k):
+        regroups = domain_parity_groups(m, k, resized)
+        assert placement_conflicts(regroups, resized) == []
+
+
+def test_domain_placement_property_grid():
+    """Deterministic sweep of the same property (runs even without
+    hypothesis): every feasible shape separates, partitions, balances."""
+    for n in range(2, 33):
+        for k in (2, 3, 4, 5):
+            for hosts_per_rack in (1, 2, 3):
+                topo = ClusterTopology.regular(n, hosts_per_rack=hosts_per_rack)
+                if topo.max_domain_size("rack") > -(-n // k):
+                    continue
+                groups = domain_parity_groups(n, k, topo)
+                assert sorted(r for g in groups for r in g.members) == list(range(n))
+                sizes = sorted(len(g.members) for g in groups)
+                assert sizes[-1] - sizes[0] <= 1
+                assert placement_conflicts(groups, topo) == [], (n, k, hosts_per_rack)
+
+
+def test_domain_placement_without_topology_is_balanced_contiguous():
+    assert domain_parity_groups(10, 4) == balanced_parity_groups(10, 4)
+    sizes = [len(g.members) for g in balanced_parity_groups(10, 4)]
+    assert sizes == [4, 3, 3]
+    gmap = rank_group_map(balanced_parity_groups(10, 4))
+    assert gmap[3] == 0 and gmap[4] == 1 and gmap[9] == 2
+
+
+def test_domain_placement_infeasible_degrades_with_warning():
+    """One rack larger than the group count cannot be separated; placement
+    still partitions the world, warns once, and keeps the residual
+    co-location minimal (no group eats the whole oversized rack)."""
+    topo = ClusterTopology.regular(9, hosts_per_rack=9)  # one 9-rank rack
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        groups = domain_parity_groups(9, 4, topo)
+    assert any("best-effort" in str(x.message) for x in w)
+    assert sorted(r for g in groups for r in g.members) == list(range(9))
+    conflicts = placement_conflicts(groups, topo)
+    assert conflicts  # genuinely infeasible: violations are reported, not hidden
+    assert all(len(rs) < 9 for _, _, rs in conflicts)
+
+
+# ---------------------------------------------------------------------------
+# LRC codec through the engine: every failure combo up to tolerance
+# ---------------------------------------------------------------------------
+
+class ShardedVec:
+    def __init__(self, n, dim=64):
+        self.n = n
+        self.data = [np.arange(dim, dtype=np.float32) + 1000 * r for r in range(n)]
+
+    def snapshot_shards(self, n):
+        return [{"v": self.data[r].copy(), "origin": np.int64(r)} for r in range(n)]
+
+    def restore_shards(self, shards):
+        for origin, payload in shards.items():
+            assert int(payload["origin"]) == origin
+            self.data[origin] = np.asarray(payload["v"]).copy()
+
+
+def _roundtrip(n, cfg, kills, dim=64):
+    eng = CheckpointEngine(n, cfg)
+    vec = ShardedVec(n, dim)
+    eng.register("state", vec)
+    assert eng.checkpoint({"step": 1})
+    orig = [d.copy() for d in vec.data]
+    for d in vec.data:
+        d += 999.0
+    for r in kills:
+        eng.stores[r].wipe()
+    eng.restore()
+    for r in range(n):
+        assert np.array_equal(vec.data[r], orig[r]), (r, kills)
+    return eng
+
+
+LRC_CFG = EngineConfig(codec="lrc", parity_group=4, rs_parity=2, lrc_locals=2)
+
+
+@pytest.mark.parametrize("grp", [0, 1])
+def test_lrc_every_failure_combo_up_to_tolerance(grp):
+    members = list(range(4 * grp, 4 * grp + 4))
+    for e in (1, 2):
+        for kills in itertools.combinations(members, e):
+            _roundtrip(8, LRC_CFG, kills)
+
+
+def test_lrc_ragged_last_group_and_cross_group():
+    for kills in [(9,), (8, 9), (3, 8), (0, 5)]:
+        _roundtrip(10, LRC_CFG, kills)
+
+
+def test_lrc_beyond_tolerance_raises():
+    with pytest.raises(DataLostError):
+        _roundtrip(8, LRC_CFG, (0, 1, 2))
+
+
+def test_lrc_generator_structure():
+    C = lrc_generator(6, 2, 2)
+    assert C.shape == (4, 6)
+    # local rows are 0/1 indicators of disjoint halves covering all columns
+    assert C[0].tolist() == [1, 1, 1, 0, 0, 0]
+    assert C[1].tolist() == [0, 0, 0, 1, 1, 1]
+    # global rows are dense Cauchy rows (any square submatrix inverts)
+    assert np.all(C[2:] != 0)
+
+
+def test_make_codec_lrc_from_config():
+    codec = make_codec(EngineConfig(codec="lrc", parity_group=6, rs_parity=2,
+                                    lrc_locals=3))
+    assert codec.name == "lrc" and isinstance(codec, LRCCodec)
+    assert codec.local == 3 and codec.global_parity == 2
+    assert codec.tolerance() == 2
+    assert codec.n_blobs(6) == 5  # 3 local + 2 global
+    with pytest.raises(ValueError):
+        make_codec(EngineConfig(codec="lrc"))  # group size is mandatory
+
+
+# ---------------------------------------------------------------------------
+# repair locality: the acceptance inequality
+# ---------------------------------------------------------------------------
+
+def test_lrc_single_failure_repair_reads_fewer_bytes_than_rs():
+    """At equal tolerance (m=2) over k=6, a single-shard repair under LRC
+    touches only the local subgroup (k_local survivors + one local parity)
+    while RS reads k-1 survivors + one blob: strictly fewer sources AND
+    bytes, bounded by the (k_local+1)/(k+m) ratio from DESIGN.md §16."""
+    k, m, l = 6, 2, 2
+    r = np.random.default_rng(7)
+    bufs = [r.integers(0, 256, size=512, dtype=np.uint8) for _ in range(k)]
+
+    def repair_reads(codec):
+        # decode_into is the engine's chunked host path — the one that
+        # carries the repair-read accounting.
+        blobs = dict(enumerate(codec.encode(bufs, codec.n_blobs(k))))
+        present = {i: bufs[i] for i in range(k) if i != 2}
+        out, chunk = codec.decode_into(
+            present, blobs, [2], lambda i, n: np.zeros(n, np.uint8)
+        )
+        chunk(0, max(b.nbytes for b in blobs.values()))
+        assert np.array_equal(out[2][: len(bufs[2])], bufs[2])
+        return codec.last_decode_reads, codec.last_decode_read_bytes
+
+    lrc_reads, lrc_bytes = repair_reads(LRCCodec(k, l, m))
+    rs_reads, rs_bytes = repair_reads(RSCodec(k, m))
+    k_local = -(-k // l)
+    assert lrc_reads == k_local + 1 - 1  # local parity + (k_local-1) survivors
+    assert rs_reads == k  # one blob + (k-1) survivors
+    assert lrc_reads < rs_reads
+    assert lrc_bytes < rs_bytes
+    assert lrc_bytes * (k + m) <= rs_bytes * (k_local + 1)
+
+
+# ---------------------------------------------------------------------------
+# whole-rack burst under domain-aware placement: the acceptance scenario
+# ---------------------------------------------------------------------------
+
+def _rack_topology(n=12):
+    # racks of 2 (1 rank/host, 2 hosts/rack): with k=4 there are 3 groups,
+    # so max_domain_size(2) <= n_groups(3) — feasible, and a rack burst
+    # leaves one group (and therefore one blob holder) fully intact.
+    return ClusterTopology.regular(n, hosts_per_rack=2)
+
+
+def test_rack_burst_recovers_via_codec_tier_with_domain_placement():
+    """Losing an ENTIRE rack costs every parity group at most one shard
+    under domain-aware placement, so m=2 codecs recover bit-identically even
+    though the burst also destroys every blob striped over the two wounded
+    groups — while the naive contiguous layout provably loses data at the
+    same parity budget."""
+    topo = _rack_topology()
+    rack1 = [d.ranks for d in topo.domains("rack")][1]
+    assert len(rack1) == 2
+    for codec in ("rs", "lrc"):
+        cfg = EngineConfig(codec=codec, parity_group=4, rs_parity=2,
+                           lrc_locals=2, topology=topo)
+        eng = _roundtrip(12, cfg, rack1)
+        groups = eng._groups()
+        assert placement_conflicts(groups, topo) == []
+        # the burst costs every group at most ONE member
+        for g in groups:
+            assert sum(1 for r in rack1 if r in g.members) <= 1
+        assert eng.stats.reconstructed_restores >= len(rack1)
+    # contiguous placement at the same budget: both victims sit in one
+    # group, which loses 2 shards AND (being a holder) kills blobs.
+    rack_pair = (2, 3)  # one contiguous group's interior under k=4
+    with pytest.raises(DataLostError):
+        _roundtrip(12, EngineConfig(parity_group=4), rack_pair)  # xor m=1
+
+
+def test_elastic_shrink_after_rack_burst():
+    """N=8 -> M=6 straight through a whole-rack loss: the domain-aware LRC
+    checkpoint repairs the burst and repartitions onto the smaller world."""
+    topo = _rack_topology()
+    cfg = EngineConfig(codec="lrc", parity_group=4, rs_parity=2,
+                       lrc_locals=2, topology=topo)
+    eng = CheckpointEngine(12, cfg)
+    vec = ShardedVec(12)
+    eng.register("state", vec)
+    assert eng.checkpoint({"step": 3})
+    orig = [d.copy() for d in vec.data]
+    rack0 = [d.ranks for d in topo.domains("rack")][0]
+    for r in rack0:
+        eng.stores[r].wipe()
+    for d in vec.data:
+        d += 999.0
+    meta = eng.restore_elastic(8)
+    assert meta["step"] == 3
+    for r in range(12):
+        assert np.array_equal(vec.data[r], orig[r]), r
+    assert eng.n_ranks == 8
+    assert eng.topology.n_ranks == 8  # topology resized alongside the engine
+    assert eng.checkpoint({"step": 4})  # new world re-protects, domain-aware
+    assert placement_conflicts(eng._groups(), eng.topology) == []
+
+
+def test_cluster_kill_journals_domain_labels():
+    """VirtualCluster.kill stamps each failure event with the victim's
+    domain label; fit_failure_stats clusters a simultaneous whole-rack kill
+    into ONE single-domain burst."""
+    from repro.obs.journal import fit_failure_stats
+    from repro.runtime.cluster import VirtualCluster
+
+    topo = _rack_topology()
+    cfg = EngineConfig(codec="rs", parity_group=4, rs_parity=2, topology=topo)
+    eng = CheckpointEngine(8, cfg)
+    eng.register("state", ShardedVec(8))
+    cluster = VirtualCluster(8, topology=topo)
+    cluster.attach_engine(eng)
+    assert eng.checkpoint({"step": 1})
+    for r in (2, 3):  # rack:1
+        cluster.kill(r)
+    evs = eng.journal.events("failure")
+    assert [e["domain"] for e in evs] == ["rack:1", "rack:1"]
+    # force the two kills into one arrival instant (burst clustering window)
+    evs[1]["ts"] = evs[0]["ts"]
+    stats = fit_failure_stats(eng.journal.events())
+    assert stats["failures"] == 2
+    assert stats["by_domain"] == {"rack:1": 2}
+    assert stats["domain_bursts"] == 1 and stats["max_domain_burst"] == 2
+
+
+# ---------------------------------------------------------------------------
+# adaptive protection policy
+# ---------------------------------------------------------------------------
+
+def _policy_engine(codec="rs", k=4, m=2, topo=None):
+    cfg = EngineConfig(codec=codec, parity_group=k, rs_parity=m,
+                       lrc_locals=2, topology=topo)
+    eng = CheckpointEngine(8, cfg)
+    eng.register("state", ShardedVec(8))
+    return eng
+
+
+def _inject_failures(eng, bursts):
+    """Append synthetic failure events: bursts is a list of lists of domain
+    labels; events within a burst share one arrival instant, bursts are
+    seconds apart (well past the 1ms clustering window)."""
+    t = 1000.0
+    for doms in bursts:
+        for d in doms:
+            eng.journal._events.append(
+                {"kind": "failure", "ts": t, "rank": 0, "domain": d}
+            )
+        t += 60.0
+
+
+def test_policy_quiet_keeps_configured_codec():
+    eng = _policy_engine()
+    pol = ProtectionPolicy(eng)
+    decisions = pol.evaluate()
+    assert [d.entity for d in decisions] == ["state"]
+    assert decisions[0].codec == "rs" and not decisions[0].changed
+    assert "quiet" in decisions[0].reason
+    assert pol.apply(decisions) == 0
+
+
+def test_policy_single_failures_pick_lrc():
+    eng = _policy_engine()
+    _inject_failures(eng, [["rack:0"], ["rack:3"], ["rack:1"]])
+    pol = ProtectionPolicy(eng)
+    n = pol.apply()
+    assert n == 1
+    d = pol.decisions["state"]
+    assert d.codec == "lrc" and "local repair pays" in d.reason
+    assert eng._codec_for("state").name == "lrc"
+    pol_evs = eng.journal.events("policy")
+    assert pol_evs and pol_evs[-1]["codec"] == "lrc"
+    # a second evaluation is a no-op: protection already matches
+    assert pol.apply() == 0
+    # the override round-trips: checkpoint under LRC, burst, restore
+    vec = eng._entities["state"]
+    assert eng.checkpoint({"step": 2})
+    orig = [x.copy() for x in vec.data]
+    eng.stores[1].wipe()
+    eng.restore()
+    assert all(np.array_equal(a, b) for a, b in zip(vec.data, orig))
+
+
+def test_policy_domain_spanning_burst_raises_parity():
+    eng = _policy_engine(m=1)
+    _inject_failures(eng, [["rack:0", "rack:1", "rack:2"], ["rack:3"]])
+    pol = ProtectionPolicy(eng)
+    assert pol.apply() == 1
+    d = pol.decisions["state"]
+    assert d.codec == "rs" and d.m == 3  # covers the 3-wide spanning burst
+    assert "domain-spanning" in d.reason
+
+
+def test_policy_domain_contained_burst_stays_cheap_with_topology():
+    """The same 2-wide burst: domain-contained + topology => cost 1 (LRC);
+    without a topology the discount is off and m rises to 2."""
+    topo = _rack_topology()
+    eng = _policy_engine(topo=topo)
+    _inject_failures(eng, [["rack:1", "rack:1"], ["rack:0"]])
+    pol = ProtectionPolicy(eng)
+    pol.apply()
+    assert pol.decisions["state"].codec == "lrc"
+
+    eng2 = _policy_engine(m=1)
+    _inject_failures(eng2, [["rack:1", "rack:1"], ["rack:0"]])
+    pol2 = ProtectionPolicy(eng2)
+    pol2.apply()
+    d2 = pol2.decisions["state"]
+    assert d2.codec == "rs" and d2.m == 2
+
+
+def test_policy_small_groups_never_pick_lrc():
+    eng = _policy_engine(codec="xor", k=2, m=1)
+    _inject_failures(eng, [["rack:0"], ["rack:1"]])
+    pol = ProtectionPolicy(eng)
+    pol.apply()
+    assert pol.decisions["state"].codec == "xor"  # k=2 < lrc_min_group
+
+
+def test_policy_attach_reevaluates_at_commit_and_reports():
+    eng = _policy_engine()
+    pol = ProtectionPolicy(eng).attach()
+    assert eng.checkpoint({"step": 1})
+    assert pol.evaluations == 1  # commit hook fired
+    _inject_failures(eng, [["rack:0"], ["rack:2"]])
+    assert eng.checkpoint({"step": 2})
+    assert pol.evaluations == 2 and pol.changes == 1
+    rep = pol.report()
+    assert rep["decisions"]["state"]["codec"] == "lrc"
+    assert rep["stats"]["failures"] == 2
+    # the launch report surfaces the journaled decisions
+    from repro.launch.report import policy_timeline, render_policy
+
+    rows = policy_timeline(eng.journal.events())
+    assert rows and rows[-1]["target"] == "codec"
+    assert "-> lrc" in rows[-1]["detail"]
+    assert any("adaptive protection" in ln for ln in render_policy(rows))
+
+
+# ---------------------------------------------------------------------------
+# journal-tuned heartbeat + correlated fault injection + mesh topology
+# ---------------------------------------------------------------------------
+
+def _failure_events(times):
+    return [{"kind": "failure", "ts": t, "rank": 0} for t in times]
+
+
+def test_heartbeat_tune_from_journal():
+    from repro.runtime.cluster import HeartbeatMonitor
+
+    hb = HeartbeatMonitor(4, miss_threshold=3)
+    # no journal / no fitted MTBF: the static base stands
+    assert hb.tune_from_journal(journal=[]) == 3
+    assert hb.tune_from_journal(journal=_failure_events([100.0])) == 3
+    # MTBF 1000s at 1s ticks, frac 1%: threshold relaxes to 10
+    assert hb.tune_from_journal(
+        journal=_failure_events([1000.0, 2000.0, 3000.0])
+    ) == 10
+    assert hb.miss_threshold == 10
+    # a very quiet journal is capped at base * cap_factor
+    assert hb.tune_from_journal(
+        journal=_failure_events([0.0, 1e6])
+    ) == 3 * 8
+    # a noisy journal never tunes BELOW the configured base
+    assert hb.tune_from_journal(
+        journal=_failure_events([10.0, 20.0, 30.0])
+    ) == 3
+
+
+def test_failure_injector_schedule_domain_burst():
+    from repro.runtime.failures import FailureInjector
+
+    topo = _rack_topology()
+    inj = FailureInjector(8)
+    doomed = inj.schedule_domain_burst(5, topo, 1)  # rack:1 = ranks {2, 3}
+    assert doomed == [2, 3]
+    assert inj.schedule[5] == [2, 3]
+    assert sorted(inj.kills_at_step(5)) == [2, 3]
+    assert inj.kills_at_step(5) == []  # fires exactly once
+    # checkpoint-phase variant lands on the checkpoint schedule
+    inj2 = FailureInjector(8)
+    inj2.schedule_domain_burst(7, topo, 0, kind="checkpoint")
+    assert inj2.checkpoint_schedule[7] == [0, 1]
+
+
+def test_topology_of_mesh_reads_device_ordering():
+    from types import SimpleNamespace
+
+    from repro.sharding.mesh import topology_of_mesh
+
+    devs = np.array(
+        [SimpleNamespace(id=i) for i in range(32)], dtype=object
+    ).reshape(4, 8)
+    mesh = SimpleNamespace(devices=devs, shape={"data": 4, "model": 8})
+    topo = topology_of_mesh(mesh, n_ranks=4, host_chips=8, hosts_per_rack=2)
+    # rank r leads at device 8r -> host r; racks pack 2 hosts
+    assert [lab[0] for lab in topo.labels] == [0, 1, 2, 3]
+    assert [lab[1] for lab in topo.labels] == [0, 0, 1, 1]
+    assert topo.placement_level == "rack"
+    assert placement_conflicts(
+        domain_parity_groups(4, 2, topo), topo
+    ) == []
