@@ -218,6 +218,72 @@ def run_tier_flush(
     return out
 
 
+def run_delta_ab(
+    n: int = 8, bytes_per_rank: int = 1 << 20, commits: int = 6,
+    churn: float = 0.10,
+) -> dict:
+    """Differential-checkpointing A/B at low churn (DESIGN.md §17): the same
+    contiguous ~10%-of-state mutation sequence drives a full-encode engine
+    with a plain disk rung against a delta engine with a dedup (content-
+    addressed) rung. Reports the per-commit flushed bytes both ways — the
+    headline ``delta_flush_ratio`` run.py gates at 0.35 — plus the delta
+    engine's dirty fraction, transfer bytes skipped, chunk-store dedup ratio,
+    and the async blocked time (the delta bookkeeping must not push the
+    create path >20% over the full-encode baseline)."""
+    import shutil
+    import tempfile
+
+    from repro.core import storage
+
+    tmp = tempfile.mkdtemp(prefix="bench-delta-")
+    out: dict = {}
+    try:
+        for tag, delta in (("full", False), ("delta", True)):
+            eng = CheckpointEngine(
+                n,
+                EngineConfig(
+                    parity_group=4, validate=True, delta=delta,
+                    delta_chunk_bytes=1 << 14,
+                    tiers=(storage.disk(os.path.join(tmp, tag), every=1,
+                                        dedup=delta, chunk_bytes=1 << 14),),
+                ),
+            )
+            pay = _Payload(n, bytes_per_rank)
+            eng.register("domain", pay)
+            eng.checkpoint({"step": 0})   # cold commit: full bytes either way
+            eng._join_flush()
+            best = float("inf")
+            flushed = []
+            for i in range(commits):
+                rng = np.random.default_rng(1000 + i)
+                for d in pay.data:
+                    m = max(1, int(d.size * churn))
+                    start = int(rng.integers(0, d.size - m + 1))
+                    d[start : start + m] += rng.standard_normal(m).astype(np.float32)
+                best = min(best, _blocked_checkpoint(eng, {"step": i + 1}, True))
+                eng._join_flush()
+                flushed.append(eng.stats.last_flush_bytes)
+            out[f"blocked_s_{tag}"] = best
+            out[f"flush_bytes_{tag}"] = sum(flushed) / len(flushed)
+            if delta:
+                out["dirty_fraction"] = eng.stats.last_dirty_fraction
+                out["dedup_ratio"] = eng.stats.last_dedup_ratio
+                out["transfer_bytes_skipped"] = eng.stats.last_transfer_bytes_skipped
+                out["delta_encodes"] = eng.stats.delta_encodes
+                out["chunks_written"] = eng.stats.last_flush_chunks_written
+                out["chunks_reused"] = eng.stats.last_flush_chunks_reused
+            eng.close()
+        out["delta_flush_ratio"] = (
+            out["flush_bytes_delta"] / max(out["flush_bytes_full"], 1e-9)
+        )
+        out["delta_blocked_ratio"] = (
+            out["blocked_s_delta"] / max(out["blocked_s_full"], 1e-9)
+        )
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return out
+
+
 def run_trace_overhead(
     n: int = 8, bytes_per_rank: int = 1 << 19, repeats: int = 10, batch: int = 4
 ) -> dict:
@@ -316,6 +382,24 @@ def main(smoke: bool = False) -> list[str]:
         f"GBps={tier['flush_gbps']:.2f};bytes={tier['flush_bytes']}"
     )
 
+    # -- differential checkpointing A/B at ~10% churn (DESIGN.md §17) ---------
+    delta = run_delta_ab(
+        n=8, bytes_per_rank=1 << 18 if smoke else 1 << 20,
+        commits=4 if smoke else 6,
+    )
+    lines.append(
+        f"ckpt_delta_flush,{delta['flush_bytes_delta']:.0f},"
+        f"ratio_vs_full={delta['delta_flush_ratio']:.3f};"
+        f"full_bytes={delta['flush_bytes_full']:.0f};"
+        f"dedup_ratio={delta['dedup_ratio']:.3f}"
+    )
+    lines.append(
+        f"ckpt_delta_blocked,{delta['blocked_s_delta'] * 1e6:.0f},"
+        f"full_us={delta['blocked_s_full'] * 1e6:.0f};"
+        f"dirty_fraction={delta['dirty_fraction']:.3f};"
+        f"skipped_bytes={delta['transfer_bytes_skipped']}"
+    )
+
     # -- span-tracing overhead A/B (DESIGN.md §13 budget) ---------------------
     # min-of-k over longer interleaved legs: the per-pair ratio at batch=4 /
     # repeats=5 was noisy enough to read container jitter as 19% span cost —
@@ -375,6 +459,21 @@ def main(smoke: bool = False) -> list[str]:
             "tier_flush_s": round(tier["flush_s"], 6),
             "tier_flush_bytes": tier["flush_bytes"],
             "tier_flush_gbps": round(tier["flush_gbps"], 3),
+            # differential checkpointing rows (DESIGN.md §17): flushed bytes
+            # full vs delta at ~10% churn (run.py gates the ratio at 0.35),
+            # the dirty fraction the chunk grid measured, transfer bytes the
+            # create path skipped, and the chunk store's dedup accounting
+            "delta_flush_bytes": round(delta["flush_bytes_delta"]),
+            "full_flush_bytes": round(delta["flush_bytes_full"]),
+            "delta_flush_ratio": round(delta["delta_flush_ratio"], 3),
+            "delta_blocked_ratio": round(delta["delta_blocked_ratio"], 3),
+            "delta_dirty_fraction": round(delta["dirty_fraction"], 3),
+            "delta_dedup_ratio": round(delta["dedup_ratio"], 3),
+            "delta_transfer_bytes_skipped": delta["transfer_bytes_skipped"],
+            "delta_chunks_written": delta["chunks_written"],
+            "delta_chunks_reused": delta["chunks_reused"],
+            "blocked_s_async_delta": round(delta["blocked_s_delta"], 6),
+            "blocked_s_async_full": round(delta["blocked_s_full"], 6),
             # span-tracing observability rows (DESIGN.md §13): the enabled-
             # tracing overhead the smoke gate enforces, and the async
             # engine's `eng` span label so run.py can reconstruct overlap

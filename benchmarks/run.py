@@ -54,6 +54,14 @@ SMOKE_FLUSH_OVERHEAD_CEIL = 0.2
 #: enabled-span-tracing overhead above this fails --smoke (DESIGN.md §13
 #: budget: <2% on the async create path)
 SMOKE_TRACE_OVERHEAD_CEIL = 0.02
+#: differential checkpointing (DESIGN.md §17): at ~10% churn the delta flush
+#: must move at most this fraction of the full-encode flush's bytes — the
+#: dedup chunk store's whole value proposition
+SMOKE_DELTA_FLUSH_CEIL = 0.35
+#: and the delta bookkeeping (dirty map, incremental parity, byte-compare
+#: transfer skip) must not push the async blocked window >20% over the
+#: full-encode engine's
+SMOKE_DELTA_BLOCKED_CEIL = 1.2
 #: hot-replica lazy-sync overhead (serving-shaped interval loop with a shadow
 #: team vs without) above this fails --smoke — the DESIGN.md §15 acceptance
 #: target is <=10%; the gate carries the usual 2x CI-noise headroom
@@ -181,6 +189,8 @@ def main() -> None:
         "gates": {
             "async_speedup": pipeline.get("async_speedup"),
             "tier_flush_overhead": pipeline.get("tier_flush_overhead"),
+            "delta_flush_ratio": pipeline.get("delta_flush_ratio"),
+            "delta_blocked_ratio": pipeline.get("delta_blocked_ratio"),
             "trace_overhead_enabled": pipeline.get("trace_overhead_enabled"),
             "replica_sync_overhead": failover.get("replica_sync_overhead"),
             "lrc_repair_ratio": locality.get("lrc_repair_ratio"),
@@ -214,6 +224,29 @@ def main() -> None:
                 f"(> {100 * SMOKE_FLUSH_OVERHEAD_CEIL:.0f}%; tier-less "
                 f"{pipeline.get('blocked_s_async_tierless')}s vs flush "
                 f"{pipeline.get('blocked_s_async_flush')}s)",
+                file=sys.stderr,
+            )
+            failed += 1
+    if smoke and pipeline and "delta_flush_ratio" in pipeline:
+        ratio = pipeline["delta_flush_ratio"]
+        if ratio > SMOKE_DELTA_FLUSH_CEIL:
+            print(
+                f"# delta-flush regression: at ~10% churn the dedup flush "
+                f"moved {100 * ratio:.0f}% of the full flush's bytes "
+                f"(> {100 * SMOKE_DELTA_FLUSH_CEIL:.0f}%; full "
+                f"{pipeline.get('full_flush_bytes')}B vs delta "
+                f"{pipeline.get('delta_flush_bytes')}B)",
+                file=sys.stderr,
+            )
+            failed += 1
+        blocked = pipeline.get("delta_blocked_ratio", 0.0)
+        if blocked > SMOKE_DELTA_BLOCKED_CEIL:
+            print(
+                f"# delta blocked-time regression: the differential create "
+                f"path runs {blocked:.2f}x the full-encode blocked window "
+                f"(> {SMOKE_DELTA_BLOCKED_CEIL}; full "
+                f"{pipeline.get('blocked_s_async_full')}s vs delta "
+                f"{pipeline.get('blocked_s_async_delta')}s)",
                 file=sys.stderr,
             )
             failed += 1

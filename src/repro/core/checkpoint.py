@@ -98,6 +98,13 @@ _ENGINE_SEQ = itertools.count()
 _DECODE_RATE: dict[str, float] = {}
 _DECODE_RATE_LOCK = threading.Lock()
 
+#: Process-wide encode-rate record (range bytes/s per codec name) — the
+#: create-side twin of ``_DECODE_RATE``, feeding the adaptive encode-chunk
+#: planner (ROADMAP item 1 stretch: the create-side host encode runs through
+#: the same measured-rate / pow2-bucket / cpu-aware plan as restore).
+_ENCODE_RATE: dict[str, float] = {}
+_ENCODE_RATE_LOCK = threading.Lock()
+
 
 class DistributedEntity(Protocol):
     """An entity whose snapshot is sharded across failure-domain ranks."""
@@ -166,6 +173,26 @@ class EngineConfig:
     # nonzero value pins legacy fixed-size chunks and disables both
     # adaptations (tests pin tiny values to force multi-chunk coverage).
     restore_chunk_bytes: int = 0
+    # CREATE-side encode chunking (the restore planner's twin, ROADMAP item
+    # 1 stretch). 0 — the default — sizes encode ranges from the measured
+    # per-codec encode rate (pow2 buckets, cpu-aware: with no realizable
+    # parallelism the whole unit encodes as a single range, i.e. exactly the
+    # legacy one-call shape). >0 pins fixed-size ranges (4-aligned); -1
+    # disables chunking and always calls ``codec.encode_into`` whole.
+    encode_chunk_bytes: int = 0
+    # Differential checkpointing (DESIGN.md §17). When on, the encode stage
+    # computes each member's exchange checksum per chunk of a fixed grid
+    # (partials recombine to the exact monolithic Fletcher sums) and
+    # replicates the chunk table with the manifests; the next capture diffs
+    # against the committed table to (a) patch parity incrementally —
+    # ``parity ^= G · (new ^ old)`` over merged dirty ranges only, exact by
+    # GF(2^8) linearity — when the dirty fraction is under
+    # ``delta_crossover``, and (b) skip re-copying stripe chunks the holder
+    # arena already holds. Dedup-enabled persistent tiers (TierSpec.dedup)
+    # additionally flush only content-new chunks to a shared chunk store.
+    delta: bool = False
+    delta_chunk_bytes: int = 1 << 20   # dirty-map chunk grid (4-aligned)
+    delta_crossover: float = 0.6       # dirty fraction beyond which full re-encode wins
     # GF(2^8) host backend override: "table" | "swar" | "jax" forces that
     # backend process-wide (gf256.set_backend); "" keeps the microbenchmark
     # probe's winner (overridable again via env REPRO_GF_BACKEND).
@@ -243,6 +270,25 @@ _STATS_METRICS: dict[str, tuple[str, str, type, str]] = {
                          "Bytes the last flush wrote."),
     "last_flush_wait_s": ("gauge", "tier_last_flush_wait_seconds", float,
                           "Capture time spent joining a flush (bank conflict)."),
+    # Differential checkpointing (DESIGN.md §17):
+    "last_dirty_fraction": ("gauge", "ckpt_last_dirty_fraction", float,
+                            "Dirty-chunk byte fraction of the last delta capture."),
+    "delta_encodes": ("counter", "ckpt_delta_encode_total", int,
+                      "Units whose parity was patched incrementally."),
+    "full_encodes": ("counter", "ckpt_full_encode_total", int,
+                     "Units re-encoded in full under delta mode."),
+    "last_transfer_bytes_skipped": (
+        "gauge", "ckpt_last_transfer_bytes_skipped", int,
+        "Stripe bytes the last transfer left in place (unchanged chunks)."),
+    "last_flush_chunks_written": (
+        "gauge", "tier_last_flush_chunks_written", int,
+        "New chunk objects the last dedup flush stored."),
+    "last_flush_chunks_reused": (
+        "gauge", "tier_last_flush_chunks_reused", int,
+        "Chunk references the last dedup flush served from the store."),
+    "last_dedup_ratio": ("gauge", "tier_last_dedup_ratio", float,
+                         "Stored/logical byte ratio of the last dedup flush "
+                         "(lower = more dedup)."),
 }
 
 
@@ -365,6 +411,62 @@ class _PendingCheckpoint:
     # Generation this snapshot becomes when it commits (stats.created + 1 at
     # capture) — the label that ties every span of one checkpoint together.
     gen: int = 0
+    # Differential bookkeeping (cfg.delta, DESIGN.md §17), all filled by the
+    # drain like exch_sums: the per-(rank, entity) chunk-grid Fletcher
+    # partials of this capture's exchange payloads (replicated in meta — the
+    # next capture's dirty-map baseline), the scratch-parity validity
+    # entries staged for commit, and the capture's dirty/skip byte tally.
+    chunk_sums: dict = field(default_factory=dict)
+    delta_enc: dict = field(default_factory=dict)
+    dirty_bytes: int = 0
+    logical_bytes: int = 0
+    skipped_bytes: int = 0
+
+
+def _chunk_checksums(flat: np.ndarray, step: int) -> tuple:
+    """Per-chunk Fletcher partials over the ``step``-grid (step 4-aligned,
+    only the last chunk ragged). Linearity makes them recombinable: the
+    chunk at word offset ``o`` contributes ``s1 += c1; s2 += c2 + o·c1``,
+    so the combined sums equal a monolithic ``np_checksum``."""
+    return tuple(
+        np_checksum(flat[lo : lo + step]) for lo in range(0, flat.nbytes, step)
+    )
+
+
+def _combine_checksums(parts: tuple, step: int) -> tuple[int, int]:
+    s1 = s2 = 0
+    words = step // 4
+    for ci, (c1, c2) in enumerate(parts):
+        s1 = (s1 + c1) & 0xFFFFFFFF
+        s2 = (s2 + c2 + ci * words * c1) & 0xFFFFFFFF
+    return s1, s2
+
+
+def _merge_chunk_ranges(idx: list[int], step: int, nbytes: int) -> list:
+    """Dirty chunk indices -> merged, clipped [lo, hi) byte ranges."""
+    ranges: list[list[int]] = []
+    for ci in idx:
+        lo, hi = ci * step, min(ci * step + step, nbytes)
+        if ranges and ranges[-1][1] == lo:
+            ranges[-1][1] = hi
+        else:
+            ranges.append([lo, hi])
+    return [(lo, hi) for lo, hi in ranges]
+
+
+def _copy_dirty(dst: np.ndarray, src: np.ndarray, step: int) -> int:
+    """Copy only the step-grid chunks of ``src`` that differ from what
+    ``dst`` (the holder arena's previous content) already holds; returns the
+    bytes left in place. Exact — it compares the actual bytes, so a freshly
+    allocated (garbage) arena simply copies everything."""
+    skipped = 0
+    for lo in range(0, src.nbytes, step):
+        hi = min(lo + step, src.nbytes)
+        if np.array_equal(dst[lo:hi], src[lo:hi]):
+            skipped += hi - lo
+        else:
+            np.copyto(dst[lo:hi], src[lo:hi])
+    return skipped
 
 
 class CheckpointEngine:
@@ -396,6 +498,13 @@ class CheckpointEngine:
         # would alias the same buffers.
         self._restore_plan_cache: tuple[Any, dict[tuple[int, str], Any]] | None = None
         self._enc_scratch: dict[Any, np.ndarray] = {}  # transient blob accumulators
+        # Differential checkpointing (DESIGN.md §17): which (group, entity)
+        # scratch arenas still hold the COMMITTED generation's parity, and
+        # for which codec/member layout — the baseline incremental patching
+        # requires. Invalidated wholesale on aborts/discards/escalations:
+        # a full re-encode is always correct, a stale baseline never is.
+        self._delta_enc: dict[tuple[int, str], tuple] = {}
+        self._delta_lock = threading.Lock()  # pending dirty/skip tallies
         # Storage-tier ladder (DESIGN.md §12): rung 0 is the diskless
         # HostStore set above; persistent rungs flush committed generations
         # in the background and feed escalating recovery.
@@ -621,7 +730,9 @@ class CheckpointEngine:
         try:
             with _TR.span("capture", eng=self._obs_id, gen=gen):
                 self._fault_hook("before_create")
-                packed_partner, manifests, exch_sums = self._capture(alive0, meta)
+                packed_partner, manifests, exch_sums, chunk_sums = self._capture(
+                    alive0, meta
+                )
                 self._fault_hook("after_create")
         except FaultDuringCheckpoint as e:
             log.warning("checkpoint aborted during create: %s", e)
@@ -639,7 +750,8 @@ class CheckpointEngine:
                 phase="capture",
             )
         pending = _PendingCheckpoint(
-            packed_partner, manifests, alive0, t0, exch_sums=exch_sums, gen=gen
+            packed_partner, manifests, alive0, t0, exch_sums=exch_sums,
+            chunk_sums=chunk_sums, gen=gen,
         )
         self._pending = pending
         if background is None:
@@ -650,7 +762,9 @@ class CheckpointEngine:
 
     def _capture(
         self, alive0: set[int], meta: dict[str, Any] | None
-    ) -> tuple[dict[str, list[tuple[Any, Manifest]]], dict[tuple[int, str], Any], dict]:
+    ) -> tuple[
+        dict[str, list[tuple[Any, Manifest]]], dict[tuple[int, str], Any], dict, dict
+    ]:
         """Serialize every entity's per-rank shards directly into host-store
         arenas (one memcpy per leaf, zero steady-state allocation) and stage
         the writable payloads. Returns the exchange buffers the pipeline
@@ -717,6 +831,13 @@ class CheckpointEngine:
         # the commit because the swap always follows the drain.
         exch_sums: dict[tuple[int, str], Any] = {}
 
+        # Per-chunk Fletcher partials of the same exchange payloads
+        # (cfg.delta, DESIGN.md §17), replicated exactly like exch_sums and
+        # also filled by the drain's encode stage: the NEXT capture's
+        # dirty-map baseline — any survivor carries it, so the diff works
+        # after failures just like restore verification does.
+        chunk_sums: dict[tuple[int, str], Any] = {}
+
         # Per-entity codec record (DESIGN.md §16): replicated with every
         # store's meta like the manifests, so restore decodes with the codec
         # that encoded even if the policy has since changed its mind.
@@ -741,9 +862,11 @@ class CheckpointEngine:
                     payload.meta.setdefault("checksums", {})[name] = np_checksum(flat)
             if self.cfg.validate:
                 payload.meta["exch_checksums"] = exch_sums
+            if self.cfg.delta:
+                payload.meta["exch_chunk_sums"] = chunk_sums
             self.stores[r].buffer.write(payload)
         self.stats.last_bytes_staged = bytes_staged
-        return packed_partner, manifests, exch_sums
+        return packed_partner, manifests, exch_sums, chunk_sums
 
     # ------------------------------------------------------------------ #
     # phase B: the chunked encode/transfer/verify pipeline
@@ -843,7 +966,7 @@ class CheckpointEngine:
                 u = units[i - 1]
                 with _TR.span("transfer", eng=eng, gen=gen, group=u[0], entity=u[3]):
                     t = time.perf_counter()
-                    nb = self._transfer_unit(u, encoded.pop(i - 1))
+                    nb = self._transfer_unit(u, encoded.pop(i - 1), pending)
                     dt = time.perf_counter() - t
                     self._h_stage.observe(dt, phase="transfer")
                     if dt > 0:
@@ -865,10 +988,30 @@ class CheckpointEngine:
         Also records each member's exchange checksum into the replicated
         ``exch_sums`` table (the restore VERIFY reference) — every (rank,
         entity) belongs to exactly one unit, so multi-worker shards never
-        write the same key."""
+        write the same key.
+
+        Under ``cfg.delta`` the member checksums are computed per chunk of
+        the dirty-map grid (the partials recombine to the exact monolithic
+        Fletcher sums — one pass serves both tables) and diffed against the
+        committed generation's replicated chunk table; when the scratch
+        arenas still hold the committed parity and the dirty fraction is
+        under the crossover, the blobs are patched in place over the merged
+        dirty ranges instead of re-encoded (DESIGN.md §17)."""
         gi, grp, placements, name = unit
         codec = self._codec_for(name)
+        n_out = len(placements)
+        delta_on = (
+            self.cfg.delta
+            and codec.striped
+            and not (self.cfg.compress and codec.compressible)
+        )
+        step = self._delta_step()
+        prev_chunks = self._committed_chunk_sums() if delta_on else {}
         bufs = []
+        # Per member: merged dirty [lo, hi) ranges, or None = no usable
+        # baseline (first capture, layout change) — treated as fully dirty.
+        dirty: list[Any] = []
+        dirty_bytes = logical = 0
         for m in grp.members:
             flat, man = pending.packed[name][m]
             if self.cfg.compress and codec.compressible:
@@ -886,11 +1029,34 @@ class CheckpointEngine:
                     if payload is not None:
                         with st.lock:
                             payload.own_exch[name] = (flat, man)
+            elif delta_on:
+                parts = _chunk_checksums(flat, step)
+                pending.chunk_sums[(m, name)] = (step, flat.nbytes, parts)
+                if self.cfg.validate:
+                    # Same reference np_checksum(flat) would produce, from
+                    # the partials already in hand (linearity — no 2nd pass).
+                    pending.exch_sums[(m, name)] = _combine_checksums(parts, step)
+                prev = prev_chunks.get((m, name))
+                if prev is not None and prev[0] == step and prev[1] == flat.nbytes:
+                    idx = [
+                        ci for ci, (a, b) in enumerate(zip(parts, prev[2])) if a != b
+                    ]
+                    ranges = _merge_chunk_ranges(idx, step, flat.nbytes)
+                    dirty.append(ranges)
+                    dirty_bytes += sum(hi - lo for lo, hi in ranges)
+                else:
+                    dirty.append(None)
+                    dirty_bytes += flat.nbytes
+                logical += flat.nbytes
             elif self.cfg.validate:
                 # Compressed blobs skip restore-verify (their manifest is
                 # tagged); everything else gets a capture-state reference.
                 pending.exch_sums[(m, name)] = np_checksum(flat)
             bufs.append(flat)
+        if delta_on:
+            with self._delta_lock:
+                pending.dirty_bytes += dirty_bytes
+                pending.logical_bytes += logical
         scratch_key = (gi, name)
 
         def lease(b: int, nbytes: int) -> np.ndarray:
@@ -900,17 +1066,166 @@ class CheckpointEngine:
                 self._enc_scratch[(scratch_key, b)] = buf
             return buf[:nbytes]
 
-        return codec.encode_into(bufs, len(placements), lease)
+        G = (
+            codec.encode_matrix(len(bufs))
+            if self.cfg.encode_chunk_bytes >= 0
+            else None
+        )
+        if G is not None and G.shape[0] < n_out:
+            G = None  # matrix can't cover this layout: defensive fallback
+        if delta_on and G is not None:
+            # Scratch arenas holding the committed parity under this exact
+            # codec/member layout license incremental patching; the staged
+            # validity entry commits with the snapshot (finalize_async).
+            entry = (self._codec_spec(codec), tuple(b.nbytes for b in bufs), n_out)
+            blobs = self._try_delta_encode(
+                gi, name, grp, bufs, dirty, dirty_bytes, logical,
+                G[:n_out], n_out, lease, entry, pending,
+            )
+            pending.delta_enc[scratch_key] = (pending.gen,) + entry
+            if blobs is not None:
+                self.stats.delta_encodes += 1
+                return blobs
+            self.stats.full_encodes += 1
+        elif delta_on:
+            self.stats.full_encodes += 1
+        if G is not None and codec.striped:
+            return self._encode_blobs_chunked(G[:n_out], bufs, n_out, lease)
+        return codec.encode_into(bufs, n_out, lease)
 
-    def _transfer_unit(self, unit, blobs: list[np.ndarray]) -> int:
+    def _try_delta_encode(
+        self, gi, name, grp, bufs, dirty, dirty_bytes, logical,
+        G, n_out, lease, entry, pending,
+    ) -> list[np.ndarray] | None:
+        """Incremental parity patch (DESIGN.md §17): ``parity ^= G·(new^old)``
+        over the merged dirty ranges — exact by GF(2^8) linearity (addition
+        IS xor), bit-identical to a full re-encode of the new members.
+        Returns None when any precondition fails (the caller re-encodes in
+        full, which is always correct): no committed baseline for the scratch
+        parity, a member store without its committed payload, a changed
+        payload length, a member with no chunk-table baseline, or a dirty
+        fraction past the crossover where patching stops paying."""
+        if logical == 0 or dirty_bytes > self.cfg.delta_crossover * logical:
+            return None
+        if self._delta_enc.get((gi, name)) != (pending.gen - 1,) + entry:
+            return None
+        if any(r is None for r in dirty):
+            return None
+        olds = []
+        for i, m in enumerate(grp.members):
+            st = self.stores.get(m)
+            if st is None or not st.alive or not st.buffer.valid:
+                return None
+            ro = st.buffer.read_only
+            old = ro.own_exch.get(name, ro.own.get(name))
+            if old is None or old[0].nbytes != bufs[i].nbytes:
+                return None
+            olds.append(old[0])
+        n = gf256.padded_len(bufs)
+        blobs = [lease(b, n) for b in range(n_out)]
+        if any(blob.nbytes != n for blob in blobs):
+            return None  # lease shrank/grew unexpectedly (defensive)
+        t = time.perf_counter()
+        patched = 0
+        for i, ranges in enumerate(dirty):
+            col = G[:, i : i + 1]
+            for lo, hi in ranges:
+                diff = np.bitwise_xor(bufs[i][lo:hi], olds[i][lo:hi])
+                gf256.gf_matrix_addmul_into(
+                    [blob[lo:hi] for blob in blobs], [diff], col,
+                    0, hi - lo, accumulate=True,
+                )
+                patched += hi - lo
+        if patched:
+            self._observe_encode_rate(patched, time.perf_counter() - t)
+        return blobs
+
+    # -- adaptive encode-chunk planner (create-side twin of DESIGN.md §14) - #
+    def _encode_rate(self) -> float:
+        """Sustained encode rate (range bytes/s) for the active codec: this
+        process's peak-with-decay record, else the GF probe (same /4 seed as
+        the decode planner — both sides run the same matrix primitive)."""
+        with _ENCODE_RATE_LOCK:
+            prior = _ENCODE_RATE.get(self.codec.name)
+        if prior is not None:
+            return prior
+        return max(gf256.probed_gbps() * 1e9 / 4.0, 1e6)
+
+    def _observe_encode_rate(self, nbytes: int, dt: float) -> None:
+        if nbytes <= 0 or dt <= 0.0:
+            return
+        rate = nbytes / dt
+        with _ENCODE_RATE_LOCK:
+            prev = _ENCODE_RATE.get(self.codec.name)
+            _ENCODE_RATE[self.codec.name] = (
+                rate if prev is None else max(rate, 0.98 * prev)
+            )
+
+    def _plan_encode_step(self) -> int:
+        """Create-side chunk size: the restore planner's rule verbatim —
+        measured rate × overhead budget, pow2-bucketed, clamped; with no
+        realizable parallelism chunking is pure overhead, so one range."""
+        cb = self.cfg.encode_chunk_bytes
+        if cb > 0:
+            return max(4, cb) & ~3
+        if self._effective_workers() <= 1:
+            return self._CHUNK_MAX
+        step = int(self._encode_rate() * self._CHUNK_OVERHEAD_S
+                   / self._CHUNK_OVERHEAD_FRAC)
+        step = max(self._CHUNK_MIN, min(self._CHUNK_MAX, step))
+        return 1 << (step - 1).bit_length()
+
+    def _encode_blobs_chunked(self, G, bufs, n_out, lease) -> list[np.ndarray]:
+        """One unit's blobs encoded as planned [lo, hi) ranges through the
+        same GF matrix primitive the monolithic ``rs_encode`` runs — per-byte
+        math, so the assembled blobs are bit-identical — feeding the measured
+        encode rate back to the planner per range (ROADMAP item 1 stretch)."""
+        n = gf256.padded_len(bufs)
+        blobs = [lease(b, n) for b in range(n_out)]
+        step = self._plan_encode_step()
+        for lo in range(0, n, step):
+            hi = min(lo + step, n)
+            t = time.perf_counter()
+            gf256.gf_matrix_addmul_into(blobs, bufs, G, lo, hi, accumulate=False)
+            self._observe_encode_rate(hi - lo, time.perf_counter() - t)
+        return blobs
+
+    def _delta_step(self) -> int:
+        """Dirty-map chunk grid (4-aligned — Fletcher partials only
+        recombine on word boundaries; floored so tiny configs can't explode
+        the table)."""
+        return max(4096, self.cfg.delta_chunk_bytes) & ~3
+
+    def _committed_chunk_sums(self) -> dict:
+        """The committed generation's replicated chunk-digest table (empty
+        for the first capture or a pre-§17 checkpoint — everything dirty)."""
+        for st in self.stores.values():
+            if st.alive and st.buffer.valid:
+                table = st.buffer.read_only.meta.get("exch_chunk_sums")
+                if table:
+                    return table
+        return {}
+
+    def _transfer_unit(
+        self, unit, blobs: list[np.ndarray], pending: _PendingCheckpoint
+    ) -> int:
         """TRANSFER stage: stripe the blobs onto their holder stores. Striped
         codecs copy each stripe into a holder-owned arena (the simulated
         network hop; blobs live in transient scratch). Full-copy codecs store
         by reference — whole copies stay memcpy-free, and the referenced flat
         is the origin's arena view from the same staging bank, so it commits
-        and retires together with the rest of the snapshot."""
+        and retires together with the rest of the snapshot.
+
+        Under ``cfg.delta`` each stripe copies only the dirty-grid chunks
+        that differ from the holder arena's current content (exact byte
+        comparison — the arena holds whatever the last lease of the same
+        staging bank left, so garbage or a stale generation simply copies).
+        The arena keys and sizes are untouched either way: steady-state
+        leases return the identical base pointers delta on or off."""
         gi, grp, placements, name = unit
         total = 0
+        skipped = 0
+        step = self._delta_step()
         by_ref = not self._codec_for(name).striped
         for b, (blob, holders) in enumerate(zip(blobs, placements)):
             blob = np.asarray(blob).reshape(-1)
@@ -937,7 +1252,10 @@ class CheckpointEngine:
                 piece = stripes[j]
                 if not by_ref:
                     dst = st.lease(("parity", gi, name, b, j), piece.nbytes)
-                    np.copyto(dst, piece)
+                    if self.cfg.delta:
+                        skipped += _copy_dirty(dst, piece, step)
+                    else:
+                        np.copyto(dst, piece)
                     piece = dst
                 # Holder stores are shared across units: when the drain runs
                 # on several workers, the payload-dict write synchronizes on
@@ -946,6 +1264,9 @@ class CheckpointEngine:
                 with st.lock:
                     payload.parity.setdefault(gi, {})[(name, b, j)] = piece
                 total += piece.nbytes
+        if skipped:
+            with self._delta_lock:
+                pending.skipped_bytes += skipped
         return total
 
     def _verify_unit(self, unit, verified: set) -> None:
@@ -1006,6 +1327,9 @@ class CheckpointEngine:
             log.warning("checkpoint aborted: %s", e)
             for s in self.stores.values():
                 s.buffer.discard_writable()
+            # The drain may have overwritten scratch with the aborted
+            # generation's parity: no committed baseline survives it.
+            self._delta_enc.clear()
             self.stats.aborted += 1
             self.journal.record("abort", phase="finalize", gen=gen, cause=str(e))
             return False
@@ -1023,6 +1347,15 @@ class CheckpointEngine:
         self.stats.last_bytes_per_rank = pending.bytes_exchanged // max(
             len(pending.alive0), 1
         )
+        if self.cfg.delta:
+            # The scratch arenas now hold THIS committed generation's parity:
+            # the staged validity entries become the next capture's baseline.
+            self._delta_enc.update(pending.delta_enc)
+            self.stats.last_dirty_fraction = (
+                pending.dirty_bytes / pending.logical_bytes
+                if pending.logical_bytes else 0.0
+            )
+            self.stats.last_transfer_bytes_skipped = pending.skipped_bytes
         self._maybe_flush_tiers()
         # Commit-point hooks: the adaptive protection policy re-evaluates
         # here (DESIGN.md §16) — after the swap, so a policy flip can never
@@ -1137,6 +1470,17 @@ class CheckpointEngine:
             self.stats.tier_flushes += len(tiers)
             self.stats.last_flush_s = time.perf_counter() - t0
             self.stats.last_flush_bytes = total
+            dedup = next(
+                (t.last_dedup for t in tiers if getattr(t, "last_dedup", None)),
+                None,
+            )
+            if dedup is not None:
+                self.stats.last_flush_chunks_written = dedup["chunks_written"]
+                self.stats.last_flush_chunks_reused = dedup["chunks_reused"]
+                self.stats.last_dedup_ratio = (
+                    dedup["stored_bytes"] / dedup["logical_bytes"]
+                    if dedup["logical_bytes"] else 0.0
+                )
             self.journal.record(
                 "flush", ok=True, gen=snap.created, bytes=total,
                 duration_s=self.stats.last_flush_s, n_ranks=snap.n_ranks,
@@ -1185,6 +1529,9 @@ class CheckpointEngine:
         generation. May resize the engine to the stored world size — the
         elastic path maps it back onto the caller's world."""
         self._join_flush()  # an in-flight flush may be committing the newest gen
+        # Rehydration replaces the committed payloads: scratch parity no
+        # longer corresponds to them, so delta baselines die here.
+        self._delta_enc.clear()
         errors: list[str] = []
         for tier in self.persistent_tiers:
             try:
@@ -1223,6 +1570,8 @@ class CheckpointEngine:
                     pass
             for s in self.stores.values():
                 s.buffer.discard_writable()
+            # The discarded drain may have left its parity in scratch.
+            self._delta_enc.clear()
             self.stats.aborted += 1
 
     def drain_done(self) -> bool:
@@ -2148,6 +2497,7 @@ class CheckpointEngine:
         # checkpointing immediately (trainer/server do).
         self.n_ranks = new_n_ranks
         self.stores = {r: HostStore(r) for r in range(new_n_ranks)}
+        self._delta_enc.clear()  # scratch parity belongs to the old world
         if self.topology is not None:
             # The failure-domain map resizes with the world (regular shapes
             # re-derive; _groups re-packs for the new rank space on next use).

@@ -123,6 +123,18 @@ class RedundancyCodec:
         allocation."""
         return self.encode(bufs, n_out)
 
+    def encode_matrix(self, k: int) -> np.ndarray | None:
+        """The (n_out, k) GF(2^8) generator behind ``encode`` for a group of
+        ``k`` members, or None when the encode is not a pure GF matrix
+        product (copy, or a user subclass with a custom encode). A non-None
+        matrix licenses two engine optimizations, both exact by GF
+        linearity: chunked encodes (``blob[lo:hi] = G · bufs[:, lo:hi]``
+        through the adaptive planner) and incremental parity patching
+        (``parity ^= G · (new ^ old)`` over dirty byte ranges only —
+        GF(2^8) addition IS xor). Bit-identity with the full ``encode`` is
+        the contract; the differential-checkpoint tests sweep it."""
+        return None
+
     def placement(
         self, groups: list[dist.ParityGroup], gi: int, n_ranks: int
     ) -> list[tuple[int, ...]]:
@@ -396,6 +408,11 @@ class XorCodec(GroupCodecBase):
         out = lease(0, parity_mod.parity_nbytes(bufs))
         return [parity_mod.encode_parity(bufs, out=out)]
 
+    def encode_matrix(self, k):
+        if type(self).encode is not XorCodec.encode:
+            return None  # custom encode: no provable generator
+        return np.ones((1, k), np.uint8)
+
     def decode(self, present, blobs, missing):
         if len(missing) > 1:
             raise CodecDecodeError(f"{len(missing)} losses in one group; XOR tolerates 1")
@@ -451,6 +468,11 @@ class RSCodec(GroupCodecBase):
         n = gf256.padded_len(bufs)
         out = [lease(b, n) for b in range(self.m)]
         return gf256.rs_encode(bufs, self.m, self.coef, out=out)
+
+    def encode_matrix(self, k):
+        if type(self).encode is not RSCodec.encode:
+            return None  # custom encode: no provable generator
+        return self.coef[:, :k]
 
     def decode(self, present, blobs, missing):
         if len(missing) > self.m:
@@ -559,6 +581,11 @@ class LRCCodec(GroupCodecBase):
 
     def _generator(self):
         return self.coef
+
+    def encode_matrix(self, k):
+        if type(self).encode is not LRCCodec.encode:
+            return None  # custom encode: no provable generator
+        return self.coef[:, :k]
 
     def _row_support(self, j: int) -> set[int]:
         return {int(s) for s in np.nonzero(self.coef[j])[0]}

@@ -689,8 +689,14 @@ _DBUF_MIN_BYTES = int(os.environ.get("REPRO_D2H_DBUF_MIN_BYTES", 32 << 20))
 
 
 def staged_snapshot_fetch(
-    prog: SnapshotProgram, state: Any, *, double_buffer: bool | None = None
-) -> dict[str, Any]:
+    prog: SnapshotProgram,
+    state: Any,
+    *,
+    double_buffer: bool | None = None,
+    skip_chunks: Any = None,
+    prev_chunks: list | None = None,
+    return_chunks: bool = False,
+) -> Any:
     """Drive the snapshot's D2H staging through the per-chunk programs:
     dispatch chunk *g+1*'s fused encode, then start chunk *g*'s asynchronous
     device→host copy (``copy_to_host_async``) — the DMA of stripe *g*
@@ -705,11 +711,34 @@ def staged_snapshot_fetch(
     Returns the host (numpy) payload, merged across chunks — byte-identical
     to fetching ``prog.snapshot_fn``'s payload minus the folded checksum
     (the staged path recomputes the handshake checksum host-side).
+
+    Dirty-aware staging (DESIGN.md §17): ``skip_chunks`` names chunk indices
+    whose state the caller's dirty map proved unchanged since the previous
+    capture; those programs are neither dispatched nor fetched — the
+    corresponding entry of ``prev_chunks`` (the prior call's host-resident
+    chunk payloads, obtained via ``return_chunks=True``) is reused verbatim,
+    so D2H bytes scale with *change* instead of state size. A skip entry
+    without a usable previous chunk falls back to a normal fetch. With
+    ``return_chunks=True`` the call returns ``(payload, host_chunks)``;
+    feed ``host_chunks`` back as the next call's ``prev_chunks``.
     """
     if double_buffer is None:
         double_buffer = prog.pcie_bytes >= _DBUF_MIN_BYTES
+    skip = set(skip_chunks) if skip_chunks is not None else set()
     fetched: list[Any] = []
+    reused: set[int] = set()
     for i, fn in enumerate(prog.snapshot_chunk_fns):
+        if (
+            i in skip
+            and prev_chunks is not None
+            and i < len(prev_chunks)
+            and prev_chunks[i] is not None
+        ):
+            # Host bytes of the unchanged chunk, from the previous capture:
+            # no device dispatch, no D2H.
+            fetched.append(prev_chunks[i])
+            reused.add(i)
+            continue
         with _TR.span("d2h_dispatch", chunk=i, double_buffer=double_buffer):
             out = fn(state)  # async dispatch: the device starts this chunk's encode
             if double_buffer:
@@ -719,15 +748,24 @@ def staged_snapshot_fetch(
             else:
                 fetched.append(jax.tree.map(np.asarray, out))  # blocking fetch
     payload: dict[str, Any] = {}
+    host_chunks: list[Any] = []
     for i, out in enumerate(fetched):
-        if double_buffer:
+        if double_buffer and i not in reused:
             with _TR.span("d2h_merge", chunk=i):
                 out = jax.tree.map(np.asarray, out)  # already host-resident
+        host_chunks.append(out)
         for key, val in out.items():
             if isinstance(val, dict) and isinstance(payload.get(key), dict):
                 payload[key].update(val)
+            elif isinstance(val, dict):
+                # Copy on first merge: the payload must never alias a chunk
+                # dict — reused prev_chunks entries are cached across calls,
+                # and a later chunk's update() would scribble into the cache.
+                payload[key] = dict(val)
             else:
                 payload[key] = val
+    if return_chunks:
+        return payload, host_chunks
     return payload
 
 

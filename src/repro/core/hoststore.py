@@ -74,6 +74,12 @@ class HostStore:
         self.rank = rank
         self.buffer = DoubleBuffer(f"host{rank}")
         self.alive = True
+        # Bumped on every wipe/revive. Delta bookkeeping keys cached chunk
+        # digests by (epoch, pointer/generation): a rebuilt store may reuse
+        # both the arena addresses (np.empty recycling freed pages) and the
+        # reset generation numbers, so the epoch is what makes stale entries
+        # unambiguously detectable (the classic ABA guard).
+        self.epoch = 0
         # (bank, key) -> reusable uint8 arena; see module docstring.
         self._arenas: dict[tuple[int, Any], np.ndarray] = {}
         # Serializes arena growth + payload-dict writes when the pipeline
@@ -110,6 +116,7 @@ class HostStore:
         """Host failure: all in-memory snapshot data on this rank is gone."""
         self.buffer = DoubleBuffer(f"host{self.rank}")
         self._arenas = {}
+        self.epoch += 1
         self.alive = False
 
     def revive(self, rank: int | None = None) -> None:
@@ -118,6 +125,7 @@ class HostStore:
             self.rank = rank
         self.buffer = DoubleBuffer(f"host{self.rank}")
         self._arenas = {}
+        self.epoch += 1
         self.alive = True
 
     @property

@@ -46,6 +46,7 @@ legacy ``index.pkl`` checkpoints, so old jobs stay restorable.
 
 from __future__ import annotations
 
+import hashlib
 import os
 import pickle
 import re
@@ -89,6 +90,7 @@ class TierSpec:
     compress: bool = False
     chunk_bytes: int = 4 << 20     # flush/verify chunk granularity
     keep: int = 2                  # committed generations retained (>= 2)
+    dedup: bool = False            # content-addressed delta generations (§17)
 
 
 def diskless() -> TierSpec:
@@ -97,19 +99,23 @@ def diskless() -> TierSpec:
 
 
 def disk(path: str, every: int = 4, *, compress: bool = False,
-         chunk_bytes: int = 4 << 20, keep: int = 2) -> TierSpec:
+         chunk_bytes: int = 4 << 20, keep: int = 2,
+         dedup: bool = False) -> TierSpec:
     """Node-local (or job-local) disk rung: survives beyond-tolerance bursts
-    and full-job restarts on the same storage."""
+    and full-job restarts on the same storage. ``dedup=True`` switches the
+    rung to content-addressed delta generations (DESIGN.md §17): each flush
+    writes only chunk objects absent from the store plus a small manifest."""
     return TierSpec(kind="disk", path=path, every=every, compress=compress,
-                    chunk_bytes=chunk_bytes, keep=keep)
+                    chunk_bytes=chunk_bytes, keep=keep, dedup=dedup)
 
 
 def shared_dir(path: str, every: int = 16, *, compress: bool = False,
-               chunk_bytes: int = 4 << 20, keep: int = 2) -> TierSpec:
+               chunk_bytes: int = 4 << 20, keep: int = 2,
+               dedup: bool = False) -> TierSpec:
     """Shared-filesystem rung (parallel FS / object store mount): slowest,
     survives node loss — the last line of the ladder."""
     return TierSpec(kind="shared", path=path, every=every, compress=compress,
-                    chunk_bytes=chunk_bytes, keep=keep)
+                    chunk_bytes=chunk_bytes, keep=keep, dedup=dedup)
 
 
 # ---------------------------------------------------------------------------
@@ -204,9 +210,32 @@ class DisklessTier(StorageTier):
 # chunked VERIFY stage.
 
 _MAGIC = b"RTIER001"
+_MAGIC_DELTA = b"RTIERD01"   # delta rank file: header+tail only, chunks by ref
 _CHUNK_HDR = struct.Struct("<II")
 _TAIL = struct.Struct("<Q8s")
 _ALIGN = 8  # blob starts are 8-aligned so loaded views never misalign
+_DIGEST_BYTES = 16  # BLAKE2b-128 chunk identity in the content-addressed store
+
+
+def _iter_stream_chunks(blobs: list[np.ndarray], step: int):
+    """Yield the canonical chunk stream for a blob list: each blob's bytes in
+    ``step``-sized pieces, the <8-byte alignment pad folded into the blob's
+    final piece. This is the ONE chunking rule shared by the full (`.tier`)
+    and delta (`.delta`) rank formats — their stream checksums therefore
+    recombine identically, and a chunk's digest names the same bytes in
+    either format."""
+    for b in blobs:
+        flat = np.ascontiguousarray(b).reshape(-1).view(np.uint8)
+        pad = (-flat.nbytes) % _ALIGN
+        for lo in range(0, flat.nbytes, step) or [0]:
+            chunk = flat[lo : lo + step]
+            if chunk.nbytes == 0:
+                continue
+            if pad and lo + step >= flat.nbytes:
+                # fold the <8 alignment pad bytes into the final chunk
+                # only — never a whole-blob copy just to append zeros
+                chunk = np.concatenate([chunk, np.zeros(pad, np.uint8)])
+            yield chunk
 
 
 @dataclass(frozen=True)
@@ -277,26 +306,16 @@ def write_rank_file(
     words = 0
     step = max(4, chunk_bytes) & ~3
     with open(path, "wb") as f:
-        for b in blobs:
-            flat = np.ascontiguousarray(b).reshape(-1).view(np.uint8)
-            pad = (-flat.nbytes) % _ALIGN
-            for lo in range(0, flat.nbytes, step) or [0]:
-                chunk = flat[lo : lo + step]
-                if chunk.nbytes == 0:
-                    continue
-                if pad and lo + step >= flat.nbytes:
-                    # fold the <8 alignment pad bytes into the final chunk
-                    # only — never a whole-blob copy just to append zeros
-                    chunk = np.concatenate([chunk, np.zeros(pad, np.uint8)])
-                s1, s2, words = _combine(sums, chunk, words)
-                sums = (s1, s2)
-                # memoryview: no tobytes() copy — a multi-MiB copy holds the
-                # GIL and would stall the training thread this flush is
-                # supposed to stay off of (io + zlib release it)
-                data = zlib.compress(chunk, 1) if compress else memoryview(chunk)
-                f.write(_CHUNK_HDR.pack(chunk.nbytes, len(data)))
-                f.write(data)
-                time.sleep(0)  # cooperative GIL yield between chunks
+        for chunk in _iter_stream_chunks(blobs, step):
+            s1, s2, words = _combine(sums, chunk, words)
+            sums = (s1, s2)
+            # memoryview: no tobytes() copy — a multi-MiB copy holds the
+            # GIL and would stall the training thread this flush is
+            # supposed to stay off of (io + zlib release it)
+            data = zlib.compress(chunk, 1) if compress else memoryview(chunk)
+            f.write(_CHUNK_HDR.pack(chunk.nbytes, len(data)))
+            f.write(data)
+            time.sleep(0)  # cooperative GIL yield between chunks
         header = pickle.dumps(
             {"payload": light, "table": table, "raw_total": raw_total,
              "checksum": sums, "compress": compress},
@@ -366,10 +385,188 @@ def read_rank_file(path: str) -> StorePayload:
 
 
 # ---------------------------------------------------------------------------
+# Content-addressed chunk store + delta rank files (DESIGN.md §17)
+# ---------------------------------------------------------------------------
+#
+# A dedup-enabled tier stores the chunk STREAM once, content-addressed: every
+# stream chunk becomes an object named by the BLAKE2b-128 digest of its raw
+# bytes under <tier>/chunks/<2-hex-prefix>/, and the per-rank file shrinks to
+# a header-only manifest (`rank%05d.delta`) referencing chunks by digest.
+# Identical chunks across generations — and across ranks — collapse to one
+# object, so a low-churn commit writes only the dirty chunks plus manifests.
+# Restore resolves the references across generations for free: the store is
+# flat, a gen-7 manifest happily names objects first published by gen-3.
+
+class ChunkStore:
+    """Digest-named chunk objects with atomic publication. Writers go through
+    tmp + fsync + ``os.replace`` so a reader never observes a torn object; a
+    racing writer of the same digest is harmless (same bytes, last replace
+    wins). Raw and zlib-packed representations carry distinct suffixes so the
+    same logical chunk stored both ways never collides under one name."""
+
+    def __init__(self, root: str) -> None:
+        self.root = root
+
+    def _obj_path(self, digest: str, compressed: bool) -> str:
+        suffix = ".z" if compressed else ".chunk"
+        return os.path.join(self.root, digest[:2], digest + suffix)
+
+    def put(self, digest: str, chunk: np.ndarray, *, compress: bool = False) -> int:
+        """Publish one chunk; returns object bytes written — 0 on a dedup hit
+        (the object's mtime is refreshed so the GC grace window re-arms)."""
+        path = self._obj_path(digest, compress)
+        if os.path.exists(path):
+            try:
+                os.utime(path)
+            except OSError:
+                pass
+            return 0
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        data = zlib.compress(chunk, 1) if compress else memoryview(chunk)
+        tmp = f"{path}.tmp-{os.getpid()}"
+        with open(tmp, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+        return len(data)
+
+    def get(self, digest: str, raw_len: int, *, compressed: bool = False) -> np.ndarray:
+        """Fetch + verify one chunk (length AND digest recomputed — bit-rot in
+        a shared store must surface as IntegrityError, never as silent
+        corruption in a restored checkpoint)."""
+        path = self._obj_path(digest, compressed)
+        try:
+            with open(path, "rb") as f:
+                data = f.read()
+        except OSError as e:
+            raise IntegrityError(f"chunk {digest} missing from {self.root}: {e}") from e
+        try:
+            raw = zlib.decompress(data) if compressed else data
+        except zlib.error as e:
+            raise IntegrityError(f"chunk {digest}: corrupt object body: {e}") from e
+        if len(raw) != raw_len:
+            raise IntegrityError(
+                f"chunk {digest}: length {len(raw)} != manifest {raw_len}"
+            )
+        if hashlib.blake2b(raw, digest_size=_DIGEST_BYTES).hexdigest() != digest:
+            raise IntegrityError(f"chunk {digest}: content does not match its name")
+        return np.frombuffer(raw, np.uint8)
+
+
+def write_rank_delta_file(
+    path: str, payload: StorePayload, store: ChunkStore, *,
+    chunk_bytes: int = 4 << 20, compress: bool = False,
+) -> tuple[int, tuple[int, int], int, int, int]:
+    """Delta-format mirror of ``write_rank_file``: the chunk stream lands in
+    the content-addressed store (objects written only when absent) and the
+    rank file itself is a header-only manifest. Returns (raw stream bytes,
+    stream checksum, chunk-store bytes written, total chunks, new chunks)."""
+    blobs: list[np.ndarray] = []
+    light = _strip_arrays(
+        {"own": payload.own, "own_exch": payload.own_exch,
+         "parity": payload.parity, "meta": payload.meta},
+        blobs,
+    )
+    table: list[tuple[int, int, str, tuple[int, ...]]] = []
+    off = 0
+    for b in blobs:
+        table.append((off, int(b.nbytes), np.dtype(b.dtype).name, tuple(b.shape)))
+        off += b.nbytes + (-b.nbytes) % _ALIGN
+    raw_total = off
+
+    sums = (0, 0)
+    words = 0
+    step = max(4, chunk_bytes) & ~3
+    refs: list[tuple[str, int]] = []
+    new_bytes = 0
+    n_new = 0
+    for chunk in _iter_stream_chunks(blobs, step):
+        s1, s2, words = _combine(sums, chunk, words)
+        sums = (s1, s2)
+        digest = hashlib.blake2b(chunk, digest_size=_DIGEST_BYTES).hexdigest()
+        wrote = store.put(digest, chunk, compress=compress)
+        new_bytes += wrote
+        n_new += 1 if wrote else 0
+        refs.append((digest, int(chunk.nbytes)))
+        time.sleep(0)  # cooperative GIL yield between chunks
+    header = pickle.dumps(
+        {"payload": light, "table": table, "raw_total": raw_total,
+         "checksum": sums, "compress": compress, "chunks": refs},
+        protocol=pickle.HIGHEST_PROTOCOL,
+    )
+    with open(path, "wb") as f:
+        f.write(header)
+        f.write(_TAIL.pack(len(header), _MAGIC_DELTA))
+        f.flush()
+        os.fsync(f.fileno())
+    return raw_total, sums, new_bytes, len(refs), n_new
+
+
+def read_delta_header(path: str) -> dict:
+    """The delta manifest alone — cheap enough for the GC's reference scan
+    (no chunk objects are touched)."""
+    with open(path, "rb") as f:
+        f.seek(0, os.SEEK_END)
+        size = f.tell()
+        if size < _TAIL.size:
+            raise IntegrityError(f"{path}: truncated (no tail)")
+        f.seek(size - _TAIL.size)
+        header_len, magic = _TAIL.unpack(f.read(_TAIL.size))
+        if magic != _MAGIC_DELTA:
+            raise IntegrityError(f"{path}: bad delta magic {magic!r}")
+        header_off = size - _TAIL.size - header_len
+        if header_off < 0:
+            raise IntegrityError(f"{path}: truncated header")
+        f.seek(header_off)
+        try:
+            return pickle.loads(f.read(header_len))
+        except Exception as e:  # noqa: BLE001 — torn pickle is a corruption verdict
+            raise IntegrityError(f"{path}: corrupt delta header: {e}") from e
+
+
+def read_rank_delta_file(path: str, store: ChunkStore) -> StorePayload:
+    """Inverse of ``write_rank_delta_file``: resolve every chunk reference
+    through the store into one arena, re-combining the stream checksum with
+    the same rule as the full format. Any missing/torn chunk or checksum
+    mismatch raises ``IntegrityError`` so the loader degrades to the previous
+    generation."""
+    header = read_delta_header(path)
+    arena = np.empty(header["raw_total"], np.uint8)
+    pos = 0
+    sums = (0, 0)
+    words = 0
+    for digest, raw_len in header["chunks"]:
+        if pos + raw_len > header["raw_total"]:
+            raise IntegrityError(f"{path}: chunk overruns raw stream at {pos}")
+        chunk = store.get(digest, raw_len, compressed=header["compress"])
+        s1, s2, words = _combine(sums, chunk, words)
+        sums = (s1, s2)
+        arena[pos : pos + raw_len] = chunk
+        pos += raw_len
+    if pos != header["raw_total"]:
+        raise IntegrityError(f"{path}: chunk stream short ({pos} < {header['raw_total']})")
+    if sums != tuple(header["checksum"]):
+        raise IntegrityError(f"{path}: stream checksum mismatch")
+    views = [
+        arena[off : off + nbytes].view(dtype_from_name(dt)).reshape(shape)
+        for off, nbytes, dt, shape in header["table"]
+    ]
+    d = _fill_arrays(header["payload"], views)
+    return StorePayload(own=d["own"], own_exch=d["own_exch"],
+                        parity=d["parity"], meta=d["meta"])
+
+
+# ---------------------------------------------------------------------------
 # DiskTier — persistent generations with the atomic commit pointer
 # ---------------------------------------------------------------------------
 
 _GEN_RE = re.compile(r"^gen-(\d{10})$")
+
+#: chunk objects unreferenced by every committed generation are only unlinked
+#: once this much older than their last put/utime — a concurrent flusher that
+#: published chunks for a generation it has not renamed yet must not lose them
+_GC_GRACE_S = 300.0
 
 
 def _pid_alive(pid: int) -> bool:
@@ -407,6 +604,18 @@ class DiskTier(StorageTier):
         self.compress = spec.compress
         self.chunk_bytes = spec.chunk_bytes
         self.keep = max(2, spec.keep)
+        self.dedup = bool(spec.dedup)
+        # dedup telemetry for the last flush, read by the engine's flush
+        # worker into the metrics registry (chunks written/reused, logical vs
+        # stored bytes)
+        self.last_dedup: dict[str, int] | None = None
+        # per-generation chunk-reference sets for the GC scan (generation
+        # directories are immutable after the commit rename, so the cache
+        # never goes stale; pruned gens are evicted)
+        self._ref_cache: dict[int, set[str]] = {}
+
+    def _chunk_store(self) -> ChunkStore:
+        return ChunkStore(os.path.join(self.path, "chunks"))
 
     # -- generation bookkeeping ----------------------------------------- #
     def generations(self) -> list[int]:
@@ -438,15 +647,40 @@ class DiskTier(StorageTier):
         shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp)
         total = 0
+        logical = 0
+        chunks_total = 0
+        chunks_new = 0
         ranks: dict[int, dict[str, Any]] = {}
+        store = self._chunk_store() if self.dedup else None
         for r, payload in sorted(snap.payloads.items()):
-            fname = os.path.join(tmp, f"rank{r:05d}.tier")
-            with _TR.span("tier_write", tier=self.name, gen=snap.created, rank=r):
-                nbytes, sums = write_rank_file(
-                    fname, payload, chunk_bytes=self.chunk_bytes, compress=self.compress
-                )
-            total += os.path.getsize(fname)
-            ranks[r] = {"raw_bytes": nbytes, "checksum": sums}
+            if store is not None:
+                # Delta generation: chunk objects go into the shared
+                # content-addressed store FIRST (orphans from a crash before
+                # the commit rename age out through the GC grace window), the
+                # rank file is a small digest manifest in the staging dir.
+                fname = os.path.join(tmp, f"rank{r:05d}.delta")
+                with _TR.span("tier_delta_write", tier=self.name,
+                              gen=snap.created, rank=r):
+                    nbytes, sums, wrote, n_chunks, n_new = write_rank_delta_file(
+                        fname, payload, store,
+                        chunk_bytes=self.chunk_bytes, compress=self.compress,
+                    )
+                total += os.path.getsize(fname) + wrote
+                logical += nbytes
+                chunks_total += n_chunks
+                chunks_new += n_new
+                ranks[r] = {"raw_bytes": nbytes, "checksum": sums,
+                            "format": "delta"}
+            else:
+                fname = os.path.join(tmp, f"rank{r:05d}.tier")
+                with _TR.span("tier_write", tier=self.name, gen=snap.created, rank=r):
+                    nbytes, sums = write_rank_file(
+                        fname, payload, chunk_bytes=self.chunk_bytes,
+                        compress=self.compress,
+                    )
+                total += os.path.getsize(fname)
+                logical += nbytes
+                ranks[r] = {"raw_bytes": nbytes, "checksum": sums}
         manifest = {
             "format": 1,
             "n_ranks": snap.n_ranks,
@@ -454,6 +688,7 @@ class DiskTier(StorageTier):
             "created": snap.created,
             "step": snap.step,
             "compress": self.compress,
+            "dedup": self.dedup,
             "wall_time": time.time(),
         }
         with open(os.path.join(tmp, "MANIFEST.pkl"), "wb") as f:
@@ -483,6 +718,13 @@ class DiskTier(StorageTier):
         _fsync_dir(self.path)
         self._write_latest(gen)
         _fsync_dir(self.path)
+        if self.dedup:
+            self.last_dedup = {
+                "chunks_written": chunks_new,
+                "chunks_reused": chunks_total - chunks_new,
+                "logical_bytes": logical,
+                "stored_bytes": total,
+            }
         self._prune()
         log.info(
             "%s tier flush: gen %d, %d ranks, %.1f MiB in %.3fs -> %s",
@@ -517,9 +759,106 @@ class DiskTier(StorageTier):
             os.fsync(f.fileno())
         os.replace(tmp, os.path.join(self.path, "LATEST"))
 
+    def _protected_gens(self, gens: list[int]) -> set[int]:
+        """Generations pruning must not touch: the newest ``keep``, whatever
+        the ``LATEST`` pointer currently names (a reader that just resolved
+        the pointer may be mid-load on it even if newer generations landed
+        since), and any generation carrying a live reader's pin file
+        (``.readpin-<pid>``, written by ``_read_generation`` while its rank
+        files stream in — the fix for blind keep-N deletion racing a
+        concurrent shared-dir reader). Pins from dead readers are swept."""
+        protected = set(gens[-self.keep:]) if self.keep else set()
+        try:
+            with open(os.path.join(self.path, "LATEST")) as f:
+                m = _GEN_RE.match(f.read().strip())
+            if m:
+                protected.add(int(m.group(1)))
+        except OSError:
+            pass
+        for gen in gens:
+            gdir = self._gen_dir(gen)
+            try:
+                entries = os.listdir(gdir)
+            except OSError:
+                continue
+            for entry in entries:
+                if not entry.startswith(".readpin-"):
+                    continue
+                try:
+                    pid = int(entry.rsplit("-", 1)[1])
+                except ValueError:
+                    pid = -1
+                if pid > 0 and _pid_alive(pid):
+                    protected.add(gen)
+                else:
+                    try:
+                        os.unlink(os.path.join(gdir, entry))
+                    except OSError:
+                        pass
+        return protected
+
     def _prune(self) -> None:
-        for gen in self.generations()[: -self.keep]:
+        gens = self.generations()
+        protected = self._protected_gens(gens)
+        for gen in gens:
+            if gen in protected:
+                continue
             shutil.rmtree(self._gen_dir(gen), ignore_errors=True)
+            self._ref_cache.pop(gen, None)
+        if os.path.isdir(os.path.join(self.path, "chunks")):
+            self._gc_chunks()
+
+    # -- content-addressed chunk GC (refcount by generation reference) ---- #
+    def _chunk_refs(self, gen: int) -> set[str]:
+        refs = self._ref_cache.get(gen)
+        if refs is not None:
+            return refs
+        refs = set()
+        try:
+            entries = os.listdir(self._gen_dir(gen))
+        except OSError:
+            entries = []
+        for entry in entries:
+            if not entry.endswith(".delta"):
+                continue
+            try:
+                header = read_delta_header(os.path.join(self._gen_dir(gen), entry))
+            except Exception:  # noqa: BLE001 — a torn manifest pins nothing
+                continue
+            refs.update(d for d, _ in header["chunks"])
+        self._ref_cache[gen] = refs
+        return refs
+
+    def _gc_chunks(self) -> None:
+        """Replace blind deletion with reference counting: a chunk object
+        survives while ANY committed generation references its digest.
+        Unreferenced objects are unlinked only once older than the
+        ``_GC_GRACE_S`` window, so a concurrent flusher that published chunks
+        for a not-yet-renamed generation — or a reader streaming an object it
+        resolved moments ago — is never undercut."""
+        root = os.path.join(self.path, "chunks")
+        live: set[str] = set()
+        for gen in self.generations():
+            live |= self._chunk_refs(gen)
+        cutoff = time.time() - _GC_GRACE_S
+        try:
+            prefixes = os.listdir(root)
+        except OSError:
+            return
+        for prefix in prefixes:
+            pdir = os.path.join(root, prefix)
+            if not os.path.isdir(pdir):
+                continue
+            for entry in os.listdir(pdir):
+                if entry.split(".", 1)[0] in live:
+                    continue
+                fpath = os.path.join(pdir, entry)
+                try:
+                    if os.path.getmtime(fpath) > cutoff:
+                        continue
+                    os.unlink(fpath)
+                except OSError:
+                    continue
 
     def _gc_tmp(self) -> None:
         """Remove abandoned staging directories. Only our own, or those of
@@ -539,13 +878,35 @@ class DiskTier(StorageTier):
     # -- load: newest valid generation, escalating to older ones --------- #
     def _read_generation(self, gen: int) -> tuple[dict[int, StorePayload], dict]:
         gdir = self._gen_dir(gen)
-        with open(os.path.join(gdir, "MANIFEST.pkl"), "rb") as f:
-            manifest = pickle.load(f)
-        payloads: dict[int, StorePayload] = {}
-        for r, info in manifest["ranks"].items():
-            payload = read_rank_file(os.path.join(gdir, f"rank{r:05d}.tier"))
-            payloads[int(r)] = payload
-        return payloads, manifest
+        # Pin the generation while its rank files stream in: a concurrent
+        # flusher's _prune consults these markers, so the directory cannot be
+        # unlinked out from under a mid-load reader (best-effort — a read-only
+        # mount simply skips the pin and keeps the old race odds).
+        pin = os.path.join(gdir, f".readpin-{os.getpid()}")
+        try:
+            with open(pin, "w"):
+                pass
+        except OSError:
+            pin = None
+        try:
+            with open(os.path.join(gdir, "MANIFEST.pkl"), "rb") as f:
+                manifest = pickle.load(f)
+            payloads: dict[int, StorePayload] = {}
+            store = self._chunk_store()
+            for r, info in manifest["ranks"].items():
+                delta = os.path.join(gdir, f"rank{int(r):05d}.delta")
+                if info.get("format") == "delta" or os.path.exists(delta):
+                    payload = read_rank_delta_file(delta, store)
+                else:
+                    payload = read_rank_file(os.path.join(gdir, f"rank{int(r):05d}.tier"))
+                payloads[int(r)] = payload
+            return payloads, manifest
+        finally:
+            if pin is not None:
+                try:
+                    os.unlink(pin)
+                except OSError:
+                    pass
 
     def _coverable(self, engine: Any, manifest: dict) -> bool:
         """True when the generation's missing ranks (dead at flush time) are

@@ -49,6 +49,19 @@ def main() -> None:
     ap.add_argument("--rs-parity", type=int, default=2,
                     help="m parity blobs per group for --codec rs")
     ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--delta", action="store_true",
+                    help="differential checkpointing (DESIGN.md §17): diff each "
+                         "snapshot against the committed generation on a chunk "
+                         "grid, skip clean-chunk copies on the transfer path, "
+                         "and patch striped parity incrementally instead of "
+                         "re-encoding in full")
+    ap.add_argument("--delta-chunk-bytes", type=int, default=1 << 20,
+                    help="dirty-map chunk granularity for --delta")
+    ap.add_argument("--tier-dedup", action="store_true",
+                    help="content-addressed delta flushes on --tier-dir: "
+                         "generations reference unchanged chunks in the tier's "
+                         "chunk store instead of re-writing full rank files "
+                         "(refcounted GC replaces blind keep-2 pruning)")
     ap.add_argument("--checkpoint-mode", choices=["sync", "async"], default="sync",
                     help="async overlaps the encode/transfer/verify pipeline "
                          "with the next train steps (DESIGN.md §9)")
@@ -118,12 +131,15 @@ def main() -> None:
         tier_dir=args.tier_dir,
         disk_flush_every=args.disk_flush_every,
         tier_mtbf_s=args.tier_mtbf,
+        tier_dedup=args.tier_dedup,
         engine=EngineConfig(
             scheme=args.scheme,
             parity_group=args.parity_group,
             codec=args.codec,
             rs_parity=args.rs_parity,
             compress=args.compress,
+            delta=args.delta,
+            delta_chunk_bytes=args.delta_chunk_bytes,
             async_workers=args.async_workers,
             restore_mode=args.restore_mode,
         ),

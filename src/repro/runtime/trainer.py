@@ -75,6 +75,10 @@ class TrainerConfig:
     tier_dir: str | None = None
     disk_flush_every: int = 0
     tier_mtbf_s: float = 30 * 24 * 3600.0
+    # Content-addressed delta flushes on the trainer-managed disk rung
+    # (DESIGN.md §17): generations share unchanged chunks through the tier's
+    # chunk store instead of re-writing full rank files.
+    tier_dedup: bool = False
     # Deprecated aliases for (tier_dir, disk_flush_every) — pre-ladder
     # configs keep their exact cadence.
     disk_path: str | None = None
@@ -177,7 +181,10 @@ class Trainer:
         if every <= 0:
             self._auto_flush_every = True
             every = 4                        # placeholder until first retune
-        return replace(tcfg.engine, tiers=(storage_mod.disk(tier_dir, every=every),))
+        return replace(
+            tcfg.engine,
+            tiers=(storage_mod.disk(tier_dir, every=every, dedup=tcfg.tier_dedup),),
+        )
 
     def _retune_tier_schedule(self) -> None:
         """Post-commit tier upkeep, called from the step loop right after a

@@ -1,0 +1,404 @@
+"""Differential checkpointing (DESIGN.md §17): the chunk-grid dirty map,
+create-side transfer skip, incremental parity patching vs full re-encode
+bit-identity, delta flushes through the content-addressed chunk store, and
+the degrade path when a delta generation is torn."""
+
+import os
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import storage
+from repro.core.checkpoint import (
+    CheckpointEngine,
+    EngineConfig,
+    _chunk_checksums,
+    _combine_checksums,
+    _copy_dirty,
+    _merge_chunk_ranges,
+)
+from repro.core.integrity import np_checksum
+
+CODEC_CFGS = {
+    "copy": dict(codec="copy"),
+    "xor": dict(codec="xor", parity_group=4),
+    "rs": dict(codec="rs", parity_group=4, rs_parity=2),
+    "lrc": dict(codec="lrc", parity_group=4, rs_parity=2, lrc_locals=2),
+}
+#: kills within each codec's tolerance (n=8)
+CODEC_KILLS = {"copy": (1,), "xor": (1,), "rs": (1, 2), "lrc": (1, 2)}
+
+
+class _Payload:
+    def __init__(self, n, per_rank_bytes=1 << 16, seed=0):
+        self.n = n
+        self.data = [
+            np.random.default_rng(seed + r).standard_normal(per_rank_bytes // 4).astype(np.float32)
+            for r in range(n)
+        ]
+
+    def snapshot_shards(self, n):
+        return [{"blocks": self.data[r]} for r in range(n)]
+
+    def restore_shards(self, shards):
+        for origin, payload in shards.items():
+            self.data[origin] = np.asarray(payload["blocks"])
+
+
+def _mk_engine(n=8, *, tier=None, dedup=False, every=1, **cfg):
+    base = dict(delta=True, delta_chunk_bytes=4096)
+    base.update(cfg)
+    tiers = ()
+    if tier is not None:
+        tiers = (storage.disk(str(tier), every=every, dedup=dedup,
+                              chunk_bytes=1 << 12),)
+    eng = CheckpointEngine(n, EngineConfig(tiers=tiers, **base))
+    pay = _Payload(n)
+    eng.register("domain", pay)
+    return eng, pay
+
+
+def _churn(pay, rng, frac=0.05):
+    """Mutate a contiguous ~frac run of each rank's elements in place —
+    contiguity keeps the dirty CHUNK fraction near frac (a scattered write
+    of the same volume would touch every chunk)."""
+    for d in pay.data:
+        n = max(1, int(d.size * frac))
+        start = int(rng.integers(0, max(1, d.size - n + 1)))
+        d[start : start + n] += rng.standard_normal(n).astype(np.float32)
+
+
+def _kill(eng, ranks, revive=True):
+    for r in ranks:
+        eng.stores[r].wipe()
+        if revive:
+            eng.stores[r].revive(r)
+
+
+def _parity_state(eng):
+    out = {}
+    for r, store in eng.stores.items():
+        ro = store.buffer.read_only
+        if ro is None:
+            continue
+        for g, stripes in ro.parity.items():
+            for key, blob in stripes.items():
+                out[(r, g, key)] = np.asarray(blob).copy()
+    return out
+
+
+# ------------------------------------------------------------------ #
+# dirty-map primitives
+# ------------------------------------------------------------------ #
+
+def test_chunk_checksum_recombination_matches_whole_buffer():
+    rng = np.random.default_rng(0)
+    for nbytes in (0, 4, 4096, 4100, 65536, 65540):
+        flat = rng.integers(0, 255, nbytes, dtype=np.uint8)
+        for step in (4096, 8192):
+            parts = _chunk_checksums(flat, step)
+            assert _combine_checksums(parts, step) == np_checksum(flat)
+
+
+def test_dirty_map_no_false_sharing_at_chunk_boundaries():
+    """One dirty byte AT a chunk boundary marks exactly that chunk — the
+    neighbors on both sides stay clean."""
+    step = 4096
+    a = np.zeros(3 * step + 100, np.uint8)
+    for pos, want in ((step, [1]), (step - 1, [0]), (2 * step, [2]),
+                      (3 * step, [3]), (0, [0])):
+        b = a.copy()
+        b[pos] ^= 0xFF
+        pa = _chunk_checksums(a, step)
+        pb = _chunk_checksums(b, step)
+        assert [i for i, (x, y) in enumerate(zip(pa, pb)) if x != y] == want
+
+
+def test_merge_chunk_ranges_clips_and_coalesces():
+    step = 4096
+    assert _merge_chunk_ranges([0, 1], step, 3 * step) == [(0, 2 * step)]
+    assert _merge_chunk_ranges([0, 2], step, 3 * step) == [
+        (0, step), (2 * step, 3 * step)]
+    # final chunk clipped to the payload length
+    assert _merge_chunk_ranges([2], step, 2 * step + 100) == [
+        (2 * step, 2 * step + 100)]
+    assert _merge_chunk_ranges([], step, 3 * step) == []
+
+
+def test_copy_dirty_copies_only_differing_chunks():
+    step = 4096
+    rng = np.random.default_rng(1)
+    src = rng.integers(0, 255, 4 * step + 77, dtype=np.uint8)
+    dst = src.copy()
+    src[step + 3] ^= 0x55                     # chunk 1 dirty
+    src[4 * step + 10] ^= 0x55                # tail chunk dirty
+    skipped = _copy_dirty(dst, src, step)
+    assert np.array_equal(dst, src)
+    assert skipped == 3 * step                # chunks 0, 2, 3 skipped
+
+
+# ------------------------------------------------------------------ #
+# create-side delta path
+# ------------------------------------------------------------------ #
+
+@pytest.mark.parametrize("name", list(CODEC_CFGS))
+def test_restore_bit_identical_after_delta_commits(name):
+    """≥3 consecutive delta commits with sparse churn, then an in-tolerance
+    failure: the restore is bit-identical to the last committed state."""
+    eng, pay = _mk_engine(**CODEC_CFGS[name])
+    rng = np.random.default_rng(7)
+    last = None
+    for step in range(1, 5):
+        _churn(pay, rng)
+        assert eng.checkpoint({"step": step})
+        last = [d.copy() for d in pay.data]
+    if eng.codec.striped:
+        assert eng.stats.delta_encodes > 0
+        assert 0.0 < eng.stats.last_dirty_fraction < 0.5
+    _kill(eng, CODEC_KILLS[name])
+    _churn(pay, rng, frac=1.0)
+    meta = eng.restore()
+    assert meta["step"] == 4
+    assert all(np.array_equal(pay.data[r], last[r]) for r in range(eng.n_ranks))
+    eng.close()
+
+
+def test_transfer_skip_counts_clean_chunks():
+    eng, pay = _mk_engine(codec="rs", parity_group=4, rs_parity=2)
+    rng = np.random.default_rng(3)
+    for step in range(1, 4):
+        _churn(pay, rng, frac=0.02)
+        assert eng.checkpoint({"step": step})
+    # the holder arena already carries the same-bank generation g-2, so at
+    # low churn most chunks arrive unchanged and are never re-copied
+    assert eng.stats.last_transfer_bytes_skipped > 0
+    eng.close()
+
+
+def test_full_encode_past_dirty_crossover():
+    """Churning every byte pushes the dirty fraction past the crossover:
+    the engine re-encodes in full rather than patching a mostly-new stripe."""
+    eng, pay = _mk_engine(codec="xor", parity_group=4, delta_crossover=0.6)
+    rng = np.random.default_rng(5)
+    assert eng.checkpoint({"step": 1})
+    full_before = eng.stats.full_encodes
+    _churn(pay, rng, frac=1.0)
+    assert eng.checkpoint({"step": 2})
+    assert eng.stats.full_encodes > full_before
+    assert eng.stats.last_dirty_fraction > 0.6
+    eng.close()
+
+
+def test_delta_off_by_default_and_no_chunk_sums():
+    assert EngineConfig().delta is False
+    eng = CheckpointEngine(4, EngineConfig(codec="xor", parity_group=2))
+    pay = _Payload(4)
+    eng.register("domain", pay)
+    assert eng.checkpoint({"step": 1})
+    ro = eng.stores[0].buffer.read_only
+    assert "exch_chunk_sums" not in ro.meta
+    assert eng.stats.delta_encodes == 0
+    eng.close()
+
+
+def test_delta_steady_state_reuses_arenas():
+    """The dirty map and incremental encode never disturb arena reuse: after
+    warm-up, further commits allocate no new arena buffers."""
+    eng, pay = _mk_engine(codec="rs", parity_group=4, rs_parity=2)
+    rng = np.random.default_rng(11)
+    for step in range(1, 5):                  # both banks warmed
+        _churn(pay, rng)
+        assert eng.checkpoint({"step": step})
+    before = {r: {k: id(v) for k, v in s._arenas.items()}
+              for r, s in eng.stores.items()}
+    for step in range(5, 9):
+        _churn(pay, rng)
+        assert eng.checkpoint({"step": step})
+    after = {r: {k: id(v) for k, v in s._arenas.items()}
+             for r, s in eng.stores.items()}
+    assert before == after
+    eng.close()
+
+
+def _check_parity_matches_full(name, seed, frac):
+    """After a sparse-churn sequence, the incrementally patched parity
+    stripes must equal a from-scratch full encode of the same data."""
+    cfg = CODEC_CFGS[name]
+    eng_d, pay_d = _mk_engine(**cfg)
+    eng_f, pay_f = _mk_engine(delta=False, **cfg)
+    rng_d = np.random.default_rng(seed)
+    rng_f = np.random.default_rng(seed)
+    try:
+        for step in range(1, 4):
+            _churn(pay_d, rng_d, frac=frac)
+            _churn(pay_f, rng_f, frac=frac)
+            assert eng_d.checkpoint({"step": step})
+            assert eng_f.checkpoint({"step": step})
+        pd, pf = _parity_state(eng_d), _parity_state(eng_f)
+        assert pd.keys() == pf.keys()
+        for key in pd:
+            assert np.array_equal(pd[key], pf[key]), key
+    finally:
+        eng_d.close()
+        eng_f.close()
+
+
+@pytest.mark.parametrize("name", ["xor", "rs", "lrc"])
+@pytest.mark.parametrize("seed,frac", [(0, 0.02), (1, 0.1), (2, 0.3)])
+def test_incremental_parity_bit_identical_to_full_encode(name, seed, frac):
+    _check_parity_matches_full(name, seed, frac)
+
+
+@pytest.mark.parametrize("name", ["xor", "rs", "lrc"])
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1), frac=st.floats(0.0, 0.3))
+def test_incremental_parity_property_sweep(name, seed, frac):
+    _check_parity_matches_full(name, seed, frac)
+
+
+# ------------------------------------------------------------------ #
+# delta flushes through the chunk store
+# ------------------------------------------------------------------ #
+
+def test_dedup_flush_reuses_chunks_across_generations(tmp_path):
+    eng, pay = _mk_engine(tier=tmp_path / "tier", dedup=True,
+                          codec="rs", parity_group=4, rs_parity=2)
+    rng = np.random.default_rng(13)
+    assert eng.checkpoint({"step": 1})
+    eng._join_flush()
+    _churn(pay, rng, frac=0.05)
+    assert eng.checkpoint({"step": 2})
+    eng._join_flush()
+    tier = eng.persistent_tiers[0]
+    assert tier.last_dedup is not None
+    assert tier.last_dedup["chunks_reused"] > 0
+    assert eng.stats.last_flush_chunks_reused > 0
+    assert 0.0 < eng.stats.last_dedup_ratio < 1.0
+    # cold restore resolves chunk references bit-identically
+    last = [d.copy() for d in pay.data]
+    _kill(eng, range(eng.n_ranks), revive=False)
+    _churn(pay, rng, frac=1.0)
+    meta = eng.restore()
+    assert meta["step"] == 2
+    assert all(np.array_equal(pay.data[r], last[r]) for r in range(eng.n_ranks))
+    eng.close()
+
+
+def test_torn_delta_generation_degrades_to_previous(tmp_path):
+    """A delta generation whose chunk object is missing (torn mid-flush kill:
+    manifest renamed but a referenced object lost) fails closed — the loader
+    degrades to the previous complete generation, per the §12 contract."""
+    eng, pay = _mk_engine(tier=tmp_path / "tier", dedup=True,
+                          codec="rs", parity_group=4, rs_parity=2)
+    rng = np.random.default_rng(17)
+    assert eng.checkpoint({"step": 1})
+    eng._join_flush()
+    gen1_state = [d.copy() for d in pay.data]
+    _churn(pay, rng, frac=0.05)
+    assert eng.checkpoint({"step": 2})
+    eng._join_flush()
+    tier = eng.persistent_tiers[0]
+    only_gen2 = tier._chunk_refs(2) - tier._chunk_refs(1)
+    assert only_gen2                           # churn produced fresh chunks
+    victim = sorted(only_gen2)[0]
+    os.unlink(os.path.join(tier.path, "chunks", victim[:2], victim + ".chunk"))
+    _kill(eng, range(eng.n_ranks), revive=False)
+    _churn(pay, rng, frac=1.0)
+    meta = eng.restore()
+    assert meta["step"] == 1
+    assert all(np.array_equal(pay.data[r], gen1_state[r]) for r in range(eng.n_ranks))
+    eng.close()
+
+
+def test_flush_killed_mid_delta_write_keeps_previous_generation(tmp_path, monkeypatch):
+    """A flush that dies while streaming delta rank files leaves only the
+    invisible staging dir (plus orphan chunks the GC grace window covers);
+    the committed generation stays loadable and the next flush commits."""
+    eng, pay = _mk_engine(tier=tmp_path / "tier", dedup=True,
+                          codec="rs", parity_group=4, rs_parity=2)
+    assert eng.checkpoint({"step": 1})
+    eng._join_flush()
+    tier = eng.persistent_tiers[0]
+    assert tier.generations() == [1]
+
+    real_write = storage.write_rank_delta_file
+    calls = {"n": 0}
+
+    def dying_write(path, payload, store, **kw):
+        calls["n"] += 1
+        if calls["n"] > 3:
+            raise OSError("rank died mid-flush")
+        return real_write(path, payload, store, **kw)
+
+    monkeypatch.setattr(storage, "write_rank_delta_file", dying_write)
+    snap = storage.capture_snapshot(eng)
+    with pytest.raises(OSError):
+        tier.flush(snap)
+    monkeypatch.setattr(storage, "write_rank_delta_file", real_write)
+    assert tier.generations() == [1]          # wreckage invisible
+
+    _churn(pay, np.random.default_rng(19), frac=0.05)
+    assert eng.checkpoint({"step": 2})
+    eng._join_flush()
+    assert tier.generations() == [1, 2]
+    last = [d.copy() for d in pay.data]
+    _kill(eng, range(eng.n_ranks), revive=False)
+    meta = eng.restore()
+    assert meta["step"] == 2
+    assert all(np.array_equal(pay.data[r], last[r]) for r in range(eng.n_ranks))
+    eng.close()
+
+
+def test_cold_restart_n_to_m_via_chunk_store(tmp_path):
+    """8-rank job writes two dedup generations; a fresh 6-rank engine cold-
+    restarts through the chunk store and repartitions bit-identically."""
+    eng, pay = _mk_engine(n=8, tier=tmp_path / "tier", dedup=True,
+                          codec="rs", parity_group=4, rs_parity=2)
+    rng = np.random.default_rng(23)
+    assert eng.checkpoint({"step": 1})
+    eng._join_flush()
+    _churn(pay, rng, frac=0.05)
+    assert eng.checkpoint({"step": 2})
+    eng._join_flush()
+    orig = [d.copy() for d in pay.data]
+    eng.close()
+
+    eng2 = CheckpointEngine(
+        6, EngineConfig(codec="rs", parity_group=4, rs_parity=2,
+                        tiers=(storage.disk(str(tmp_path / "tier"), every=1,
+                                            dedup=True),)),
+    )
+    pay2 = _Payload(8, seed=99)
+    eng2.register("domain", pay2)
+    meta = eng2.restore_elastic(6)
+    assert meta["step"] == 2
+    assert eng2.stats.tier_escalations == 1
+    assert all(np.array_equal(pay2.data[r], orig[r]) for r in range(8))
+    eng2.close()
+
+
+def test_escalation_after_delta_commits_clears_incremental_state(tmp_path):
+    """After a beyond-tolerance escalation restores from disk, the next
+    commits re-seed the dirty baseline instead of patching against scratch
+    parity that no longer matches — restores stay bit-identical."""
+    eng, pay = _mk_engine(tier=tmp_path / "tier", dedup=True,
+                          codec="rs", parity_group=4, rs_parity=2)
+    rng = np.random.default_rng(29)
+    for step in range(1, 3):
+        _churn(pay, rng)
+        assert eng.checkpoint({"step": step})
+        eng._join_flush()
+    _kill(eng, (0, 1, 2))                      # m+1 in group 0 -> escalate
+    eng.restore()
+    assert eng.stats.tier_escalations == 1
+    for step in range(3, 6):
+        _churn(pay, rng)
+        assert eng.checkpoint({"step": step})
+    last = [d.copy() for d in pay.data]
+    _kill(eng, (1, 2))
+    _churn(pay, rng, frac=1.0)
+    meta = eng.restore()
+    assert meta["step"] == 5
+    assert all(np.array_equal(pay.data[r], last[r]) for r in range(eng.n_ranks))
+    eng.close()

@@ -32,14 +32,15 @@ class _Payload:
             self.data[origin] = np.asarray(payload["blocks"])
 
 
-def _mk_engine(tmp_path, n=8, *, every=1, compress_tier=False, **cfg):
+def _mk_engine(tmp_path, n=8, *, every=1, compress_tier=False, dedup=False, **cfg):
     base = dict(codec="rs", parity_group=4, rs_parity=2)
     base.update(cfg)
     eng = CheckpointEngine(
         n,
         EngineConfig(
             tiers=(storage.disk(str(tmp_path / "tier"), every=every,
-                                compress=compress_tier),),
+                                compress=compress_tier, dedup=dedup,
+                                chunk_bytes=1 << 12 if dedup else 4 << 20),),
             **base,
         ),
     )
@@ -216,6 +217,115 @@ def test_generation_pruning_keeps_newest(tmp_path):
         eng._join_flush()
     tier = eng.persistent_tiers[0]
     assert tier.generations() == [3, 4]       # keep=2 (default)
+    eng.close()
+
+
+def test_prune_spares_generation_pinned_by_concurrent_reader(tmp_path, monkeypatch):
+    """Regression for blind keep-N deletion racing a concurrent reader: a
+    generation being streamed by a live reader (``.readpin-<pid>``) survives
+    pruning until the read finishes, then the next flush reclaims it."""
+    import threading
+
+    eng, _ = _mk_engine(tmp_path)
+    for step in (1, 2):
+        assert eng.checkpoint({"step": step})
+        eng._join_flush()
+    tier = eng.persistent_tiers[0]
+
+    started, release = threading.Event(), threading.Event()
+    real_read = storage.read_rank_file
+
+    def slow_read(path):
+        started.set()
+        assert release.wait(timeout=30)
+        return real_read(path)
+
+    monkeypatch.setattr(storage, "read_rank_file", slow_read)
+    result: list = []
+    reader = threading.Thread(
+        target=lambda: result.append(tier._read_generation(1)), daemon=True
+    )
+    reader.start()
+    assert started.wait(timeout=30)           # pin written, reader mid-load
+    monkeypatch.setattr(storage, "read_rank_file", real_read)
+
+    for step in (3, 4):                       # keep=2 would normally drop 1+2
+        assert eng.checkpoint({"step": step})
+        eng._join_flush()
+    assert 1 in tier.generations()            # pinned by the live reader
+    assert 2 not in tier.generations()        # unpinned -> pruned as usual
+
+    release.set()
+    reader.join(timeout=30)
+    payloads, manifest = result[0]
+    assert manifest["step"] == 1              # the read completed intact
+    assert len(payloads) == eng.n_ranks
+
+    assert eng.checkpoint({"step": 5})        # pin gone -> reclaimed
+    eng._join_flush()
+    assert 1 not in tier.generations()
+    eng.close()
+
+
+def test_dead_reader_pin_is_swept(tmp_path):
+    eng, _ = _mk_engine(tmp_path)
+    for step in (1, 2, 3):
+        assert eng.checkpoint({"step": step})
+        eng._join_flush()
+    tier = eng.persistent_tiers[0]
+    gdir = tier._gen_dir(2)
+    with open(os.path.join(gdir, ".readpin-999999999"), "w"):
+        pass                                  # no such pid
+    assert eng.checkpoint({"step": 4})
+    eng._join_flush()
+    assert tier.generations() == [3, 4]       # stale pin did not protect gen 2
+    eng.close()
+
+
+def test_chunk_gc_keeps_referenced_and_reclaims_orphans(tmp_path, monkeypatch):
+    """Refcount GC: after pruning drops a generation, its exclusive chunks
+    are unlinked once past the grace window, while every chunk any committed
+    generation still references survives — and restores stay bit-identical."""
+    eng, pay = _mk_engine(tmp_path, dedup=True)
+    rng = np.random.default_rng(31)
+    for step in (1, 2, 3):
+        assert eng.checkpoint({"step": step})
+        eng._join_flush()
+        for d in pay.data:                    # sparse churn between commits
+            d[: d.size // 16] += rng.standard_normal(d.size // 16).astype(np.float32)
+    tier = eng.persistent_tiers[0]
+    assert tier.generations() == [2, 3]
+    croot = os.path.join(tier.path, "chunks")
+
+    def _objects():
+        return {
+            e.split(".", 1)[0]
+            for p in os.listdir(croot)
+            for e in os.listdir(os.path.join(croot, p))
+            if os.path.isdir(os.path.join(croot, p))
+        }
+
+    live = tier._chunk_refs(2) | tier._chunk_refs(3)
+    assert _objects() - live                  # gen-1 orphans still inside grace
+    for p in os.listdir(croot):               # age every object past the window
+        pdir = os.path.join(croot, p)
+        for e in os.listdir(pdir):
+            os.utime(os.path.join(pdir, e), (1, 1))
+    assert eng.checkpoint({"step": 4})        # flush -> prune -> GC
+    eng._join_flush()
+    remaining = _objects()
+    live = set()
+    for gen in tier.generations():
+        live |= tier._chunk_refs(gen)
+    assert remaining == live                  # orphans gone, references intact
+
+    last = [d.copy() for d in pay.data]
+    _kill(eng, range(eng.n_ranks))
+    for d in pay.data:
+        d += 1.0
+    meta = eng.restore()
+    assert meta["step"] == 4
+    assert all(np.array_equal(pay.data[r], last[r]) for r in range(eng.n_ranks))
     eng.close()
 
 
